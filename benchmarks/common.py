@@ -1,0 +1,88 @@
+"""Shared benchmark plumbing.
+
+Every benchmark module exposes ``run(quick=False) -> list[dict]`` with
+rows ``{"name", "us_per_call", "derived"}``; ``benchmarks.run`` prints
+them as the ``name,us_per_call,derived`` CSV the harness expects.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import get_config, reduced
+from repro.data import MarkovTokenStream, QuadraticProblem
+
+
+def row(name: str, us_per_call: float, derived: str) -> dict:
+    return {"name": name, "us_per_call": us_per_call, "derived": derived}
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (blocks on device)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+# ---------------------------------------------------------------- setups
+
+class QuadStream:
+    """Adapter: QuadraticProblem -> the trainer-stream protocol."""
+
+    def __init__(self, prob: QuadraticProblem, shard: int, seed: int = 0):
+        self.prob = prob
+        self.rng = np.random.default_rng(np.random.SeedSequence([seed, shard]))
+
+    def next_batch(self, b):
+        A, y = self.prob.sample(b, self.rng)
+        return {"A": A, "y": y}
+
+
+def quad_loss(params, batch):
+    r = batch["A"] @ params["x"] - batch["y"]
+    return 0.5 * jnp.mean(jnp.square(r)), {}
+
+
+def quad_setup(k: int = 3, M: int = 2, dim: int = 16, noise: float = 2.0,
+               seed: int = 0):
+    prob = QuadraticProblem(dim=dim, noise=noise, seed=seed)
+    keys = jax.random.split(jax.random.PRNGKey(seed), k)
+    inits = [{"x": jax.random.normal(kk, (dim,))} for kk in keys]
+    streams = [QuadStream(prob, i, seed=seed) for i in range(k * M)]
+    eval_fn = lambda p: 0.5 * float(  # noqa: E731  — deterministic E[f]
+        jnp.sum(jnp.square(p["x"] - prob.x_star))) + 0.5 * prob.noise ** 2
+    return prob, inits, streams, eval_fn
+
+
+def lm_setup(k: int = 2, M: int = 2, seq_len: int = 32, seed: int = 0):
+    """Reduced microllama (the paper's model family) + Markov stream."""
+    cfg = reduced(get_config("microllama-300m"))
+    keys = jax.random.split(jax.random.PRNGKey(seed), k)
+    inits = [models.init_params(cfg, kk) for kk in keys]
+    streams = [MarkovTokenStream(cfg.vocab_size, seq_len, shard=i, seed=seed)
+               for i in range(k * M)]
+    loss_fn = lambda p, b: models.loss_fn(p, b, cfg)  # noqa: E731
+    held = MarkovTokenStream(cfg.vocab_size, seq_len, shard=999,
+                             seed=seed).next_batch(16)
+    eval_jit = jax.jit(lambda p: loss_fn(p, held)[0])
+    eval_fn = lambda p: float(eval_jit(p))  # noqa: E731
+    return cfg, inits, streams, loss_fn, eval_fn
+
+
+def to_target(hist, target: float):
+    """(samples, comm_events, outer_step) when eval first <= target."""
+    for loss, s, ev, t in zip(hist.eval_loss, hist.samples,
+                              hist.comm_events, hist.outer_step):
+        if loss <= target:
+            return s, ev, t
+    return None, None, None

@@ -1,0 +1,73 @@
+"""Kernel microbenchmarks: Pallas kernel (interpret mode on CPU) vs the
+pure-jnp oracle, per representative shape.
+
+On this CPU container the interesting number is the oracle wall time and
+the max abs error between paths (the kernel's TPU perf story is the
+roofline/dry-run section); both are recorded per shape/dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.gradstats.ops import gradstats_reduce
+from repro.kernels.gradstats.ref import gradstats_reduce_ref
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+from benchmarks.common import row, time_fn
+
+
+def _err(a, b):
+    fa = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), a)
+    fb = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), b)
+    la, lb = jax.tree.leaves(fa), jax.tree.leaves(fb)
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(la, lb))
+
+
+def run(quick: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention (B,H,S,D) — GQA shape from qwen family
+    B, H, S, D = 1, 4, 256, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    kk = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, D), jnp.float32)
+    ref = jax.jit(lambda a, b, c: flash_attention_ref(a, b, c, causal=True))
+    us = time_fn(ref, q, kk, v, iters=5 if quick else 10)
+    err = _err(flash_attention(q, kk, v, causal=True), ref(q, kk, v))
+    rows.append(row("kernel/flash_attention_256x64", us,
+                    f"max_err_vs_ref={err:.2e}"))
+
+    # mamba scan (B,S,Di) with state 16
+    Bm, Sm, Di, N = 1, 256, 128, 16
+    ks = jax.random.split(key, 5)
+    u = jax.random.normal(ks[0], (Bm, Sm, Di), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bm, Sm, Di)) - 1)
+    A_log = jax.random.normal(ks[2], (Di, N)) * 0.1
+    Bmat = jax.random.normal(ks[3], (Bm, Sm, N))
+    Cmat = jax.random.normal(ks[4], (Bm, Sm, N))
+    refm = jax.jit(mamba_scan_ref)
+    us = time_fn(refm, u, dt, A_log, Bmat, Cmat, iters=5 if quick else 10)
+    err = _err(mamba_scan(u, dt, A_log, Bmat, Cmat),
+               refm(u, dt, A_log, Bmat, Cmat))
+    rows.append(row("kernel/mamba_scan_256x128x16", us,
+                    f"max_err_vs_ref={err:.2e}"))
+
+    # gradstats reduction (B, D)
+    G = jax.random.normal(key, (32, 4096), jnp.float32)
+    refg = jax.jit(gradstats_reduce_ref)
+    us = time_fn(refg, G, iters=5 if quick else 10)
+    a = gradstats_reduce(G)
+    b = refg(G)
+    err = max(float(jnp.max(jnp.abs(jnp.asarray(x, jnp.float32)
+                                    - jnp.asarray(y, jnp.float32))))
+              for x, y in zip(a, b))
+    rows.append(row("kernel/gradstats_32x4096", us,
+                    f"max_err_vs_ref={err:.2e}"))
+    return rows

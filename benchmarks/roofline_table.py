@@ -1,0 +1,26 @@
+"""Roofline baseline table (deliverable g): one row per (arch x shape x
+mesh) from the dry-run artifacts.  ``us_per_call`` = the roofline-bound
+step time; ``derived`` = the three terms + dominant bottleneck.
+"""
+from __future__ import annotations
+
+from repro.launch.roofline import baseline_rows, load_rows
+
+from benchmarks.common import row
+
+
+def run(quick: bool = False):
+    rows = []
+    data = baseline_rows(load_rows())
+    if not data:
+        return [row("roofline/missing", 0.0,
+                    "no dry-run artifacts; run repro.launch.dryrun --all")]
+    for r in sorted(data, key=lambda r: (r.mesh, r.arch, r.shape)):
+        rows.append(row(
+            f"roofline/{r.arch}__{r.shape}__{r.mesh}",
+            r.bound_s * 1e6,
+            f"compute_s={r.compute_s:.3g};memory_s={r.memory_s:.3g};"
+            f"collective_s={r.collective_s:.3g};dominant={r.dominant};"
+            f"useful_ratio={r.useful_ratio:.2f};"
+            f"roofline_frac={r.roofline_fraction:.3f}"))
+    return rows

@@ -1,0 +1,47 @@
+"""Continuous batching: requests of different lengths join and leave the
+decode batch mid-flight — no slot idles waiting for a straggler.
+
+  PYTHONPATH=src python examples/continuous_batching.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import models
+from repro.configs import get_config, reduced
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+
+def main():
+    cfg = reduced(get_config("qwen3-0.6b"))
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # 8 requests, wildly different prompt/generation lengths, 3 slots
+    reqs = [Request(rid=i,
+                    tokens=[int(t) for t in
+                            rng.integers(0, cfg.vocab_size,
+                                         (int(rng.integers(3, 12)),))],
+                    max_new_tokens=int(rng.integers(3, 14)))
+            for i in range(8)]
+    total_new = sum(r.max_new_tokens for r in reqs)
+
+    cb = ContinuousBatcher(params, cfg, n_slots=3, cache_len=32)
+    for r in reqs:
+        cb.submit(r)
+    t0 = time.time()
+    done = cb.run()
+    wall = time.time() - t0
+
+    print(f"{len(done)} requests, {total_new} total new tokens, "
+          f"{cb.steps} batched decode steps (vs {total_new} sequential), "
+          f"{wall:.1f}s")
+    for rid in sorted(done):
+        r = done[rid]
+        print(f"  req {rid}: prompt {len(r.tokens):2d} toks -> "
+              f"{r.generated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Pytree checkpointing to .npz + JSON sidecar (no orbax offline).
+
+Handles the full AdLoCo training state: per-trainer params, inner/outer
+optimizer states, adaptive-batch state, and pool metadata.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # npz has no bf16; f32 holds every bf16 exactly (round-trip
+            # lossless — restore casts back to the template dtype)
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out, treedef
+
+
+def save_pytree(path: str, tree) -> None:
+    arrays, _ = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def restore_pytree(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in flat:
+            key = jax.tree_util.keystr(p)
+            arr = data[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            leaves.append(jnp.asarray(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+
+
+def save_json(path: str, obj: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, default=str)
+
+
+def load_json(path: str) -> Any:
+    with open(path) as f:
+        return json.load(f)
+
+
+def save_train_state(ckpt_dir: str, step: int, pool_state) -> None:
+    """pool_state: repro.core.mit.TrainerPoolState."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    for i, tr in enumerate(pool_state.trainers):
+        save_pytree(os.path.join(d, f"trainer_{i}_params.npz"), tr.params)
+        save_pytree(os.path.join(d, f"trainer_{i}_outer_opt.npz"),
+                    tr.outer_opt_state)
+        for m, st in enumerate(tr.inner_opt_states):
+            save_pytree(os.path.join(d, f"trainer_{i}_inner_opt_{m}.npz"), st)
+    if pool_state.global_params is not None:
+        save_pytree(os.path.join(d, "global_params.npz"),
+                    pool_state.global_params)
+    save_json(os.path.join(d, "meta.json"), {
+        "step": step,
+        "num_trainers": len(pool_state.trainers),
+        "requested_batches": [int(t.requested_batch) for t in pool_state.trainers],
+        "comms_bytes": float(pool_state.comms.total_bytes),
+        "comms_events": int(pool_state.comms.events),
+    })
+
+
+def restore_train_state(ckpt_dir: str, step: int, pool_state):
+    """Restore a checkpoint *in place* into ``pool_state`` (a
+    TrainerPoolState whose trainers provide shape/dtype templates —
+    i.e. freshly initialised with the same config/pool size)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    meta = load_json(os.path.join(d, "meta.json"))
+    assert meta["num_trainers"] == len(pool_state.trainers), \
+        (meta["num_trainers"], len(pool_state.trainers))
+    for i, tr in enumerate(pool_state.trainers):
+        tr.params = restore_pytree(
+            os.path.join(d, f"trainer_{i}_params.npz"), tr.params)
+        tr.outer_opt_state = restore_pytree(
+            os.path.join(d, f"trainer_{i}_outer_opt.npz"),
+            tr.outer_opt_state)
+        tr.inner_opt_states = [
+            restore_pytree(os.path.join(d, f"trainer_{i}_inner_opt_{m}.npz"),
+                           st)
+            for m, st in enumerate(tr.inner_opt_states)]
+        tr.requested_batch = int(meta["requested_batches"][i])
+    gp = os.path.join(d, "global_params.npz")
+    if os.path.exists(gp) and pool_state.trainers:
+        pool_state.global_params = restore_pytree(
+            gp, pool_state.trainers[0].params)
+    return pool_state, meta
+
+
+def latest_step(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+             if n.startswith("step_")]
+    return max(steps) if steps else None

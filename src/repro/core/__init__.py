@@ -1,0 +1,19 @@
+"""AdLoCo core: the paper's contribution.
+
+  batching   — adaptive batch-size tests (norm / inner-product / augmented)
+  diloco     — jitted inner/outer step primitives
+  mit        — trainer pool, CheckMerge / DoMerge
+  switch     — SwitchMode execution planning
+  adloco     — Algorithm 3 orchestrator
+  local_sgd  — LocalSGD + vanilla-DiLoCo baselines
+  comms      — communication metering (Theorem 2's C(N))
+"""
+from repro.core import batching, comms, diloco, local_sgd, mit, switch
+from repro.core.adloco import History, train_adloco
+from repro.core.local_sgd import diloco_config, train_diloco, train_local_sgd
+
+__all__ = [
+    "batching", "comms", "diloco", "local_sgd", "mit", "switch",
+    "History", "train_adloco", "train_diloco", "train_local_sgd",
+    "diloco_config",
+]

@@ -1,0 +1,197 @@
+"""AdLoCo — Algorithm 3: Adaptive Batching + Merging + SwitchMode on the
+DiLoCo core.  Host-level orchestrator over the jitted primitives in
+``diloco.py``.
+
+Ablations (paper Fig. 2) via AdLoCoConfig flags:
+  adaptive=False       -> fixed-batch DiLoCo-style training
+  enable_merge=False   -> no trainer consolidation
+  enable_switch=False  -> no gradient accumulation (batch hard-capped)
+Vanilla DiLoCo baseline = adaptive off, merge off, switch off.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import AdLoCoConfig
+from repro.core import batching
+from repro.core.comms import CommsMeter, param_bytes
+from repro.core.diloco import (StepCache, make_outer_step, reshape_for_plan)
+from repro.core.mit import (TrainerPoolState, TrainerState, check_merge,
+                            consolidate, do_merge)
+from repro.core.switch import ExecutionPlan, plan_execution
+
+
+@dataclass
+class History:
+    outer_step: List[int] = field(default_factory=list)
+    loss: List[float] = field(default_factory=list)
+    eval_loss: List[float] = field(default_factory=list)
+    pool_size: List[int] = field(default_factory=list)
+    requested_batches: List[List[int]] = field(default_factory=list)
+    comm_events: List[int] = field(default_factory=list)
+    comm_bytes: List[float] = field(default_factory=list)
+    samples: List[int] = field(default_factory=list)     # cumulative
+    modes: List[List[str]] = field(default_factory=list)
+    wall: List[float] = field(default_factory=list)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return self.__dict__.copy()
+
+
+def _make_trainers(init_params_list, streams, acfg: AdLoCoConfig,
+                   inner_opt, outer_opt) -> List[TrainerState]:
+    k, M = len(init_params_list), acfg.nodes_per_gpu
+    trainers = []
+    for i, params in enumerate(init_params_list):
+        trainers.append(TrainerState(
+            tid=i,
+            params=params,
+            outer_opt_state=outer_opt.init(params),
+            inner_opt_states=[inner_opt.init(params) for _ in range(M)],
+            requested_batch=acfg.initial_batch_size,
+            streams=[streams[i * M + m] for m in range(M)],
+        ))
+    return trainers
+
+
+def train_adloco(loss_fn: Callable, init_params_list: List[Any],
+                 streams: List[Any], acfg: AdLoCoConfig, *,
+                 num_outer_steps: Optional[int] = None,
+                 eval_fn: Optional[Callable] = None,
+                 fixed_batch: Optional[int] = None,
+                 verbose: bool = False,
+                 restore_from: Optional[tuple] = None):
+    """Run Algorithm 3.
+
+    loss_fn(params, batch) -> (loss, aux);  streams: k*M data shards with
+    ``next_batch(b)``;  init_params_list: k independent inits (the paper's
+    multi-instance diversity).  ``restore_from``: optional
+    (ckpt_dir, step) to restore the trainer pool from before training.
+    Returns (TrainerPoolState, History).
+    """
+    T = num_outer_steps or acfg.num_outer_steps
+    M = acfg.nodes_per_gpu
+    H = acfg.num_inner_steps
+    inner_opt = optim.get_optimizer(
+        acfg.inner_optimizer, acfg.lr_inner,
+        **({"weight_decay": acfg.weight_decay}
+           if acfg.inner_optimizer == "adamw" else {}))
+    outer_opt = optim.get_optimizer(
+        acfg.outer_optimizer, acfg.lr_outer,
+        **({"momentum": acfg.outer_momentum}
+           if acfg.outer_optimizer in ("nesterov", "sgd") else {}))
+    cache = StepCache(loss_fn, inner_opt)
+    outer_step = make_outer_step(outer_opt)
+
+    pool = TrainerPoolState(
+        trainers=_make_trainers(init_params_list, streams, acfg,
+                                inner_opt, outer_opt))
+    if restore_from is not None:
+        from repro.checkpoint import restore_train_state
+        pool, _ = restore_train_state(restore_from[0], restore_from[1], pool)
+    if fixed_batch is not None and not acfg.adaptive:
+        for tr in pool.trainers:
+            tr.requested_batch = fixed_batch
+    hist = History()
+    samples_total = 0
+    t0 = time.time()
+
+    for t in range(1, T + 1):
+        # ---- CheckMerge / DoMerge (Alg 3 lines 11–16) ----------------
+        if (acfg.enable_merge and pool.k > 1
+                and t % acfg.merge_frequency == 0):
+            ids = check_merge([tr.requested_batch for tr in pool.trainers],
+                              acfg.merge_w + 1)  # w worst + representative
+            if len(ids) > 1:
+                pool = do_merge(pool, ids, step=t)
+
+        round_losses, modes = [], []
+        for tr in pool.trainers:
+            b_req = (fixed_batch if (fixed_batch is not None
+                                     and not acfg.adaptive)
+                     else tr.requested_batch)
+            mult = (acfg.switch_multiplier if acfg.enable_switch
+                    else 10 ** 9)  # switch off => never accumulate
+            plan = plan_execution(b_req, acfg.max_batch, mult)
+            modes.append(plan.mode)
+            step_fn = cache.get(plan)
+
+            x_start = tr.params
+            worker_params = []
+            worker_grads = []
+            last_losses = []
+            for m in range(M):
+                wp = x_start
+                opt_m = tr.inner_opt_states[m]
+                stream = tr.streams[m % len(tr.streams)]
+                for h in range(H):
+                    batch = stream.next_batch(plan.effective_batch)
+                    batch = reshape_for_plan(batch, plan)
+                    wp, opt_m, loss, grads = step_fn(wp, opt_m, batch)
+                    samples_total += plan.effective_batch
+                worker_params.append(wp)
+                worker_grads.append(grads)
+                tr.inner_opt_states[m] = opt_m
+                last_losses.append(float(loss))
+            round_losses.append(sum(last_losses) / len(last_losses))
+
+            # ---- requested batch for the next round (Alg 3 line 31) --
+            if acfg.adaptive:
+                if acfg.stats_estimator == "microbatch" and M >= 2:
+                    # free distributed estimator: the M workers' last
+                    # microbatch-mean grads are already materialized;
+                    # Var over workers * m estimates sigma^2 with zero
+                    # extra passes (DESIGN.md §3 — the grads come from
+                    # slightly diverged worker params, an accepted
+                    # approximation of the shared-point statistics)
+                    stack = jax.tree.map(lambda *g: jnp.stack(g),
+                                         *worker_grads)
+                    st = batching.stats_from_microbatch_grads(
+                        stack, plan.effective_batch)
+                else:
+                    # the paper computes sigma_Bk / grad_Bk on the
+                    # CURRENT batch; stats_probe_size is only a memory
+                    # cap (the E||g_B||^2 = ||g||^2 + sigma^2/B bias of
+                    # a too-small probe stalls batch growth and breaks
+                    # Theorem 2's ln-N communication profile)
+                    probe_b = max(4, min(acfg.stats_probe_size,
+                                         plan.effective_batch))
+                    probe = tr.streams[0].next_batch(probe_b)
+                    st = batching.per_sample_stats(
+                        loss_fn, worker_params[0], probe)
+                tr.requested_batch = batching.requested_batch(
+                    st, acfg, tr.requested_batch)
+
+            # ---- outer sync (Alg 3 lines 40–44) -----------------------
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *worker_params)
+            tr.params, tr.outer_opt_state = outer_step(
+                x_start, stacked, tr.outer_opt_state)
+            pool.comms.record("outer", participants=M,
+                              payload_bytes=param_bytes(tr.params), step=t)
+
+        hist.outer_step.append(t)
+        hist.loss.append(sum(round_losses) / len(round_losses))
+        hist.pool_size.append(pool.k)
+        hist.requested_batches.append(
+            [tr.requested_batch for tr in pool.trainers])
+        hist.comm_events.append(pool.comms.events)
+        hist.comm_bytes.append(pool.comms.total_bytes)
+        hist.samples.append(samples_total)
+        hist.modes.append(modes)
+        hist.wall.append(time.time() - t0)
+        if eval_fn is not None:
+            best = min(pool.trainers, key=lambda tr: -tr.requested_batch)
+            hist.eval_loss.append(float(eval_fn(best.params)))
+        if verbose:
+            print(f"[adloco] t={t} loss={hist.loss[-1]:.4f} "
+                  f"k={pool.k} b={hist.requested_batches[-1]} "
+                  f"comm={pool.comms.events}")
+
+    pool = consolidate(pool, step=T)
+    return pool, hist

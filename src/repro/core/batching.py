@@ -1,0 +1,129 @@
+"""Adaptive batch-size tests (AdAdaGrad family — paper §3.3 / eqs 10,12,13).
+
+All three tests reduce to three statistics over per-sample gradients g_i
+(i = 1..b) with mean ḡ:
+
+  s_i = ||g_i||²,   d_i = <g_i, ḡ>,   n2 = ||ḡ||²
+
+  norm test       σ² = (Σ s_i − b·n2) / (b−1)
+                  b⁺ = ceil( σ² / (η² n2) )                       (eq 10)
+  inner-product   v  = Σ (d_i − n2)² / (b−1)
+                  b⁺ = ceil( v / (ϑ² n2²) )                       (eq 12)
+  augmented       o  = Σ (s_i − d_i²/n2) / (b−1)
+                  b⁺ = max(ipt, ceil( o / (ν² n2) ))              (eq 13)
+
+(The orthogonal residuals have mean 0 because mean(g_i) = ḡ, so the
+augmented variance is the mean squared residual norm.)
+
+Two estimator paths for the statistics:
+  * exact per-sample grads (vmap-of-grad) — small models, tests;
+  * distributed microbatch estimator: with per-replica microbatch-mean
+    grads G_j over m samples each, Var(G_j) = σ²/m, so σ² = m·Var(G_j) —
+    statistics data parallelism already materializes for free.
+
+The fused single-pass reduction over the (B, D) gradient matrix is the
+``gradstats`` Pallas kernel; ``repro.kernels.gradstats.ref`` is the
+pure-jnp oracle used here by default.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GradStats(NamedTuple):
+    """Sufficient statistics for all batching tests (f32 scalars)."""
+    mean_norm2: jnp.ndarray     # ||ḡ||²
+    sigma2: jnp.ndarray         # trace-variance of per-sample grads
+    ip_var: jnp.ndarray         # Var(<g_i, ḡ>)
+    orth_var: jnp.ndarray       # Var of orthogonal residuals
+    b: jnp.ndarray              # number of samples the stats came from
+
+
+def stats_from_matrix(G: jnp.ndarray, *, use_kernel: bool = False) -> GradStats:
+    """G: (B, D) per-sample (or per-microbatch-mean) flattened gradients."""
+    if use_kernel:
+        from repro.kernels.gradstats.ops import gradstats_reduce
+        s, d, gbar_n2, b = gradstats_reduce(G)
+    else:
+        from repro.kernels.gradstats.ref import gradstats_reduce_ref
+        s, d, gbar_n2, b = gradstats_reduce_ref(G)
+    bm1 = jnp.maximum(b - 1.0, 1.0)
+    sigma2 = (jnp.sum(s) - b * gbar_n2) / bm1
+    ip_var = jnp.sum(jnp.square(d - gbar_n2)) / bm1
+    orth_var = (jnp.sum(s) - jnp.sum(jnp.square(d)) /
+                jnp.maximum(gbar_n2, 1e-30)) / bm1
+    return GradStats(gbar_n2, jnp.maximum(sigma2, 0.0),
+                     jnp.maximum(ip_var, 0.0), jnp.maximum(orth_var, 0.0), b)
+
+
+def stats_from_microbatch_grads(grads_stack, micro_size: int) -> GradStats:
+    """grads_stack: pytree with leading axis J of per-microbatch mean
+    grads (each over ``micro_size`` samples).  Rescales the variance
+    estimates to per-sample units: Var(G_j) = σ²/m  =>  σ² = m·Var."""
+    G = flatten_grads(grads_stack)
+    st = stats_from_matrix(G)
+    m = jnp.float32(micro_size)
+    return GradStats(st.mean_norm2, st.sigma2 * m, st.ip_var * m,
+                     st.orth_var * m, st.b)
+
+
+def flatten_grads(tree) -> jnp.ndarray:
+    """Pytree with leading axis B -> (B, D) f32 matrix."""
+    leaves = jax.tree.leaves(tree)
+    B = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(B, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+def per_sample_stats(loss_fn, params, batch, *, use_kernel: bool = False
+                     ) -> GradStats:
+    """Exact path: vmap of grad over the batch's sample axis."""
+    def one(sample):
+        sb = jax.tree.map(lambda x: x[None], sample)
+        return jax.grad(lambda p: loss_fn(p, sb)[0])(params)
+
+    per = jax.vmap(one)(batch)
+    return stats_from_matrix(flatten_grads(per), use_kernel=use_kernel)
+
+
+# ------------------------------------------------------------------
+# the batch-size tests
+# ------------------------------------------------------------------
+
+def norm_test(st: GradStats, eta: float) -> jnp.ndarray:
+    """eq 10.  Returns requested batch (f32, >= 1)."""
+    return jnp.ceil(st.sigma2 / (eta ** 2 * jnp.maximum(st.mean_norm2, 1e-30)))
+
+
+def inner_product_test(st: GradStats, theta: float) -> jnp.ndarray:
+    """eq 12."""
+    return jnp.ceil(st.ip_var /
+                    (theta ** 2 * jnp.maximum(st.mean_norm2, 1e-30) ** 2))
+
+
+def augmented_test(st: GradStats, theta: float, nu: float) -> jnp.ndarray:
+    """eq 13: max of the inner-product test and the orthogonality test."""
+    b_ipt = inner_product_test(st, theta)
+    b_orth = jnp.ceil(st.orth_var /
+                      (nu ** 2 * jnp.maximum(st.mean_norm2, 1e-30)))
+    return jnp.maximum(b_ipt, b_orth)
+
+
+def requested_batch(st: GradStats, acfg, current_b: int) -> int:
+    """Apply the configured test; enforce monotone growth (paper Lemma 1:
+    b_{k+1} >= b_k) and the global cap."""
+    if acfg.batch_test == "norm":
+        b = norm_test(st, acfg.eta)
+    elif acfg.batch_test == "inner_product":
+        b = inner_product_test(st, acfg.theta)
+    elif acfg.batch_test == "augmented":
+        b = augmented_test(st, acfg.theta, acfg.nu)
+    else:
+        raise ValueError(acfg.batch_test)
+    b = int(jax.device_get(b))
+    b = max(b, int(current_b))          # monotone non-decreasing
+    return int(min(b, acfg.max_global_batch))

@@ -1,0 +1,87 @@
+"""Multi-Instance Training (paper §4.1): trainer pool, CheckMerge
+(Algorithm 1) and DoMerge (Algorithm 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+import jax
+
+from repro.core.comms import CommsMeter, param_bytes
+from repro.core.diloco import merge_params
+
+
+@dataclass
+class TrainerState:
+    """One trainer instance T_i (may span multiple workers/GPUs)."""
+
+    tid: int
+    params: Any                           # x_{T_i}
+    outer_opt_state: Any
+    inner_opt_states: List[Any]           # one per worker m in M
+    requested_batch: int = 1              # b_i^req
+    streams: List[Any] = field(default_factory=list)   # per-worker data
+
+
+@dataclass
+class TrainerPoolState:
+    trainers: List[TrainerState]
+    comms: CommsMeter = field(default_factory=CommsMeter)
+    global_params: Any = None             # final consolidated model
+    outer_opt_state: Any = None
+
+    @property
+    def k(self) -> int:
+        return len(self.trainers)
+
+
+def check_merge(requested_batches: List[int], w: int) -> List[int]:
+    """Algorithm 1: indices of the w trainers with the smallest requested
+    batch (proxy for least-advanced optimization).  Empty when w == 0,
+    k <= 1, or w > k."""
+    k = len(requested_batches)
+    if w == 0 or k <= 1:
+        return []
+    if w > k:
+        return []
+    order = sorted(range(k), key=lambda i: (requested_batches[i], i))
+    return order[:w]
+
+
+def do_merge(pool: TrainerPoolState, merge_ids: List[int], step: int
+             ) -> TrainerPoolState:
+    """Algorithm 2: weighted average of the merge set, keep the
+    representative with the largest requested batch, carry its optimizer
+    state forward; pool contracts by |S| − 1."""
+    if len(merge_ids) <= 1:
+        return pool
+    S = [pool.trainers[i] for i in merge_ids]
+    weights = [max(t.requested_batch, 1) for t in S]
+    merged = merge_params([t.params for t in S], weights)
+    rep = max(S, key=lambda t: (t.requested_batch, -t.tid))
+    rep.params = merged
+    # representative inherits the *union* of data shards so merged
+    # knowledge keeps training on all of it
+    for t in S:
+        if t is not rep:
+            rep.streams.extend(t.streams)
+    survivors = [t for i, t in enumerate(pool.trainers)
+                 if i not in set(merge_ids) or t is rep]
+    pool.comms.record("merge", participants=len(S),
+                      payload_bytes=param_bytes(rep.params), step=step)
+    pool.trainers = survivors
+    return pool
+
+
+def consolidate(pool: TrainerPoolState, step: int):
+    """Final model: batch-size-weighted merge of all surviving trainers."""
+    if pool.k == 1:
+        pool.global_params = pool.trainers[0].params
+        return pool
+    weights = [max(t.requested_batch, 1) for t in pool.trainers]
+    pool.global_params = merge_params(
+        [t.params for t in pool.trainers], weights)
+    pool.comms.record("consolidate", participants=pool.k,
+                      payload_bytes=param_bytes(pool.global_params), step=step)
+    return pool

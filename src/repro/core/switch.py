@@ -1,0 +1,38 @@
+"""SwitchMode (paper §4.2): gradient accumulation only once the requested
+batch exceeds n × max_batch; in the band (max_batch, n·max_batch] keep
+plain capped steps to avoid early-accumulation variance.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+
+class ExecutionPlan(NamedTuple):
+    micro_batch: int        # per-step device batch
+    accum_steps: int        # sequential accumulation steps
+    mode: str               # "plain" | "accum"
+
+    @property
+    def effective_batch(self) -> int:
+        return self.micro_batch * self.accum_steps
+
+
+def plan_execution(b_req: int, max_batch: int, switch_multiplier: int,
+                   *, bucket: bool = True) -> ExecutionPlan:
+    """Paper Algorithm 3 lines 17–27.
+
+    ``bucket``: round micro_batch up to a power of two and accum_steps to
+    a power of two so the number of distinct jit signatures stays
+    logarithmic (beyond-paper engineering for XLA shape stability).
+    """
+    b_req = max(1, int(b_req))
+    if b_req > switch_multiplier * max_batch:
+        accum = math.ceil(b_req / max_batch)
+        if bucket:
+            accum = 1 << (accum - 1).bit_length()
+        return ExecutionPlan(max_batch, accum, "accum")
+    micro = min(b_req, max_batch)
+    if bucket:
+        micro = min(1 << (micro - 1).bit_length(), max_batch)
+    return ExecutionPlan(micro, 1, "plain")

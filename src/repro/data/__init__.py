@@ -1,0 +1,92 @@
+"""Deterministic synthetic LM data pipeline.
+
+The environment is offline, so instead of C4 we generate a *learnable*
+synthetic token stream: a Zipf-weighted order-1 Markov chain over the
+vocabulary.  Every method (AdLoCo / DiLoCo / LocalSGD) consumes the same
+per-shard stream, so convergence comparisons are apples-to-apples — the
+property the paper's Figure 1 needs.
+
+Key requirement from adaptive batching: ``next_batch(b)`` must accept a
+*different* b every call (the norm test grows it), and stay deterministic
+given (seed, shard, call sequence).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class MarkovTokenStream:
+    """Per-shard synthetic stream.  Shards use disjoint RNG streams but a
+    *shared* transition structure (same underlying distribution D, distinct
+    samples — matching the paper's i.i.d. shard assumption)."""
+
+    def __init__(self, vocab_size: int, seq_len: int, shard: int = 0,
+                 num_shards: int = 1, seed: int = 0, branch: int = 4):
+        self.vocab = vocab_size
+        self.seq_len = seq_len
+        self.rng = np.random.default_rng(
+            np.random.SeedSequence([seed, shard]))
+        struct = np.random.default_rng(np.random.SeedSequence([seed, 12345]))
+        # Zipfian unigram over vocab
+        ranks = np.arange(1, vocab_size + 1)
+        self.unigram = (1.0 / ranks) / np.sum(1.0 / ranks)
+        # sparse Markov: each token transitions to `branch` successors
+        self.branch = branch
+        self.succ = struct.integers(0, vocab_size, (vocab_size, branch))
+        self.mix = 0.8          # P(follow chain) vs unigram resample
+        self.tokens_served = 0
+
+    def next_batch(self, batch_size: int):
+        """-> {"tokens": (batch_size, seq_len) int32 jnp array}."""
+        B, S = batch_size, self.seq_len
+        out = np.empty((B, S), np.int64)
+        out[:, 0] = self.rng.choice(self.vocab, size=B, p=self.unigram)
+        follow = self.rng.random((B, S)) < self.mix
+        which = self.rng.integers(0, self.branch, (B, S))
+        resample = self.rng.choice(self.vocab, size=(B, S), p=self.unigram)
+        for t in range(1, S):
+            chained = self.succ[out[:, t - 1], which[:, t]]
+            out[:, t] = np.where(follow[:, t], chained, resample[:, t])
+        self.tokens_served += B * S
+        return {"tokens": jnp.asarray(out, jnp.int32)}
+
+
+def make_shard_streams(vocab_size: int, seq_len: int, num_shards: int,
+                       seed: int = 0):
+    """One stream per trainer instance (the paper's D_i shards)."""
+    return [MarkovTokenStream(vocab_size, seq_len, shard=i,
+                              num_shards=num_shards, seed=seed)
+            for i in range(num_shards)]
+
+
+# ------------------------------------------------------------------
+# Convex proxy problem (used by theory-validation benchmarks/tests):
+# least squares  f(x; (a,b)) = 0.5 (a.x - b)^2  with known optimum.
+# ------------------------------------------------------------------
+
+class QuadraticProblem:
+    """Stochastic least-squares with controllable gradient noise sigma."""
+
+    def __init__(self, dim: int = 32, noise: float = 1.0, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.dim = dim
+        self.noise = noise
+        self.x_star = rng.standard_normal(dim)
+        self.rng = rng
+
+    def sample(self, batch_size: int, shard_rng=None):
+        rng = shard_rng or self.rng
+        A = rng.standard_normal((batch_size, self.dim))
+        b = A @ self.x_star + self.noise * rng.standard_normal(batch_size)
+        return jnp.asarray(A), jnp.asarray(b)
+
+    @staticmethod
+    def loss(x, A, b):
+        r = A @ x - b
+        return 0.5 * jnp.mean(jnp.square(r))
+
+    @staticmethod
+    def per_sample_grads(x, A, b):
+        r = A @ x - b                       # (B,)
+        return A * r[:, None]               # (B, dim)

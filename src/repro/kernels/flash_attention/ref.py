@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding window)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import sdpa
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q (B,S,H,hd), k/v (B,S,Hk,hd) -> (B,S,H,hd)."""
+    return sdpa(q, k, v, causal=causal, window=window)

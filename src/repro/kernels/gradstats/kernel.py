@@ -1,0 +1,87 @@
+"""Fused gradient-moment reduction Pallas kernel — TPU target.
+
+This is the hot loop of the paper's adaptive batching: every outer step,
+the norm / inner-product tests need per-sample statistics over the
+(B, D) matrix of flattened per-sample gradients (D = model dim, huge;
+B = probe batch).  The naive jnp formulation reads G three times
+(mean, row-norms, G@ḡ).  The kernel computes
+
+    colsum_j = Σ_i G_ij          (pass 1 — for ḡ)
+    s_i = Σ_j G_ij²,  d_i = Σ_j G_ij · ḡ_j     (pass 2, fused)
+
+so G streams HBM→VMEM exactly twice (once per pass) instead of three
+times, with f32 accumulators in VMEM.
+
+Layout: grid = (D/BD, B/BB) with the row axis sequential; each step
+loads a (BB, BD) tile.  BD = 512 lanes amortizes the per-tile overhead;
+accumulators: colsum (BD,), s/d (BB,) revisited across the D axis via
+output-block accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _colsum_kernel(g_ref, out_ref, *, bb: int):
+    ib = pl.program_id(1)
+
+    @pl.when(ib == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...].astype(jnp.float32)                  # (BB, BD)
+    out_ref[...] += jnp.sum(g, axis=0)
+
+
+def _moments_kernel(g_ref, gbar_ref, s_ref, d_ref, *, bd: int):
+    jd = pl.program_id(1)
+
+    @pl.when(jd == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    g = g_ref[...].astype(jnp.float32)                  # (BB, BD)
+    gbar = gbar_ref[...].astype(jnp.float32)            # (BD,)
+    s_ref[...] += jnp.sum(g * g, axis=1)
+    d_ref[...] += g @ gbar
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bd", "interpret"))
+def gradstats_padded(G, *, bb: int = 8, bd: int = 512,
+                     interpret: bool = True):
+    """G: (B, D) with B % bb == 0, D % bd == 0.
+    Returns (s (B,), d (B,), n2 (), b ())."""
+    B, D = G.shape
+    colsum = pl.pallas_call(
+        functools.partial(_colsum_kernel, bb=bb),
+        grid=(D // bd, B // bb),
+        in_specs=[pl.BlockSpec((bb, bd), lambda jd, ib: (ib, jd))],
+        out_specs=pl.BlockSpec((bd,), lambda jd, ib: (jd,)),
+        out_shape=jax.ShapeDtypeStruct((D,), jnp.float32),
+        interpret=interpret,
+    )(G)
+    gbar = colsum / B
+    s, d = pl.pallas_call(
+        functools.partial(_moments_kernel, bd=bd),
+        grid=(B // bb, D // bd),
+        in_specs=[
+            pl.BlockSpec((bb, bd), lambda ib, jd: (ib, jd)),
+            pl.BlockSpec((bd,), lambda ib, jd: (jd,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda ib, jd: (ib,)),
+            pl.BlockSpec((bb,), lambda ib, jd: (ib,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(G, gbar)
+    n2 = jnp.sum(jnp.square(gbar))
+    return s, d, n2, jnp.float32(B)

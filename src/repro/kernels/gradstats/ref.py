@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the gradstats reduction.
+
+Given G (B, D) per-sample gradients, returns
+  s (B,)  = per-row squared norms  ||g_i||²
+  d (B,)  = per-row inner products <g_i, ḡ>
+  n2 ()   = ||ḡ||²
+  b ()    = f32 row count
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gradstats_reduce_ref(G: jnp.ndarray):
+    G = G.astype(jnp.float32)
+    gbar = jnp.mean(G, axis=0)
+    s = jnp.sum(jnp.square(G), axis=1)
+    d = G @ gbar
+    n2 = jnp.sum(jnp.square(gbar))
+    return s, d, n2, jnp.float32(G.shape[0])

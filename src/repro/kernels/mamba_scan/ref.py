@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the selective scan (chunked associative scan)."""
+from __future__ import annotations
+
+from repro.models.layers import ssm_scan_chunked
+
+
+def mamba_scan_ref(u, dt, A_log, Bm, Cm):
+    """u, dt (B,S,di); A_log (di,n); Bm, Cm (B,S,n) ->
+    (y (B,S,di), h_last (B,di,n))."""
+    return ssm_scan_chunked(u, dt, A_log, Bm, Cm)

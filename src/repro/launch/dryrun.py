@@ -1,0 +1,365 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) combination with abstract inputs, and record memory / cost /
+collective analysis for the roofline.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first init, and only the dry-run wants 512
+placeholder devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # full sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multipod # + 2-pod pass
+
+Per combination this lowers:
+  train_4k              -> train_step  (DiLoCo inner step: fwd+bwd+AdamW,
+                                        SwitchMode accumulation scan)
+  prefill_32k           -> prefill_step (KV-cache fill, last-token logits)
+  decode_32k, long_500k -> serve_step  (1 token vs seq_len KV cache)
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models, optim
+from repro.configs import (ARCH_REGISTRY, ASSIGNED_ARCHS, INPUT_SHAPES,
+                           LONG_CONTEXT_ARCHS, get_config)
+from repro.core.diloco import make_inner_step_fn
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro import sharding as shard_rules
+from repro.launch import hlo_analysis
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# REPRO_BASELINE=1 lowers the paper-faithful baseline configuration
+# (no activation-sharding constraints, full-sequence prefill logits) so
+# §Perf before/after numbers come from the same code + analyzer.
+BASELINE = os.environ.get("REPRO_BASELINE", "") == "1"
+
+
+def _policy(mesh):
+    import contextlib
+    if BASELINE:
+        return contextlib.nullcontext()
+    return shard_rules.activation_policy(
+        S.data_axes(mesh), model_size=mesh.shape.get("model", 0))
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(\S+?)\[([\d,]*)\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "u32": 4, "s32": 4,
+                "u16": 2, "s16": 2, "u8": 1, "s8": 1, "pred": 1, "f8e4m3": 1,
+                "f8e5m2": 1, "u64": 8, "s64": 8}
+
+# ring all-reduce moves ~2x the payload per participant; one-shot
+# gather/scatter/permute move ~1x.
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective in the (post-SPMD,
+    per-device) HLO.  Returns totals per collective kind plus a wire-byte
+    estimate (ring factor applied)."""
+    per_kind: dict = {}
+    wire = 0.0
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        if m.group(0).count("-done(") and kind != "collective-permute":
+            continue  # async pairs: count the -start only
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+        wire += _WIRE_FACTOR[kind] * nbytes
+    per_kind["wire_bytes"] = wire
+    return per_kind
+
+
+def big_archs():
+    """Archs whose optimizer state needs ZeRO/FSDP sharding to fit."""
+    return {name for name, cfg in ARCH_REGISTRY.items()
+            if cfg.param_count() > 5e9}
+
+
+def make_train_step(cfg, accum: int):
+    opt = optim.adamw(2e-5, weight_decay=0.1)
+
+    def loss(params, mb):
+        return models.loss_fn(params, mb, cfg, logit_chunk=512)
+
+    return make_inner_step_fn(loss, opt, accum), opt
+
+
+def lower_train(cfg, shape, mesh, accum: int = 1):
+    fsdp = cfg.name in big_archs()
+    step_fn, opt = make_train_step(cfg, accum)
+    a_params = S.abstract_params(cfg)
+    a_opt = jax.eval_shape(opt.init, a_params)
+    a_batch = S.train_inputs(cfg, shape, accum)
+    p_sh = shard_rules.param_shardings(a_params, mesh, fsdp=fsdp)
+    o_sh = shard_rules.opt_state_shardings(a_opt, mesh, fsdp=fsdp)
+    b_sh = S.train_batch_shardings(a_batch, mesh)
+    loss_sh = NamedSharding(mesh, P())
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, loss_sh, p_sh),
+        donate_argnums=(0, 1),
+    )
+    with mesh, _policy(mesh):
+        return jitted.lower(a_params, a_opt, a_batch)
+
+
+def make_prefill_step(cfg, shape):
+    C = S.cache_len_for(cfg, shape)
+
+    def prefill_step(params, batch):
+        if cfg.is_encoder_decoder:
+            from repro.models import encdec
+            cache = encdec.init_cache(cfg, params, batch["frames"], C)
+            logits, cache = encdec.decode_step(
+                params, cache, batch["tokens"][:, 0], jnp.int32(0), cfg)
+            return logits, cache
+        logits, cache = models.prefill(
+            params, batch["tokens"], cfg, C,
+            prefix_emb=batch.get("prefix_emb"), last_only=not BASELINE)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def lower_prefill(cfg, shape, mesh):
+    fsdp = cfg.name in big_archs()
+    step_fn = make_prefill_step(cfg, shape)
+    a_params = S.abstract_params(cfg)
+    a_batch = S.prefill_inputs(cfg, shape)
+    p_sh = shard_rules.param_shardings(a_params, mesh, fsdp=fsdp)
+    b_sh = S.prefill_batch_shardings(a_batch, mesh)
+    jitted = jax.jit(step_fn, in_shardings=(p_sh, b_sh))
+    with mesh, _policy(mesh):
+        return jitted.lower(a_params, a_batch)
+
+
+def lower_decode(cfg, shape, mesh):
+    fsdp = cfg.name in big_archs()
+
+    def serve_step(params, cache, token, pos):
+        return models.decode_step(params, cache, token, pos, cfg)
+
+    a_params = S.abstract_params(cfg)
+    dec = S.decode_inputs(cfg, shape)
+    p_sh = shard_rules.param_shardings(a_params, mesh, fsdp=fsdp)
+    tok_sh, pos_sh, cache_sh = S.decode_shardings(cfg, shape, mesh)
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(p_sh, cache_sh, tok_sh, pos_sh),
+        donate_argnums=(1,),
+    )
+    with mesh:
+        return jitted.lower(a_params, dec["cache"], dec["token"], dec["pos"])
+
+
+def lower_adloco_outer(cfg, mesh):
+    """The paper's cross-instance collective schedule on the multi-pod
+    mesh: each pod is one trainer instance (stacked leading axis sharded
+    over "pod").  One program does the DiLoCo outer step — weighted
+    pseudo-gradient average across instances + Nesterov — AND the MIT
+    merge (batch-size-weighted parameter average, Algorithm 2).  All
+    cross-pod traffic of AdLoCo lives in this program; inner steps never
+    touch the pod axis."""
+    assert "pod" in mesh.axis_names
+    npod = mesh.shape["pod"]
+    from repro import optim as O
+    outer_opt = O.nesterov_outer(0.5, 0.9)
+
+    def outer_and_merge(x_prev, instance_params, outer_state, weights):
+        # pseudo-gradient per instance, weighted-averaged across "pod"
+        w = weights / jnp.sum(weights)
+        delta = jax.tree.map(
+            lambda xp, xs: xp.astype(jnp.float32) - jnp.einsum(
+                "p,p...->...", w, xs.astype(jnp.float32)),
+            x_prev, instance_params)
+        updates, outer_state = outer_opt.update(delta, outer_state, x_prev)
+        x_new = O.apply_updates(x_prev, updates)
+        return x_new, outer_state
+
+    a_params = S.abstract_params(cfg)
+    p_sh = shard_rules.param_shardings(a_params, mesh,
+                                       fsdp=cfg.name in big_archs())
+    stack = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((npod,) + l.shape, l.dtype), a_params)
+    stack_sh = jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, P(("pod",), *s.spec)), p_sh)
+    a_outer = jax.eval_shape(outer_opt.init, a_params)
+    o_sh = shard_rules.opt_state_shardings(a_outer, mesh,
+                                           fsdp=cfg.name in big_archs())
+    w_sh = NamedSharding(mesh, P())
+    jitted = jax.jit(outer_and_merge,
+                     in_shardings=(p_sh, stack_sh, o_sh, w_sh),
+                     out_shardings=(p_sh, o_sh))
+    with mesh:
+        return jitted.lower(a_params, stack, a_outer,
+                            jax.ShapeDtypeStruct((npod,), jnp.float32))
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+              accum: int = 1, save: bool = True, verbose: bool = True):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.name == "long_500k" and arch not in LONG_CONTEXT_ARCHS \
+            and cfg.arch_type != "ssm":
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "no sub-quadratic path (DESIGN.md §5)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            lowered = lower_train(cfg, shape, mesh, accum)
+        elif shape.kind == "prefill":
+            lowered = lower_prefill(cfg, shape, mesh)
+        else:
+            lowered = lower_decode(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        corrected = hlo_analysis.analyze(hlo)
+        result = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok", "accum": accum,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            # XLA's numbers (while bodies counted once — recorded for
+            # reference) and the trip-count-corrected per-device numbers
+            # from repro.launch.hlo_analysis:
+            "xla_flops": cost.get("flops", 0.0),
+            "xla_bytes_accessed": cost.get("bytes accessed", 0.0),
+            "flops": corrected["flops"],
+            "bytes_accessed": corrected["bytes"],
+            "collective_bytes": corrected["collective_bytes"],
+            "collective_wire_bytes": corrected["collective_wire_bytes"],
+            "per_collective": corrected["per_collective"],
+            "collectives": coll,
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "generated_code_bytes": mem.generated_code_size_in_bytes,
+            },
+            "params": cfg.param_count(),
+            "params_active": cfg.param_count(active_only=True),
+        }
+    except Exception as e:  # noqa: BLE001 — a dry-run failure is a bug report
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "trace": traceback.format_exc()[-2000:]}
+    if verbose:
+        if result["status"] == "ok":
+            print(f"[dryrun] {arch:22s} {shape_name:12s} {mesh_name:10s} OK "
+                  f"flops/dev={result['flops']:.3e} "
+                  f"bytes/dev={result['bytes_accessed']:.3e} "
+                  f"temp={result['memory']['temp_bytes']/2**30:.2f}GiB "
+                  f"coll={result['collective_wire_bytes']/2**30:.3f}GiB "
+                  f"(compile {result['compile_s']}s)", flush=True)
+        else:
+            print(f"[dryrun] {arch:22s} {shape_name:12s} {mesh_name:10s} "
+                  f"{result['status'].upper()}: "
+                  f"{result.get('reason', result.get('error'))}", flush=True)
+    if save and result["status"] != "skipped":
+        os.makedirs(OUT_DIR, exist_ok=True)
+        fn = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{mesh_name}"
+                          + (f"__accum{accum}" if accum != 1 else "") + ".json")
+        with open(fn, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=sorted(ARCH_REGISTRY))
+    ap.add_argument("--shape", default=None, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true", help="sweep all combos")
+    ap.add_argument("--multipod", action="store_true",
+                    help="use the (2,16,16) two-pod mesh")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="SwitchMode accumulation steps for train_4k")
+    ap.add_argument("--adloco-outer", action="store_true",
+                    help="lower the cross-instance outer+merge program "
+                         "on the 2-pod mesh for every arch")
+    args = ap.parse_args(argv)
+
+    if args.adloco_outer:
+        mesh = make_production_mesh(multi_pod=True)
+        failures = 0
+        os.makedirs(OUT_DIR, exist_ok=True)
+        for arch in ASSIGNED_ARCHS:
+            cfg = get_config(arch)
+            t0 = time.time()
+            try:
+                lowered = lower_adloco_outer(cfg, mesh)
+                compiled = lowered.compile()
+                corrected = hlo_analysis.analyze(compiled.as_text())
+                res = {"arch": arch, "shape": "adloco_outer",
+                       "mesh": "pod2x16x16", "status": "ok",
+                       "flops": corrected["flops"],
+                       "bytes_accessed": corrected["bytes"],
+                       "collective_bytes": corrected["collective_bytes"],
+                       "collective_wire_bytes":
+                           corrected["collective_wire_bytes"],
+                       "per_collective": corrected["per_collective"],
+                       "compile_s": round(time.time() - t0, 1),
+                       "params": cfg.param_count()}
+                print(f"[dryrun] {arch:22s} adloco_outer pod2x16x16 OK "
+                      f"coll={res['collective_wire_bytes']/2**30:.3f}GiB",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001
+                res = {"arch": arch, "shape": "adloco_outer",
+                       "status": "error", "error": str(e)[-500:]}
+                failures += 1
+                print(f"[dryrun] {arch:22s} adloco_outer ERROR {e}",
+                      flush=True)
+            with open(os.path.join(
+                    OUT_DIR, f"{arch}__adloco_outer__pod2x16x16.json"),
+                    "w") as f:
+                json.dump(res, f, indent=2)
+        print(f"[dryrun] adloco-outer done, {failures} failures")
+        return 1 if failures else 0
+
+    combos = []
+    if args.all:
+        combos = [(a, s) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in combos:
+        r = run_combo(arch, shape, multi_pod=args.multipod, accum=args.accum)
+        failures += r["status"] == "error"
+    print(f"[dryrun] done: {len(combos)} combos, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+"""Production mesh definitions.
+
+A TPU v5e pod slice of 256 chips is modeled as a (16, 16) mesh with axes
+("data", "model"); the two-pod production deployment is (2, 16, 16) with
+axes ("pod", "data", "model").
+
+In the AdLoCo deployment the "pod" axis doubles as the *trainer-instance*
+axis: inner DiLoCo steps all-reduce gradients over "data" only (ICI-local
+within a pod), while the outer synchronization / trainer merging are the
+only collectives that cross "pod" (DCI).  See launch/dryrun.py.
+
+These are FUNCTIONS, not module constants — importing this module never
+touches jax device state (device count is locked at first jax init, and
+the 512-device XLA_FLAGS override belongs to dryrun.py alone).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (CPU smoke tests, examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes the global batch is sharded over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW_PER_LINK = 50e9          # B/s per link (~uni-directional)
+VMEM_BYTES = 16 * 2 ** 20
+HBM_BYTES = 16 * 2 ** 30

@@ -1,0 +1,52 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Dry-run profiler: lower one (arch x shape x mesh), print the
+trip-count-scaled top cost centers and loop structure — the 'profile'
+the §Perf hillclimb iterates against (no real TPU in this container).
+
+  PYTHONPATH=src python -m repro.launch.profile --arch falcon-mamba-7b \
+      --shape prefill_32k [--multipod] [--top 30] [--dump hlo.txt]
+"""
+import argparse
+import sys
+
+from repro.configs import ARCH_REGISTRY, INPUT_SHAPES, get_config
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import (lower_decode, lower_prefill, lower_train,
+                                 make_production_mesh)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=sorted(ARCH_REGISTRY))
+    ap.add_argument("--shape", required=True, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--dump", default=None, help="write full HLO here")
+    ap.add_argument("--compiled", action="store_true",
+                    help="profile post-optimization HLO (compile first; "
+                         "slower but matches the roofline artifacts)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    shape = INPUT_SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multipod)
+    if shape.kind == "train":
+        lowered = lower_train(cfg, shape, mesh, args.accum)
+    elif shape.kind == "prefill":
+        lowered = lower_prefill(cfg, shape, mesh)
+    else:
+        lowered = lower_decode(cfg, shape, mesh)
+    hlo = lowered.compile().as_text() if args.compiled \
+        else lowered.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(hlo)
+        print(f"[profile] HLO -> {args.dump} ({len(hlo) / 1e6:.1f} MB)")
+    print(hlo_analysis.profile(hlo, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

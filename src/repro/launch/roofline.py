@@ -1,0 +1,278 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Reads ``experiments/dryrun/*.json`` (written by ``repro.launch.dryrun``)
+and derives, per (arch x shape x mesh), the three roofline terms for the
+TPU v5e target:
+
+  compute term    = HLO_FLOPs_per_chip   / peak_FLOP/s
+  memory term     = HLO_bytes_per_chip   / HBM_bw
+  collective term = wire_bytes_per_chip  / link_bw
+
+All artifact numbers are already per-chip (post-SPMD partitioned HLO,
+trip-count corrected by ``hlo_analysis``).  Additionally reports
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode) with N = active
+params, the useful-compute ratio MODEL_FLOPS / HLO_FLOPs, the dominant
+term, and a one-line "what would move it" note.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline                # table
+  PYTHONPATH=src python -m repro.launch.roofline --markdown     # for EXPERIMENTS.md
+  PYTHONPATH=src python -m repro.launch.roofline --csv
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.configs import ARCH_REGISTRY, INPUT_SHAPES, get_config
+
+# ---- TPU v5e-class hardware constants (per system assignment) ----------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    accum: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float          # per-chip useful model FLOPs
+    hlo_flops: float            # per-chip compiled FLOPs
+    bound_s: float              # max of the three = roofline step time
+    dominant: str
+    useful_ratio: float
+    note: str
+    raw: dict
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful compute time / roofline-bound step time (an MFU-like
+        number: 1.0 would be 'every cycle does a useful model FLOP')."""
+        if self.bound_s <= 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.bound_s
+
+
+def _chips(mesh_name: str) -> int:
+    return {"pod16x16": 256, "pod2x16x16": 512}.get(mesh_name, 256)
+
+
+def model_flops_per_chip(arch: str, shape_name: str, chips: int,
+                         accum: int = 1) -> float:
+    """6*N*D train / 2*N*D forward, N = active params, D = tokens,
+    divided by chip count (data/model parallel split is irrelevant to
+    the aggregate useful-FLOP budget)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len * accum
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            # enc-dec "prefill" = encode frames + ONE decode step, not a
+            # seq_len-token decoder pass (whisper: 1500 frames)
+            tokens = shape.global_batch * (cfg.num_prefix_tokens + 1)
+        else:
+            tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per request
+        tokens = shape.global_batch
+        total = 2.0 * n_active * tokens
+    return total / chips
+
+
+def _suggestion(dominant: str, row: dict, arch: str, shape: str) -> str:
+    cfg = ARCH_REGISTRY[arch]
+    per = row.get("per_collective", {})
+    big = max(per, key=per.get) if per else ""
+    if dominant == "collective":
+        if big == "all-gather":
+            return ("all-gather dominates: overlap weight gathers with "
+                    "compute or shrink FSDP axis / batch the gathers")
+        if big == "all-reduce":
+            return ("grad all-reduce dominates: reduce-scatter + local "
+                    "update (ZeRO) or accumulate more before syncing "
+                    "(AdLoCo's own lever)")
+        return f"{big} dominates: reschedule/overlap it"
+    if dominant == "memory":
+        if shape.startswith("decode"):
+            return ("KV-cache streaming bound (expected for 1-token "
+                    "decode): bigger per-chip batch or quantized cache")
+        return ("HBM bound: fuse elementwise chains, cut remat, or "
+                "raise per-chip arithmetic intensity (bigger microbatch)")
+    if cfg.arch_type == "moe":
+        return "compute bound (good): MXU-align expert matmuls"
+    return "compute bound (good): already near the useful-FLOP roof"
+
+
+def load_rows(art_dir: str = ART_DIR) -> List[RooflineRow]:
+    rows: List[RooflineRow] = []
+    for fn in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("status") != "ok" or r.get("shape") == "adloco_outer":
+            continue
+        chips = _chips(r["mesh"])
+        accum = int(r.get("accum", 1))
+        c_s = r["flops"] / PEAK_FLOPS
+        m_s = r["bytes_accessed"] / HBM_BW
+        k_s = r["collective_wire_bytes"] / LINK_BW
+        mf = model_flops_per_chip(r["arch"], r["shape"], chips, accum)
+        terms = {"compute": c_s, "memory": m_s, "collective": k_s}
+        dominant = max(terms, key=terms.get)
+        rows.append(RooflineRow(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"], accum=accum,
+            compute_s=c_s, memory_s=m_s, collective_s=k_s,
+            model_flops=mf, hlo_flops=r["flops"],
+            bound_s=max(terms.values()), dominant=dominant,
+            useful_ratio=mf / max(r["flops"], 1.0),
+            note=_suggestion(dominant, r, r["arch"], r["shape"]),
+            raw=r))
+    return rows
+
+
+def baseline_rows(rows: List[RooflineRow]) -> List[RooflineRow]:
+    """accum==1 single+multi pod rows (the 40-pair baseline table)."""
+    return [r for r in rows if r.accum == 1]
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x * 1e3:7.2f}ms"
+    return f"{x * 1e6:7.1f}us"
+
+
+def print_table(rows: List[RooflineRow], markdown: bool = False) -> None:
+    if markdown:
+        print("| arch | shape | mesh | compute | memory | collective | "
+              "bound | dominant | MFLOPs/HLO | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r.arch} | {r.shape} | {r.mesh} | "
+                  f"{fmt_s(r.compute_s).strip()} | {fmt_s(r.memory_s).strip()} | "
+                  f"{fmt_s(r.collective_s).strip()} | {fmt_s(r.bound_s).strip()} | "
+                  f"**{r.dominant}** | {r.useful_ratio:.2f} | "
+                  f"{r.roofline_fraction:.2f} |")
+        return
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':11s} {'compute':9s} "
+           f"{'memory':9s} {'collect':9s} {'dominant':10s} "
+           f"{'useful':7s} {'rooffrac':8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r.arch:22s} {r.shape:12s} {r.mesh:11s} "
+              f"{fmt_s(r.compute_s)} {fmt_s(r.memory_s)} "
+              f"{fmt_s(r.collective_s)} {r.dominant:10s} "
+              f"{r.useful_ratio:6.2f}  {r.roofline_fraction:6.2f}")
+
+
+def pick_hillclimb_pairs(rows: List[RooflineRow]) -> Dict[str, RooflineRow]:
+    """worst roofline fraction / most collective-bound / most
+    representative of the paper's technique.
+
+    decode shapes are excluded from 'worst': a 1-token step is
+    structurally memory-bound (stream the whole KV cache for one MAC per
+    byte) and offers no hillclimb story beyond 'batch more requests'.
+    """
+    single = [r for r in rows if r.mesh == "pod16x16" and r.accum == 1]
+    big = [r for r in single if r.shape in ("train_4k", "prefill_32k")]
+    worst = min(big, key=lambda r: r.roofline_fraction)
+    coll = max((r for r in big if r is not worst),
+               key=lambda r: r.collective_s /
+               max(r.compute_s, r.memory_s, 1e-12))
+    train = [r for r in single if r.shape == "train_4k"
+             and r is not worst and r is not coll]
+    # paper's technique targets the *training* outer-sync collective;
+    # the most representative pair is the biggest train config, where
+    # every outer sync moves the most bytes and adaptive batching's
+    # O(ln N) communication law has the most to save.
+    rep = max(train, key=lambda r: r.raw.get("params", 0))
+    return {"worst_roofline": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def inject_experiments(path: str) -> None:
+    """Replace the <!-- ROOFLINE_TABLE --> marker (or previously injected
+    block) in EXPERIMENTS.md with the current markdown table."""
+    import io
+    import re as _re
+    rows = baseline_rows(load_rows())
+    buf = io.StringIO()
+    import contextlib
+    with contextlib.redirect_stdout(buf):
+        print("<!-- ROOFLINE_TABLE -->")
+        print_table([r for r in rows if r.mesh == "pod16x16"],
+                    markdown=True)
+        print()
+        print("Multi-pod (2×16×16, 512 chips) — proves the pod axis "
+              "shards; terms are per chip:")
+        print()
+        print_table([r for r in rows if r.mesh == "pod2x16x16"],
+                    markdown=True)
+        print("<!-- /ROOFLINE_TABLE -->")
+    with open(path) as f:
+        text = f.read()
+    block = buf.getvalue()
+    if "<!-- /ROOFLINE_TABLE -->" in text:
+        text = _re.sub(
+            r"<!-- ROOFLINE_TABLE -->.*?<!-- /ROOFLINE_TABLE -->",
+            lambda _: block.rstrip(), text, flags=_re.S)
+    else:
+        text = text.replace("<!-- ROOFLINE_TABLE -->", block.rstrip())
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[roofline] table injected -> {path}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    choices=["pod16x16", "pod2x16x16"])
+    ap.add_argument("--pick", action="store_true",
+                    help="print the three hillclimb pairs")
+    ap.add_argument("--inject", default=None, metavar="EXPERIMENTS_MD",
+                    help="write the table into EXPERIMENTS.md in place")
+    args = ap.parse_args(argv)
+    if args.inject:
+        inject_experiments(args.inject)
+        return 0
+    rows = baseline_rows(load_rows())
+    if args.mesh:
+        rows = [r for r in rows if r.mesh == args.mesh]
+    if args.csv:
+        print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+              "useful_ratio,roofline_fraction")
+        for r in rows:
+            print(f"{r.arch},{r.shape},{r.mesh},{r.compute_s:.6g},"
+                  f"{r.memory_s:.6g},{r.collective_s:.6g},{r.dominant},"
+                  f"{r.useful_ratio:.4f},{r.roofline_fraction:.4f}")
+    else:
+        print_table(rows, markdown=args.markdown)
+    if args.pick:
+        picks = pick_hillclimb_pairs(load_rows())
+        print()
+        for why, r in picks.items():
+            print(f"[pick] {why:22s} -> {r.arch} x {r.shape} "
+                  f"(dominant={r.dominant}, frac={r.roofline_fraction:.3f})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,192 @@
+"""ShapeDtypeStruct input specs + sharding plans for the dry-run.
+
+``input_specs(cfg, shape)`` returns abstract stand-ins for every model
+input (no device allocation), and the ``*_shardings`` helpers return the
+matching NamedShardings for a given mesh.  The same functions drive the
+real launcher, which feeds concrete arrays with identical layouts.
+
+Sharding plan summary (baseline — §Perf iterates on this):
+  train    batch (1, GB, S):        (None, data-axes, None)
+  prefill  tokens (GB, S):          (data-axes, None)
+  decode   token (GB,):             (data-axes,)
+           kv cache (L,B,C,Hk,hd):  sequence-parallel cache — C sharded
+             over "model" (B over data-axes), so decode attention's
+             softmax/contraction run distributed over the cache length;
+             when B < |data| (long_500k: B=1) the cache/state dims take
+             the combined (data,model) axes instead.
+  mamba state (L,B,di,n):           di sharded (model or data+model)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import LONG_CONTEXT_ARCHS
+from repro.configs.base import InputShape, ModelConfig
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def data_size(mesh) -> int:
+    import math
+    return math.prod(mesh.shape[a] for a in data_axes(mesh))
+
+
+# ------------------------------------------------------------------
+# abstract inputs
+# ------------------------------------------------------------------
+
+def train_inputs(cfg: ModelConfig, shape: InputShape, accum: int = 1
+                 ) -> Dict[str, Any]:
+    GB, S = shape.global_batch, shape.seq_len
+    assert GB % accum == 0
+    mb = GB // accum
+    batch = {"tokens": jax.ShapeDtypeStruct((accum, mb, S), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (accum, mb, cfg.num_prefix_tokens, cfg.d_model), _dt(cfg))
+    elif cfg.frontend is not None:
+        batch["prefix_emb"] = jax.ShapeDtypeStruct(
+            (accum, mb, cfg.num_prefix_tokens, cfg.d_model), _dt(cfg))
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    GB, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((GB, S), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (GB, cfg.num_prefix_tokens, cfg.d_model), _dt(cfg))
+    elif cfg.frontend is not None:
+        batch["prefix_emb"] = jax.ShapeDtypeStruct(
+            (GB, cfg.num_prefix_tokens, cfg.d_model), _dt(cfg))
+    return batch
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """long_500k uses the sub-quadratic path: ring buffer of window size
+    (sliding-window archs) or pure state (SSM)."""
+    if shape.name == "long_500k":
+        assert cfg.name in LONG_CONTEXT_ARCHS or cfg.arch_type == "ssm", (
+            f"{cfg.name} has no sub-quadratic path for long_500k "
+            "(skip documented in DESIGN.md)")
+        if cfg.sliding_window is not None:
+            return cfg.sliding_window
+        return 1  # attention-free: k/v cache unused
+    return shape.seq_len
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Abstract (token, pos, cache) for serve_step."""
+    GB = shape.global_batch
+    C = cache_len_for(cfg, shape)
+    Ln = cfg.num_layers
+    hd = cfg.resolved_head_dim
+    dt = _dt(cfg)
+    cache = {}
+    if cfg.arch_type != "ssm":
+        cache["k"] = jax.ShapeDtypeStruct((Ln, GB, C, cfg.num_kv_heads, hd), dt)
+        cache["v"] = jax.ShapeDtypeStruct((Ln, GB, C, cfg.num_kv_heads, hd), dt)
+    if cfg.arch_type == "ssm" or cfg.hybrid:
+        cache["conv"] = jax.ShapeDtypeStruct(
+            (Ln, GB, cfg.ssm.conv_dim - 1, cfg.d_inner), dt)
+        cache["ssm"] = jax.ShapeDtypeStruct(
+            (Ln, GB, cfg.d_inner, cfg.ssm.state_dim), dt)
+    if cfg.is_encoder_decoder:
+        cache["xk"] = jax.ShapeDtypeStruct(
+            (Ln, GB, cfg.num_prefix_tokens, cfg.num_kv_heads, hd), dt)
+        cache["xv"] = jax.ShapeDtypeStruct(
+            (Ln, GB, cfg.num_prefix_tokens, cfg.num_kv_heads, hd), dt)
+    return {
+        "token": jax.ShapeDtypeStruct((GB,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    from repro import models
+    return jax.eval_shape(
+        lambda k: models.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------------
+# shardings
+# ------------------------------------------------------------------
+
+def train_batch_shardings(batch, mesh: Mesh):
+    da = data_axes(mesh)
+
+    def spec(leaf):
+        return NamedSharding(mesh, P(None, da, *([None] * (leaf.ndim - 2))))
+
+    return jax.tree.map(spec, batch)
+
+
+def prefill_batch_shardings(batch, mesh: Mesh):
+    da = data_axes(mesh)
+
+    def spec(leaf):
+        return NamedSharding(mesh, P(da, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(spec, batch)
+
+
+def decode_shardings(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """(token_sh, pos_sh, cache_sh) — see module docstring."""
+    da = data_axes(mesh)
+    GB = shape.global_batch
+    wide_batch = GB % data_size(mesh) == 0 and GB >= data_size(mesh)
+    if wide_batch:
+        b_ax, feat_ax = da, ("model",)
+        tok = P(da)
+    else:
+        # tiny batch (long_500k): replicate B, spread features/cache over
+        # every axis we have
+        b_ax, feat_ax = None, da + ("model",)
+        tok = P()
+
+    def ns(*parts):
+        return NamedSharding(mesh, P(*parts))
+
+    def _axsize(ax) -> int:
+        import math
+        if ax is None:
+            return 1
+        axes = (ax,) if isinstance(ax, str) else ax
+        return math.prod(mesh.shape[a] for a in axes)
+
+    def pick(dim: int, ax):
+        """feat_ax if it divides, else progressively smaller fallbacks."""
+        for cand in (ax, ("model",), None):
+            if dim % _axsize(cand) == 0:
+                return cand
+        return None
+
+    C = cache_len_for(cfg, shape)
+    cache_specs = {}
+    if cfg.arch_type != "ssm":
+        # (L, B, C, Hk, hd): sequence-parallel over C
+        cache_specs["k"] = ns(None, b_ax, pick(C, feat_ax), None, None)
+        cache_specs["v"] = ns(None, b_ax, pick(C, feat_ax), None, None)
+    if cfg.arch_type == "ssm" or cfg.hybrid:
+        di = cfg.d_inner
+        cache_specs["conv"] = ns(None, b_ax, None, pick(di, feat_ax))
+        cache_specs["ssm"] = ns(None, b_ax, pick(di, feat_ax), None)
+    if cfg.is_encoder_decoder:
+        # cross-attn cache: frame count (1500) is rarely divisible by the
+        # mesh — shard head_dim over "model" instead
+        hd_ok = cfg.resolved_head_dim % mesh.shape.get("model", 1) == 0
+        hd_ax = "model" if hd_ok else None
+        cache_specs["xk"] = ns(None, b_ax, None, None, hd_ax)
+        cache_specs["xv"] = ns(None, b_ax, None, None, hd_ax)
+    return (NamedSharding(mesh, tok), NamedSharding(mesh, P()), cache_specs)

@@ -1,0 +1,72 @@
+"""Unified model API dispatching on arch family.
+
+All entry points are pure functions:
+  init_params(cfg, key)                         -> params pytree
+  loss_fn(params, batch, cfg, **kw)             -> (loss, metrics)
+  init_cache(cfg, params, batch_size, cache_len, frames=None) -> cache
+  decode_step(params, cache, token, pos, cfg)   -> (logits, cache)
+  prefill(params, tokens, cfg, cache_len, **kw) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.is_encoder_decoder:
+        return encdec.init_params(cfg, key)
+    return lm.init_params(cfg, key)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, use_kernels=False, remat=True,
+            logit_chunk=None):
+    if cfg.is_encoder_decoder:
+        return encdec.loss_fn(params, batch, cfg, use_kernels=use_kernels,
+                              remat=remat)
+    return lm.loss_fn(params, batch, cfg, use_kernels=use_kernels,
+                      remat=remat, logit_chunk=logit_chunk)
+
+
+def init_cache(cfg: ModelConfig, params, batch_size: int, cache_len: int,
+               frames=None):
+    if cfg.is_encoder_decoder:
+        assert frames is not None, "enc-dec cache needs encoder frames"
+        return encdec.init_cache(cfg, params, frames, cache_len)
+    return lm.init_cache(cfg, batch_size, cache_len)
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return encdec.decode_step(params, cache, token, pos, cfg)
+    return lm.decode_step(params, cache, token, pos, cfg)
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *,
+            prefix_emb=None, use_kernels=False, last_only=False):
+    assert not cfg.is_encoder_decoder
+    return lm.prefill(params, tokens, cfg, cache_len, prefix_emb=prefix_emb,
+                      use_kernels=use_kernels, last_only=last_only)
+
+
+def example_batch(cfg: ModelConfig, batch: int, seq: int, key=None):
+    """Small concrete batch for smoke tests (deterministic)."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab_size, (batch, seq), dtype=np.int64)
+    out = {"tokens": jnp.asarray(tokens, jnp.int32)}
+    if cfg.is_encoder_decoder:
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.num_prefix_tokens, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    elif cfg.frontend is not None:
+        out["prefix_emb"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.num_prefix_tokens, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    return out
+
+
+__all__ = ["init_params", "loss_fn", "init_cache", "decode_step", "prefill",
+           "example_batch", "lm", "encdec"]

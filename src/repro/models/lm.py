@@ -1,0 +1,495 @@
+"""Decoder-only language model covering dense / moe / ssm / hybrid / vlm
+architectures.  One parameter pytree, layers stacked on a leading axis and
+driven by ``jax.lax.scan`` so HLO size (and CPU compile time) is O(1) in
+depth.
+
+Cache layout (decode):
+  k, v        : (L, B, C, Hk, hd)      C = cache length (ring buffer)
+  conv, ssm   : (L, B, cw-1, di), (L, B, di, n)   for ssm/hybrid archs
+Ring-buffer semantics: position p lives in slot p % C; the absolute
+position held by slot i at decode position `pos` is pos - ((pos - i) % C).
+"""
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding import constrain
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _has_attn(cfg: ModelConfig) -> bool:
+    return cfg.arch_type != "ssm"
+
+
+def _has_mamba(cfg: ModelConfig) -> bool:
+    return cfg.arch_type == "ssm" or cfg.hybrid
+
+
+def _has_mlp(cfg: ModelConfig) -> bool:
+    return cfg.arch_type != "ssm"
+
+
+# --------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {}
+    if cfg.arch_type == "ssm":
+        p["norm"] = jnp.zeros((cfg.d_model,), dt)
+        p["mamba"] = L.init_mamba(ks[0], cfg, dt)
+        return p
+    p["attn_norm"] = jnp.zeros((cfg.d_model,), dt)
+    p["attn"] = L.init_attention(ks[0], cfg, dt)
+    if cfg.hybrid:
+        p["mamba"] = L.init_mamba(ks[1], cfg, dt)
+    p["mlp_norm"] = jnp.zeros((cfg.d_model,), dt)
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(ks[2], cfg, dt)
+    else:
+        kg, ku, kd = jax.random.split(ks[2], 3)
+        p["gate"] = L.dense_init(kg, (cfg.d_model, cfg.d_ff), dtype=dt)
+        p["up"] = L.dense_init(ku, (cfg.d_model, cfg.d_ff), dtype=dt)
+        p["down"] = L.dense_init(kd, (cfg.d_ff, cfg.d_model), dtype=dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    dt = _dtype(cfg)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    p = {
+        "embed": L.dense_init(k_emb, (cfg.vocab_size, cfg.d_model),
+                              scale=0.02, dtype=dt),
+        "layers": stacked,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                    dtype=dt)
+    return p
+
+
+def layer_is_global(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) bool: which layers use full (global) attention."""
+    idx = jnp.arange(cfg.num_layers)
+    if cfg.sliding_window is None:
+        return jnp.ones((cfg.num_layers,), bool)
+    if cfg.global_every is None:
+        return jnp.zeros((cfg.num_layers,), bool)
+    return (idx + 1) % cfg.global_every == 0
+
+
+def _grouped(cfg: ModelConfig):
+    """Grouped-scan geometry for local/global interleaved archs (gemma3):
+    (n_groups, group_size, n_tail) or None for uniform archs."""
+    if cfg.global_every is None or cfg.sliding_window is None:
+        return None
+    g = cfg.global_every
+    ng = cfg.num_layers // g
+    if ng == 0:
+        return None
+    return ng, g, cfg.num_layers - ng * g
+
+
+def _run_layers(layers_tree, carry, body, cfg: ModelConfig, *,
+                remat: bool = False):
+    """Drive ``body(p_layer, carry, is_global) -> (carry, out)`` over all
+    layers.
+
+    Uniform archs: one lax.scan with a traced is_global flag (O(1) HLO).
+    Local/global interleaved archs (gemma3 5:1): a scan over GROUPS whose
+    body unrolls the g layers with STATIC globality, so local layers can
+    use banded sliding-window attention structurally — a traced
+    ``jnp.where(window)`` flag cannot remove the S^2 score tensor
+    (§Perf pair-2 it.1).  Remainder layers run unrolled.
+    Returns (carry, outs stacked on a leading (L, ...) axis or None).
+    """
+    grp = _grouped(cfg)
+    if grp is None:
+        is_global = layer_is_global(cfg)
+
+        def sbody(c, scanned):
+            p, gflag = scanned
+            return body(p, c, gflag)
+
+        if remat:
+            sbody = jax.checkpoint(sbody)
+        return jax.lax.scan(sbody, carry, (layers_tree, is_global))
+
+    ng, g, n_tail = grp
+    head = jax.tree.map(lambda l: l[:ng * g].reshape((ng, g) + l.shape[1:]),
+                        layers_tree)
+
+    def gbody(c, pgrp):
+        outs = []
+        for j in range(g):                       # unrolled: static bools
+            pj = jax.tree.map(lambda l: l[j], pgrp)
+            c, o = body(pj, c, (j + 1) % g == 0)
+            outs.append(o)
+        if outs[0] is None:
+            return c, None
+        return c, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    if remat:
+        gbody = jax.checkpoint(gbody)
+    carry, outs_head = jax.lax.scan(gbody, carry, head)
+    outs = None
+    if outs_head is not None:
+        outs = jax.tree.map(lambda l: l.reshape((ng * g,) + l.shape[2:]),
+                            outs_head)
+    tail_outs = []
+    for i in range(ng * g, cfg.num_layers):
+        pj = jax.tree.map(lambda l: l[i], layers_tree)
+        step = jax.checkpoint(body) if remat else body
+        carry, o = step(pj, carry, (i + 1) % g == 0)
+        tail_outs.append(o)
+    if tail_outs and tail_outs[0] is not None:
+        tail_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *tail_outs)
+        outs = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                            outs, tail_stacked)
+    return carry, outs
+
+
+# --------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------
+
+def _layer_apply(p, x, cfg: ModelConfig, is_global, positions, use_kernels):
+    """One layer, full sequence.  Returns (x, aux_loss).  ``is_global``
+    may be a static python bool (grouped scan -> banded local attention)
+    or a traced flag (uniform scan -> masked full attention)."""
+    aux = jnp.float32(0.0)
+    if cfg.arch_type == "ssm":
+        h = L.rms_norm(x, p["norm"], cfg.rms_eps)
+        return x + L.mamba_forward(p["mamba"], h, cfg, use_kernel=use_kernels), aux
+    window, banded = L.plan_window(cfg, is_global, x.shape[1])
+    h = L.rms_norm(x, p["attn_norm"], cfg.rms_eps)
+    a = L.attention(p["attn"], h, cfg, causal=True, window=window,
+                    positions=positions, use_kernel=use_kernels,
+                    banded=banded)
+    if cfg.hybrid:
+        m = L.mamba_forward(p["mamba"], h, cfg, use_kernel=use_kernels)
+        a = 0.5 * (a + m)          # Hymba-style parallel-head mean fusion
+    x = x + a
+    h2 = L.rms_norm(x, p["mlp_norm"], cfg.rms_eps)
+    if cfg.moe is not None:
+        # dispatch mode per arch (MoEConfig.dispatch, §Perf pair-3 it.2
+        # + §Perf deepseek iteration): grouped wins for fine-grained
+        # many-expert MoE, flat for few-big-expert MoE
+        if cfg.moe.dispatch == "grouped":
+            y, aux = L.moe_block(p["moe"], h2, cfg)
+        else:
+            B, S, d = h2.shape
+            y, aux = L.moe_block(p["moe"], h2.reshape(B * S, d), cfg)
+            y = y.reshape(B, S, d)
+    else:
+        y = L.swiglu(h2, p["gate"], p["up"], p["down"])
+    return x + y, aux
+
+
+def forward(params, tokens, cfg: ModelConfig, *, prefix_emb=None,
+            use_kernels: bool = False, remat: bool = True):
+    """tokens (B,S) -> logits (B, P+S, V).  prefix_emb: (B,P,d) stub
+    embeddings (vlm patch / audio frame) prepended to the token stream."""
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), _dtype(cfg))
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", None, None)
+    S_total = x.shape[1]
+    positions = jnp.arange(S_total)
+
+    def body(p, carry, gflag):
+        x, aux_sum = carry
+        x = constrain(x, "batch", None, None)
+        x, aux = _layer_apply(p, x, cfg, gflag, positions, use_kernels)
+        return (x, aux_sum + aux), None
+
+    (x, aux_sum), _ = _run_layers(params["layers"], (x, jnp.float32(0.0)),
+                                  body, cfg, remat=remat)
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    return logits, aux_sum
+
+
+def backbone(params, tokens, cfg: ModelConfig, *, prefix_emb=None,
+             use_kernels: bool = False, remat: bool = True):
+    """Like ``forward`` but stops before the LM head: returns the final
+    hidden states (B, P+S, d) and the accumulated MoE aux loss."""
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), _dtype(cfg))
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])
+
+    def body(p, carry, gflag):
+        x, aux_sum = carry
+        x = constrain(x, "batch", None, None)
+        x, aux = _layer_apply(p, x, cfg, gflag, positions, use_kernels)
+        return (x, aux_sum + aux), None
+
+    (x, aux_sum), _ = _run_layers(params["layers"], (x, jnp.float32(0.0)),
+                                  body, cfg, remat=remat)
+    return L.rms_norm(x, params["final_norm"], cfg.rms_eps), aux_sum
+
+
+def chunked_ce(x, head, tokens, P: int, chunk: int):
+    """Sequence-chunked cross-entropy: never materializes the full
+    (B, S, V) logits — each lax.scan step computes a (B, chunk, V) slab.
+    ``head``: (d, V) projection.  Predicts tokens[:, 1:] from hidden
+    states at positions P .. P+S-2."""
+    B, S = tokens.shape
+    hs = x[:, P:P + S - 1]                       # (B, S-1, d) predictors
+    tgt = tokens[:, 1:]                          # (B, S-1)
+    n = S - 1
+    pad = (-n) % chunk
+    if pad:
+        hs = jnp.pad(hs, ((0, 0), (0, pad), (0, 0)))
+        tgt = jnp.pad(tgt, ((0, 0), (0, pad)))
+    nchunk = (n + pad) // chunk
+    hs = hs.reshape(B, nchunk, chunk, -1).swapaxes(0, 1)
+    tgt = tgt.reshape(B, nchunk, chunk).swapaxes(0, 1)
+    cmask = (jnp.arange(nchunk * chunk).reshape(nchunk, chunk)[:, None, :]
+             < n).astype(jnp.float32)            # (nchunk, 1, chunk)
+
+    def step(tot, args):
+        h, t, m = args
+        logits = (h @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum((logz - gold) * m), None
+
+    tot, _ = jax.lax.scan(step, jnp.float32(0.0), (hs, tgt, cmask))
+    return tot / (B * n)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, use_kernels: bool = False,
+            remat: bool = True, logit_chunk: Optional[int] = None):
+    """Next-token cross-entropy.  batch: {"tokens": (B,S)} (+"prefix_emb").
+
+    Returns (loss, metrics).  Loss is mean over predicted positions; MoE
+    aux load-balance loss is added (per-layer mean).  ``logit_chunk``:
+    compute the CE in sequence chunks of this size (memory-bounded LM
+    head for large-vocab archs — the (B,S,V) logits never materialize).
+    """
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_emb")
+    P = 0 if prefix is None else prefix.shape[1]
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    if logit_chunk is not None:
+        x, aux = backbone(params, tokens, cfg, prefix_emb=prefix,
+                          use_kernels=use_kernels, remat=remat)
+        ce = chunked_ce(x, head, tokens, P, logit_chunk)
+    else:
+        logits, aux = forward(params, tokens, cfg, prefix_emb=prefix,
+                              use_kernels=use_kernels, remat=remat)
+        pred = logits[:, P:-1].astype(jnp.float32)       # predicts tokens[1:]
+        tgt = tokens[:, 1:]
+        logz = jax.nn.logsumexp(pred, axis=-1)
+        gold = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(logz - gold)
+    total = ce + aux / max(cfg.num_layers, 1)
+    return total, {"ce": ce, "aux": aux / max(cfg.num_layers, 1)}
+
+
+# --------------------------------------------------------------------
+# KV / state cache + decode
+# --------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    dt = _dtype(cfg)
+    Ln = cfg.num_layers
+    cache = {}
+    if _has_attn(cfg):
+        hd = cfg.resolved_head_dim
+        cache["k"] = jnp.zeros((Ln, batch, cache_len, cfg.num_kv_heads, hd), dt)
+        cache["v"] = jnp.zeros((Ln, batch, cache_len, cfg.num_kv_heads, hd), dt)
+    if _has_mamba(cfg):
+        ssm = cfg.ssm
+        di = cfg.d_inner
+        cache["conv"] = jnp.zeros((Ln, batch, ssm.conv_dim - 1, di), dt)
+        cache["ssm"] = jnp.zeros((Ln, batch, di, ssm.state_dim), dt)
+    return cache
+
+
+def _decode_layer(p, x, cfg: ModelConfig, is_global, cache_slice, pos, C):
+    """One layer, one token.  cache_slice: this layer's cache entries
+    (already containing slots for positions < pos).  Returns (x, new_slice)."""
+    new_cache = {}
+    if cfg.arch_type == "ssm":
+        h = L.rms_norm(x, p["norm"], cfg.rms_eps)
+        y, conv, ssm = L.mamba_decode(p["mamba"], h, cfg,
+                                      cache_slice["conv"], cache_slice["ssm"])
+        return x + y, {"conv": conv, "ssm": ssm}
+    h = L.rms_norm(x, p["attn_norm"], cfg.rms_eps)
+    k_new, v_new = L.project_kv_one(p["attn"], h, cfg, pos)
+    slot = jnp.mod(jnp.asarray(pos), C)
+    if slot.ndim == 0:                   # lockstep batch: one slot
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_slice["k"], k_new, slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_slice["v"], v_new, slot, axis=1)
+    else:                                # per-request positions (B,)
+        B = k_new.shape[0]
+        rows = jnp.arange(B)
+        k_cache = cache_slice["k"].at[rows, slot].set(k_new[:, 0])
+        v_cache = cache_slice["v"].at[rows, slot].set(v_new[:, 0])
+    new_cache["k"], new_cache["v"] = k_cache, v_cache
+    window = None
+    if cfg.sliding_window is not None:
+        window = jnp.where(is_global, L.GLOBAL_WINDOW, cfg.sliding_window)
+    pos_c = jnp.asarray(pos)[..., None]                  # (1,) or (B,1)
+    kv_pos = pos_c - jnp.mod(pos_c - jnp.arange(C), C)   # (C,) or (B,C)
+    a = L.decode_attention(p["attn"], h, cfg, k_cache, v_cache, pos,
+                           window=window, kv_pos_of_slot=kv_pos)
+    if cfg.hybrid:
+        m, conv, ssm = L.mamba_decode(p["mamba"], h, cfg,
+                                      cache_slice["conv"], cache_slice["ssm"])
+        a = 0.5 * (a + m)
+        new_cache["conv"], new_cache["ssm"] = conv, ssm
+    x = x + a
+    h2 = L.rms_norm(x, p["mlp_norm"], cfg.rms_eps)
+    if cfg.moe is not None:
+        B = h2.shape[0]
+        y, _ = L.moe_block(p["moe"], h2.reshape(B, -1), cfg)
+        y = y.reshape(B, 1, -1)
+    else:
+        y = L.swiglu(h2, p["gate"], p["up"], p["down"])
+    return x + y, new_cache
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig):
+    """token (B,) int32, pos scalar int32 -> (logits (B,V), new cache)."""
+    x = params["embed"][token][:, None, :] * jnp.asarray(
+        math.sqrt(cfg.d_model), _dtype(cfg))
+    is_global = layer_is_global(cfg)
+    C = (cache["k"].shape[2] if "k" in cache else 0)
+
+    def body(x, scanned):
+        p, g, cache_slice = scanned
+        x, new_slice = _decode_layer(p, x, cfg, g, cache_slice, pos, C)
+        return x, new_slice
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], is_global, cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = x[:, 0] @ params["embed"].T
+    else:
+        logits = x[:, 0] @ params["lm_head"]
+    return logits, new_cache
+
+
+def _ring_scatter(kv, S_total: int, C: int):
+    """Place the last min(C, S_total) positions of kv (B,S,Hk,hd) into a
+    (B,C,Hk,hd) ring buffer at slot p % C (position p's canonical slot)."""
+    take = min(C, S_total)
+    positions = jnp.arange(S_total - take, S_total)
+    slots = jnp.mod(positions, C)
+    buf = jnp.zeros((kv.shape[0], C) + kv.shape[2:], kv.dtype)
+    return buf.at[:, slots].set(kv[:, -take:])
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *,
+            prefix_emb=None, use_kernels: bool = False,
+            last_only: bool = False):
+    """Forward pass that also fills the KV cache (first cache_len
+    positions).  Returns (logits (B, S_total, V), cache).
+
+    ``last_only=True`` computes logits for the final position only
+    (shape (B, 1, V)) — serving and the dry-run need just the next-token
+    distribution, and XLA does NOT dead-code the (B,S,V) head matmul +
+    vocab-parallel all-reduce through a later slice (§Perf Opt C)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), _dtype(cfg))
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(x.dtype), x], axis=1)
+    x = constrain(x, "batch", None, None)
+    S_total = x.shape[1]
+    positions = jnp.arange(S_total)
+
+    def body(p, carry, g):
+        x, = carry
+        x = constrain(x, "batch", None, None)
+        new_slice = {}
+        if cfg.arch_type == "ssm":
+            h = L.rms_norm(x, p["norm"], cfg.rms_eps)
+            # one scan yields y AND the decode state (§Perf Opt B);
+            # forward-only -> sequential sub-block scan (§Perf pair-1 it.2)
+            y, state = L.mamba_forward(p["mamba"], h, cfg,
+                                       use_kernel=use_kernels,
+                                       return_state=True,
+                                       scan_impl=os.environ.get(
+                                           "REPRO_SSM_SCAN", "seq"))
+            new_slice.update(state)
+            x = x + y
+            return (x,), new_slice
+        window, banded = L.plan_window(cfg, g, S_total)
+        h = L.rms_norm(x, p["attn_norm"], cfg.rms_eps)
+        q, k, v = L.qkv_project(p["attn"], h, cfg, positions)
+        if use_kernels:
+            from repro.kernels.flash_attention.ops import flash_attention
+            a = flash_attention(q, k, v, causal=True, window=window)
+        elif banded:
+            a = L.sdpa_banded(q, k, v, window=int(window))
+        else:
+            from repro.sharding import policy_model_size
+            if 0 < policy_model_size() \
+                    and cfg.num_heads < policy_model_size():
+                # see layers.attention: query-sequence sharding for
+                # few-head global attention (§Perf pair-2 it.2)
+                q = constrain(q, "batch", "model", None, None)
+                k = constrain(k, "batch", None, None, None)
+                v = constrain(v, "batch", None, None, None)
+                a = L.sdpa(q, k, v, causal=True, window=window)
+                a = constrain(a, "batch", None, None, None)
+            else:
+                a = L.sdpa(q, k, v, causal=True, window=window)
+        a = a.reshape(B, S_total, cfg.q_dim) @ p["attn"]["o"]
+        new_slice["k"] = _ring_scatter(k, S_total, cache_len)
+        new_slice["v"] = _ring_scatter(v, S_total, cache_len)
+        if cfg.hybrid:
+            m, state = L.mamba_forward(p["mamba"], h, cfg,
+                                       use_kernel=use_kernels,
+                                       return_state=True,
+                                       scan_impl=os.environ.get(
+                                           "REPRO_SSM_SCAN", "seq"))
+            new_slice.update(state)
+            a = 0.5 * (a + m)
+        x = x + a
+        h2 = L.rms_norm(x, p["mlp_norm"], cfg.rms_eps)
+        if cfg.moe is not None:
+            y, _ = L.moe_block(p["moe"], h2.reshape(B * S_total, -1), cfg)
+            y = y.reshape(B, S_total, -1)
+        else:
+            y = L.swiglu(h2, p["gate"], p["up"], p["down"])
+        return (x + y,), new_slice
+
+    (x,), cache = _run_layers(params["layers"], (x,), body, cfg)
+    if last_only:
+        x = x[:, -1:]
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    return logits, cache

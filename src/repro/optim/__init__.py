@@ -1,0 +1,117 @@
+"""Minimal functional optimizer library (no optax in this environment).
+
+API mirrors optax: an optimizer is a (init_fn, update_fn) pair where
+  state = init_fn(params)
+  updates, state = update_fn(grads, state, params)
+  params = apply_updates(params, updates)
+Updates are *added* to params (sign convention: update = -lr * direction).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ------------------------------------------------------------------
+# SGD (+ momentum / Nesterov) — DiLoCo's outer optimizer
+# ------------------------------------------------------------------
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return {"m": _zeros_like_f32(params)}
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads), state
+        m = jax.tree.map(lambda m_, g: momentum * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m_, g: -lr * (momentum * m_ + g.astype(jnp.float32)),
+                m, grads)
+        else:
+            upd = jax.tree.map(lambda m_: -lr * m_, m)
+        return upd, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def nesterov_outer(lr: float, momentum: float = 0.9) -> Optimizer:
+    """DiLoCo's outer optimizer: Nesterov momentum SGD applied to the
+    averaged pseudo-gradient (delta)."""
+    return sgd(lr, momentum=momentum, nesterov=True)
+
+
+# ------------------------------------------------------------------
+# AdamW — the inner optimizer
+# ------------------------------------------------------------------
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": _zeros_like_f32(params),
+            "v": _zeros_like_f32(params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        tf = t.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        mhat_scale = 1.0 / (1 - jnp.power(b1, tf))
+        vhat_scale = 1.0 / (1 - jnp.power(b2, tf))
+
+        def upd(m_, v_, p):
+            step = m_ * mhat_scale / (jnp.sqrt(v_ * vhat_scale) + eps)
+            return -lr * (step + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+# ------------------------------------------------------------------
+# AdaGrad (AdAdaGrad's base adaptive method)
+# ------------------------------------------------------------------
+
+def adagrad(lr: float, eps: float = 1e-10) -> Optimizer:
+    def init(params):
+        return {"acc": _zeros_like_f32(params)}
+
+    def update(grads, state, params=None):
+        acc = jax.tree.map(lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+                           state["acc"], grads)
+        updates = jax.tree.map(
+            lambda a, g: -lr * g.astype(jnp.float32) / (jnp.sqrt(a) + eps),
+            acc, grads)
+        return updates, {"acc": acc}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return {"sgd": sgd, "adamw": adamw, "adagrad": adagrad,
+            "nesterov": nesterov_outer}[name](lr, **kw)

@@ -1,0 +1,69 @@
+"""Batched serving loop: prefill + autoregressive decode with KV cache.
+
+Small but real: request batching, greedy/temperature sampling, ring-
+buffer sliding-window caches for long contexts, per-step jit caching.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class GenerationResult:
+    tokens: List[List[int]]          # per-request generated ids
+    steps: int
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _decode_jit(params, cache, token, pos, cfg):
+    return models.decode_step(params, cache, token, pos, cfg)
+
+
+def sample(logits, key, temperature: float):
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, *,
+             max_new_tokens: int = 32, temperature: float = 0.0,
+             cache_len: Optional[int] = None, seed: int = 0,
+             frames=None, prefix_emb=None) -> GenerationResult:
+    """prompts: (B, S_prompt) int32.  Greedy/temperature batched decode."""
+    B, S = prompts.shape
+    C = cache_len or (S + max_new_tokens)
+    if cfg.is_encoder_decoder:
+        assert frames is not None
+        cache = models.init_cache(cfg, params, B, C, frames=frames)
+        # teacher-force the prompt through decode steps
+        logits = None
+        for t in range(S):
+            logits, cache = _decode_jit(params, cache, prompts[:, t],
+                                        jnp.int32(t), cfg)
+    else:
+        logits_all, cache = models.prefill(params, prompts, cfg, C,
+                                           prefix_emb=prefix_emb,
+                                           last_only=True)
+        logits = logits_all[:, -1]
+    key = jax.random.PRNGKey(seed)
+    out = []
+    tok = sample(logits, key, temperature)
+    pos0 = S + (0 if prefix_emb is None else prefix_emb.shape[1])
+    for i in range(max_new_tokens):
+        out.append(tok)
+        key, sub = jax.random.split(key)
+        logits, cache = _decode_jit(params, cache, tok,
+                                    jnp.int32(pos0 + i), cfg)
+        tok = sample(logits, sub, temperature)
+    stacked = jnp.stack(out, axis=1)                    # (B, new)
+    return GenerationResult(
+        tokens=[list(map(int, row)) for row in jax.device_get(stacked)],
+        steps=max_new_tokens)

@@ -1,0 +1,129 @@
+"""Continuous batching: a slot-based scheduler over the per-request-
+position decode path (``decode_step`` with a (B,) ``pos`` vector).
+
+Requests join mid-flight: a finished slot is immediately refilled from
+the queue (prefill writes the new request's KV into that slot's rows of
+the shared batched cache), so the decode batch never drains to run one
+straggler — the serving-side analogue of the paper's "keep hardware
+busy" goal.
+
+Decoder-only architectures (dense / moe / ssm / hybrid).  Greedy
+sampling (extend ``_select`` for temperature).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: List[int]                    # prompt
+    max_new_tokens: int = 16
+    generated: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _decode_vec(params, cache, token, pos, cfg):
+    return models.decode_step(params, cache, token, pos, cfg)
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batcher.
+
+    ``cache_len`` bounds prompt+generation length per request.  All
+    slots share one batched cache pytree (leaves (L, n_slots, ...)), so
+    a single jitted ``decode_step`` serves every active request at its
+    own position each step.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
+                 cache_len: int = 128):
+        assert not cfg.is_encoder_decoder, \
+            "continuous batching supports decoder-only archs"
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.cache = models.init_cache(cfg, params, n_slots, cache_len)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.pos = np.zeros((n_slots,), np.int32)        # next position
+        self.last_token = np.zeros((n_slots,), np.int32)
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self.steps = 0
+
+    # ------------------------------------------------------------- API
+    def submit(self, req: Request) -> None:
+        assert len(req.tokens) + req.max_new_tokens <= self.cache_len, \
+            "request exceeds cache_len"
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        """Drive until queue and slots drain; returns finished requests."""
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.finished
+
+    # ----------------------------------------------------------- internals
+    def _admit(self) -> None:
+        """Fill free slots from the queue (prefill into slot rows)."""
+        for i in range(self.n_slots):
+            if self.slot_req[i] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray([req.tokens], jnp.int32)       # (1, S)
+            logits, pcache = models.prefill(
+                self.params, prompt, self.cfg, self.cache_len,
+                last_only=True)
+            # write the single-request cache into slot i
+            self.cache = jax.tree.map(
+                lambda big, small: big.at[:, i].set(small[:, 0]),
+                self.cache, pcache)
+            self.slot_req[i] = req
+            self.pos[i] = len(req.tokens)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.generated.append(tok)
+            self.last_token[i] = tok
+            self._retire(i)
+
+    def _retire(self, i: int) -> None:
+        req = self.slot_req[i]
+        if req is not None and req.done:
+            self.finished[req.rid] = req
+            self.slot_req[i] = None
+            self.pos[i] = 0
+
+    def step(self) -> None:
+        """One scheduler tick: admit, one batched decode, retire."""
+        self._admit()
+        active = [i for i in range(self.n_slots)
+                  if self.slot_req[i] is not None]
+        if not active:
+            return
+        tokens = jnp.asarray(self.last_token, jnp.int32)
+        pos = jnp.asarray(self.pos, jnp.int32)               # (n_slots,)
+        logits, self.cache = _decode_vec(self.params, self.cache,
+                                         tokens, pos, self.cfg)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.steps += 1
+        for i in active:
+            req = self.slot_req[i]
+            req.generated.append(int(nxt[i]))
+            self.last_token[i] = nxt[i]
+            self.pos[i] += 1
+            self._retire(i)

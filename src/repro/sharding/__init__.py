@@ -1,0 +1,244 @@
+"""Parameter / activation partition rules.
+
+Rules map parameter-path regexes to logical PartitionSpecs over the
+("data", "model") axes (+"pod" on the multi-pod mesh, used only by the
+pod-spanning variants).  Conventions (Megatron-style 1D tensor
+parallelism, TPU-adapted):
+
+  * projections writing a model-parallel feature dim (q/k/v, gate/up,
+    mamba in_proj/dt_w/conv, expert gate/up) shard their LAST axis;
+  * projections contracting a model-parallel dim (o, down, expert down,
+    mamba out_proj/x_proj) shard their FIRST (or middle, for stacked
+    experts) axis — GSPMD inserts the reduce-scatter/all-reduce;
+  * embeddings shard the vocab axis ("model") so the LM head matmul and
+    softmax are vocab-parallel;
+  * norms / scalar vectors / routers are replicated;
+  * everything under "layers"/"enc_layers"/"dec_layers" carries a
+    leading stacked-layer axis -> prepend None.
+
+Feature dims here are all divisible by 16 for every assigned arch
+(q_dim, kv_dim, d_ff, d_inner, d_expert — checked in tests).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex on keystr path, spec WITHOUT the stacked-layer axis)
+_RULES = [
+    # embeddings / head
+    (r"\['embed'\]$", P("model", None)),
+    (r"\['lm_head'\]$", P(None, "model")),
+    # attention
+    (r"\['attn'\]\['q'\]$", P(None, "model")),
+    (r"\['attn'\]\['k'\]$", P(None, "model")),
+    (r"\['attn'\]\['v'\]$", P(None, "model")),
+    (r"\['attn'\]\['o'\]$", P("model", None)),
+    (r"\['xattn'\]\['q'\]$", P(None, "model")),
+    (r"\['xattn'\]\['k'\]$", P(None, "model")),
+    (r"\['xattn'\]\['v'\]$", P(None, "model")),
+    (r"\['xattn'\]\['o'\]$", P("model", None)),
+    (r"\['(q|k)_norm'\]$", P(None)),
+    # dense mlp (swiglu)
+    (r"\['gate'\]$", P(None, "model")),
+    (r"\['up'\]$", P(None, "model")),
+    (r"\['down'\]$", P("model", None)),
+    # whisper gelu mlp
+    (r"\['mlp'\]\['up'\]$", P(None, "model")),
+    (r"\['mlp'\]\['up_b'\]$", P("model")),
+    (r"\['mlp'\]\['down'\]$", P("model", None)),
+    (r"\['mlp'\]\['down_b'\]$", P(None)),
+    # MoE: experts tensor-parallel on d_expert (uniform across E)
+    (r"\['moe'\]\['router'\]$", P(None, None)),
+    (r"\['moe'\]\['gate'\]$", P(None, None, "model")),
+    (r"\['moe'\]\['up'\]$", P(None, None, "model")),
+    (r"\['moe'\]\['down'\]$", P(None, "model", None)),
+    (r"\['moe'\]\['s_gate'\]$", P(None, None, "model")),
+    (r"\['moe'\]\['s_up'\]$", P(None, None, "model")),
+    (r"\['moe'\]\['s_down'\]$", P(None, "model", None)),
+    # mamba
+    (r"\['mamba'\]\['in_proj'\]$", P(None, "model")),
+    (r"\['mamba'\]\['conv_w'\]$", P(None, "model")),
+    (r"\['mamba'\]\['conv_b'\]$", P("model")),
+    (r"\['mamba'\]\['x_proj'\]$", P("model", None)),
+    (r"\['mamba'\]\['dt_w'\]$", P(None, "model")),
+    (r"\['mamba'\]\['dt_b'\]$", P("model")),
+    (r"\['mamba'\]\['A_log'\]$", P("model", None)),
+    (r"\['mamba'\]\['D'\]$", P("model")),
+    (r"\['mamba'\]\['out_proj'\]$", P("model", None)),
+    # norms
+    (r"norm", P(None)),
+]
+
+_STACKED = re.compile(r"\['(layers|enc_layers|dec_layers)'\]")
+
+
+def spec_for_path(path_str: str, ndim: int) -> P:
+    base: Optional[P] = None
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            base = spec
+            break
+    if base is None:
+        base = P()
+    parts = list(base)
+    if _STACKED.search(path_str):
+        parts = [None] + parts
+    # pad/trim to ndim
+    parts = parts[:ndim] + [None] * (ndim - len(parts))
+    return P(*parts)
+
+
+def _add_fsdp(spec: P, shape, path_str: str, fsdp_size: int,
+              min_size: int = 4096) -> P:
+    """ZeRO-style sharding: put "data" on the largest still-replicated
+    matrix dim that divides evenly.  Keeps optimizer/grad memory
+    O(params/chips) instead of O(params/model_parallelism) — required to
+    fit the 314B-class configs (see DESIGN.md §3)."""
+    parts = list(spec)
+    start = 1 if _STACKED.search(path_str) else 0
+    if len(shape) - start < 2:
+        return spec              # vectors: not worth gathering
+    cands = [(shape[i], i) for i in range(start, len(shape))
+             if parts[i] is None and shape[i] % fsdp_size == 0
+             and shape[i] >= min_size]
+    if not cands:
+        return spec
+    _, i = max(cands)
+    parts[i] = "data"
+    return P(*parts)
+
+
+def _fix_divisibility(spec: P, shape, model_size: int) -> P:
+    """Drop (or relocate) "model" from dims it doesn't divide — e.g.
+    vocab 51865 (whisper) / 32001 (hymba).  Relocates to the largest
+    divisible still-replicated dim when one exists."""
+    parts = list(spec)
+    for i, ax in enumerate(parts):
+        if ax == "model" and shape[i] % model_size != 0:
+            parts[i] = None
+            cands = [(shape[j], j) for j in range(len(shape))
+                     if parts[j] is None and shape[j] % model_size == 0
+                     and shape[j] >= model_size]
+            if cands:
+                _, j = max(cands)
+                parts[j] = "model"
+    return P(*parts)
+
+
+def param_specs(params, *, fsdp_size: int = 0, model_size: int = 16) -> dict:
+    """Pytree of PartitionSpecs matching ``params``.  ``fsdp_size`` > 0
+    additionally shards large matrices over the "data" axis (must divide
+    the chosen dim)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for p, leaf in flat:
+        ps = jax.tree_util.keystr(p)
+        spec = spec_for_path(ps, leaf.ndim)
+        spec = _fix_divisibility(spec, leaf.shape, model_size)
+        if fsdp_size:
+            spec = _add_fsdp(spec, leaf.shape, ps, fsdp_size)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, mesh: Mesh, *, fsdp: bool = False):
+    fsdp_size = mesh.shape.get("data", 1) if fsdp else 0
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params, fsdp_size=fsdp_size,
+                    model_size=mesh.shape.get("model", 1)))
+
+
+def opt_state_specs(opt_state, *, fsdp_size: int = 0, model_size: int = 16):
+    """Optimizer moments mirror parameter sharding; scalars replicated."""
+    def like(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        # moments live under ['m']/['v']/['acc'] with the same sub-path
+        sub = re.sub(r"^\['(m|v|acc)'\]", "", ps)
+        spec = spec_for_path(sub, leaf.ndim)
+        spec = _fix_divisibility(spec, leaf.shape, model_size)
+        if fsdp_size:
+            spec = _add_fsdp(spec, leaf.shape, sub, fsdp_size)
+        return spec
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state)
+    return jax.tree_util.tree_unflatten(
+        treedef, [like(p, l) for p, l in flat])
+
+
+def opt_state_shardings(opt_state, mesh: Mesh, *, fsdp: bool = False):
+    fsdp_size = mesh.shape.get("data", 1) if fsdp else 0
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        opt_state_specs(opt_state, fsdp_size=fsdp_size,
+                        model_size=mesh.shape.get("model", 1)))
+
+
+def batch_specs(batch, mesh: Mesh) -> dict:
+    """Shard the batch axis over ("pod","data") (whichever exist)."""
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    def spec(leaf):
+        parts = [daxes] + [None] * (leaf.ndim - 1)
+        return P(*parts)
+    return jax.tree.map(spec, batch)
+
+
+# ------------------------------------------------------------------
+# activation sharding policy (§Perf Opt A)
+#
+# Without explicit constraints GSPMD may pick a catastrophic strategy for
+# FSDP'd weights: replicate the *batch* across the data axis and
+# all-reduce full (B,S,d) activations after every matmul (observed on
+# falcon-mamba-7b prefill — see EXPERIMENTS.md §Perf).  The policy pins
+# activations to batch-over-data so the partitioner is forced to
+# all-gather the (much smaller) weights instead.
+# ------------------------------------------------------------------
+
+_ACT_POLICY: "contextvars.ContextVar" = None  # set below
+
+import contextlib
+import contextvars
+
+_ACT_POLICY = contextvars.ContextVar("activation_policy", default=None)
+
+
+@contextlib.contextmanager
+def activation_policy(batch_axes, model_axis: Optional[str] = "model",
+                      model_size: int = 0):
+    """Enable activation constraints inside model forward fns.  Use while
+    tracing/lowering under a mesh context; host-CPU runs leave it unset
+    (constrain() is then a no-op).  ``model_size`` lets layers decide
+    head-sharding feasibility (e.g. 8 heads on a 16-way axis)."""
+    tok = _ACT_POLICY.set({"batch": tuple(batch_axes), "model": model_axis,
+                           "model_size": model_size})
+    try:
+        yield
+    finally:
+        _ACT_POLICY.reset(tok)
+
+
+def policy_model_size() -> int:
+    pol = _ACT_POLICY.get()
+    return pol["model_size"] if pol else 0
+
+
+def constrain(x, *dims):
+    """with_sharding_constraint(x, spec) where dims name each axis:
+    "batch" -> policy batch axes, "model" -> policy model axis,
+    None -> replicated.  No-op when no policy is active."""
+    pol = _ACT_POLICY.get()
+    if pol is None:
+        return x
+    parts = []
+    for d in dims:
+        if d == "batch":
+            parts.append(pol["batch"] or None)
+        elif d == "model":
+            parts.append(pol["model"])
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*parts))

@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches see the real single CPU device — the 512-device
+# override belongs to launch/dryrun.py ONLY (see system design docs).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

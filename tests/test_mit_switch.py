@@ -1,0 +1,210 @@
+"""Tests for CheckMerge/DoMerge (Algorithms 1-2), SwitchMode, comms
+metering, and the DiLoCo step primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.core.comms import CommsMeter, param_bytes
+from repro.core.diloco import (StepCache, make_inner_step, make_outer_step,
+                               merge_params, reshape_for_plan)
+from repro.core.mit import (TrainerPoolState, TrainerState, check_merge,
+                            consolidate, do_merge)
+from repro.core.switch import plan_execution
+
+
+# ------------------------------------------------------------------
+# CheckMerge (Algorithm 1)
+# ------------------------------------------------------------------
+
+def test_check_merge_selects_w_worst():
+    assert check_merge([10, 2, 7, 5], 2) == [1, 3]
+
+
+def test_check_merge_empty_cases():
+    assert check_merge([5], 1) == []          # k <= 1
+    assert check_merge([5, 6], 0) == []       # w == 0
+    assert check_merge([5, 6], 3) == []       # w > k
+
+
+def test_check_merge_ties_stable():
+    assert check_merge([3, 3, 3], 2) == [0, 1]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 1000), min_size=2, max_size=16),
+       st.integers(1, 16))
+def test_property_check_merge_returns_minima(batches, w):
+    ids = check_merge(batches, w)
+    if w > len(batches):
+        assert ids == []
+    else:
+        assert len(ids) == w
+        chosen = sorted(batches[i] for i in ids)
+        rest = sorted(batches[i] for i in range(len(batches)) if i not in ids)
+        assert all(c <= r for c, r in zip(chosen[-1:], rest[:1]))
+
+
+# ------------------------------------------------------------------
+# DoMerge (Algorithm 2)
+# ------------------------------------------------------------------
+
+def _mk_pool(params_list, breqs):
+    trainers = [TrainerState(tid=i, params=p, outer_opt_state=(),
+                             inner_opt_states=[()], requested_batch=b,
+                             streams=[f"s{i}"])
+                for i, (p, b) in enumerate(zip(params_list, breqs))]
+    return TrainerPoolState(trainers=trainers)
+
+
+def test_merge_weighted_average_exact():
+    p1 = {"w": jnp.asarray([1.0, 1.0])}
+    p2 = {"w": jnp.asarray([4.0, 0.0])}
+    pool = _mk_pool([p1, p2], [1, 3])
+    pool = do_merge(pool, [0, 1], step=1)
+    assert pool.k == 1
+    merged = pool.trainers[0].params["w"]
+    np.testing.assert_allclose(np.asarray(merged), [3.25, 0.25], rtol=1e-6)
+    # representative is the max-b trainer
+    assert pool.trainers[0].tid == 1
+
+
+def test_merge_conserves_weighted_mean_property():
+    rng = np.random.default_rng(0)
+    ps = [{"w": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+          for _ in range(4)]
+    bs = [2, 9, 4, 1]
+    pool = _mk_pool(ps, bs)
+    ids = [0, 3, 2]
+    expect = sum(b * np.asarray(ps[i]["w"]) for i, b in
+                 zip(ids, [bs[i] for i in ids])) / sum(bs[i] for i in ids)
+    pool = do_merge(pool, ids, step=1)
+    assert pool.k == 2
+    rep = [t for t in pool.trainers if t.tid == 2][0]   # b=4 is max of set
+    np.testing.assert_allclose(np.asarray(rep.params["w"]), expect,
+                               rtol=1e-5)
+
+
+def test_merge_pool_contracts_and_streams_union():
+    ps = [{"w": jnp.ones(2) * i} for i in range(3)]
+    pool = _mk_pool(ps, [1, 2, 3])
+    pool = do_merge(pool, [0, 1], step=1)
+    assert pool.k == 2
+    rep = [t for t in pool.trainers if t.tid == 1][0]
+    assert set(rep.streams) == {"s0", "s1"}
+    assert pool.comms.events == 1
+
+
+def test_consolidate_single_trainer_no_comm():
+    pool = _mk_pool([{"w": jnp.ones(2)}], [4])
+    pool = consolidate(pool, step=9)
+    assert pool.comms.events == 0
+    np.testing.assert_allclose(np.asarray(pool.global_params["w"]), 1.0)
+
+
+# ------------------------------------------------------------------
+# SwitchMode (paper §4.2)
+# ------------------------------------------------------------------
+
+def test_switch_plain_below_max():
+    p = plan_execution(5, 64, 2)
+    assert p.mode == "plain" and p.accum_steps == 1
+    assert p.micro_batch <= 64
+
+
+def test_switch_band_no_accum():
+    """max_batch < b_req <= n*max_batch: stay plain, cap at max_batch."""
+    p = plan_execution(100, 64, 2)
+    assert p.mode == "plain"
+    assert p.micro_batch == 64 and p.accum_steps == 1
+
+
+def test_switch_accumulates_beyond_n_times_max():
+    p = plan_execution(300, 64, 2, bucket=False)
+    assert p.mode == "accum"
+    assert p.micro_batch == 64
+    assert p.accum_steps == 5          # ceil(300/64)
+
+
+def test_switch_bucketing_powers_of_two():
+    p = plan_execution(300, 64, 2, bucket=True)
+    assert p.accum_steps == 8          # next pow2 of 5
+    p2 = plan_execution(23, 64, 2, bucket=True)
+    assert p2.micro_batch == 32
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 10_000), st.integers(1, 256), st.integers(1, 4))
+def test_property_switch_effective_batch_covers_request(b_req, mx, n):
+    p = plan_execution(b_req, mx, n, bucket=False)
+    if p.mode == "accum":
+        assert p.effective_batch >= b_req
+        assert b_req > n * mx
+    else:
+        assert p.micro_batch == min(b_req, mx)
+
+
+# ------------------------------------------------------------------
+# DiLoCo primitives
+# ------------------------------------------------------------------
+
+def _quad_loss(params, batch):
+    r = batch["A"] @ params["x"] - batch["y"]
+    return 0.5 * jnp.mean(jnp.square(r)), {}
+
+
+def test_accum_equals_big_batch_gradient():
+    """One inner step with accum=4 micro-batches == one step on the full
+    batch (gradient averaging correctness of SwitchMode)."""
+    rng = np.random.default_rng(3)
+    A = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(32), jnp.float32)
+    params = {"x": jnp.zeros(8)}
+    opt = optim.sgd(0.1)
+
+    s1 = make_inner_step(_quad_loss, opt, 1)
+    s4 = make_inner_step(_quad_loss, opt, 4)
+    batch_full = {"A": A[None], "y": y[None]}
+    batch_micro = {"A": A.reshape(4, 8, 8), "y": y.reshape(4, 8)}
+    p1, _, _, g1 = s1(params, opt.init(params), batch_full)
+    p4, _, _, g4 = s4(params, opt.init(params), batch_micro)
+    np.testing.assert_allclose(np.asarray(p1["x"]), np.asarray(p4["x"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g1["x"]), np.asarray(g4["x"]),
+                               rtol=1e-5)
+
+
+def test_outer_step_moves_toward_worker_mean():
+    """With lr_outer=1, momentum=0: x_new = mean(workers)."""
+    opt = optim.sgd(1.0)
+    outer = make_outer_step(opt)
+    x_prev = {"x": jnp.zeros(4)}
+    workers = {"x": jnp.asarray([[1.0, 2, 3, 4], [3.0, 2, 1, 0]])}
+    x_new, _ = outer(x_prev, workers, opt.init(x_prev))
+    np.testing.assert_allclose(np.asarray(x_new["x"]), [2, 2, 2, 2],
+                               rtol=1e-6)
+
+
+def test_step_cache_buckets():
+    opt = optim.sgd(0.1)
+    cache = StepCache(_quad_loss, opt)
+    p1 = plan_execution(8, 64, 2)
+    p2 = plan_execution(8, 64, 2)
+    p3 = plan_execution(300, 64, 2)
+    cache.get(p1); cache.get(p2); cache.get(p3)
+    assert cache.num_compiled == 2
+
+
+def test_comms_meter_ring_model():
+    m = CommsMeter()
+    m.record("outer", participants=4, payload_bytes=100, step=1)
+    # 2*(p-1)/p * payload * p = 2*3*100 = 600
+    assert m.total_bytes == 600
+    assert m.events == 1
+
+
+def test_param_bytes():
+    tree = {"a": jnp.zeros((4, 4), jnp.float32), "b": jnp.zeros(8, jnp.bfloat16)}
+    assert param_bytes(tree) == 4 * 4 * 4 + 8 * 2

@@ -1,0 +1,109 @@
+"""Optimizer unit tests against closed forms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+
+
+def _step(opt, params, grads, state=None):
+    state = opt.init(params) if state is None else state
+    upd, state = opt.update(grads, state, params)
+    return optim.apply_updates(params, upd), state
+
+
+def test_sgd_plain_closed_form():
+    opt = optim.sgd(0.1)
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([10.0, -10.0])}
+    p1, _ = _step(opt, p, g)
+    np.testing.assert_allclose(p1["w"], [0.0, 3.0], atol=1e-6)
+
+
+def test_sgd_momentum_accumulates():
+    opt = optim.sgd(1.0, momentum=0.5)
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    p, st_ = _step(opt, p, g)
+    np.testing.assert_allclose(p["w"], [-1.0])       # m=1
+    p, st_ = _step(opt, p, g, st_)
+    np.testing.assert_allclose(p["w"], [-2.5])       # m=1.5
+
+
+def test_nesterov_lookahead():
+    opt = optim.nesterov_outer(1.0, momentum=0.5)
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    p, st_ = _step(opt, p, g)
+    # m=1; update = -(0.5*1 + 1) = -1.5
+    np.testing.assert_allclose(p["w"], [-1.5])
+
+
+def test_adamw_first_step_is_lr_sized():
+    """After one step from zero state, |update| ~= lr regardless of
+    gradient scale (bias-corrected)."""
+    opt = optim.adamw(1e-2)
+    for scale in (1e-3, 1.0, 1e3):
+        p = {"w": jnp.zeros(3)}
+        g = {"w": jnp.full((3,), scale)}
+        p1, _ = _step(opt, p, g)
+        np.testing.assert_allclose(p1["w"], -1e-2 * np.ones(3), rtol=1e-3)
+
+
+def test_adamw_weight_decay_decoupled():
+    opt = optim.adamw(0.1, weight_decay=0.5)
+    p = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([0.0])}
+    p1, _ = _step(opt, p, g)
+    # zero grad -> pure decay: p - lr*wd*p = 2 - 0.1*0.5*2
+    np.testing.assert_allclose(p1["w"], [1.9], atol=1e-6)
+
+
+def test_adagrad_closed_form():
+    opt = optim.adagrad(1.0)
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.asarray([2.0])}
+    p, st_ = _step(opt, p, g)
+    np.testing.assert_allclose(p["w"], [-1.0], atol=1e-5)   # g/sqrt(g^2)
+    p, st_ = _step(opt, p, g, st_)
+    np.testing.assert_allclose(p["w"], [-1.0 - 2.0 / np.sqrt(8.0)],
+                               atol=1e-5)
+
+
+def test_bf16_params_keep_f32_state():
+    opt = optim.adamw(1e-3)
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st_ = opt.init(p)
+    assert st_["m"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    upd, st_ = opt.update(g, st_, p)
+    p2 = optim.apply_updates(p, upd)
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(1e-4, 0.5), st.integers(1, 5))
+def test_property_sgd_descends_quadratic(lr, steps):
+    """SGD on f(w) = 0.5 w^2 never increases f for lr < 1."""
+    opt = optim.sgd(lr)
+    w = jnp.asarray([1.0])
+    st_ = opt.init({"w": w})
+    f = lambda w: 0.5 * float(w[0]) ** 2  # noqa: E731
+    prev = f(w)
+    p = {"w": w}
+    for _ in range(steps):
+        g = {"w": p["w"]}
+        p, st_ = _step(opt, p, g, st_)
+        cur = f(p["w"])
+        assert cur <= prev + 1e-9
+        prev = cur
+
+
+def test_get_optimizer_registry():
+    for name in ("sgd", "adamw", "adagrad", "nesterov"):
+        opt = optim.get_optimizer(name, 1e-3)
+        assert isinstance(opt, optim.Optimizer)
+    with pytest.raises(KeyError):
+        optim.get_optimizer("lion", 1e-3)

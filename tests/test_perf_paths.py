@@ -1,0 +1,173 @@
+"""Correctness of the §Perf optimization paths against their reference
+implementations (EXPERIMENTS.md §Perf): banded sliding-window attention,
+sequential sub-block SSM scan, grouped layer scan, grouped MoE dispatch,
+and last-only prefill logits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import models
+from repro.configs import get_config, reduced
+from repro.models import layers as L
+import repro.models.lm as lm
+
+
+# ----------------------------------------------- banded attention
+
+def _qkv(key, B, S, H, Hk, hd):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (B, S, H, hd)),
+            jax.random.normal(ks[1], (B, S, Hk, hd)),
+            jax.random.normal(ks[2], (B, S, Hk, hd)))
+
+
+@pytest.mark.parametrize("S,w", [(256, 64), (128, 32), (512, 128)])
+def test_banded_matches_masked_sdpa(S, w):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, S, 4, 2, 32)
+    ref = L.sdpa(q, k, v, causal=True, window=w)
+    got = L.sdpa_banded(q, k, v, window=w)
+    np.testing.assert_allclose(ref, got, atol=2e-5, rtol=2e-5)
+
+
+def test_banded_first_block_no_left_leak():
+    """Queries in block 0 must not see the zero-padded phantom block."""
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 128, 2, 1, 16)
+    ref = L.sdpa(q[:, :64], k[:, :64], v[:, :64], causal=True, window=64)
+    got = L.sdpa_banded(q, k, v, window=64)[:, :64]
+    np.testing.assert_allclose(ref, got, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4).map(lambda i: 2 ** i))
+def test_property_banded_any_window(wpow):
+    S = 4 * wpow
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, S, 2, 2, 8)
+    ref = L.sdpa(q, k, v, causal=True, window=wpow)
+    got = L.sdpa_banded(q, k, v, window=wpow)
+    np.testing.assert_allclose(ref, got, atol=3e-5, rtol=3e-5)
+
+
+# ----------------------------------------------- sequential SSM scan
+
+def _ssm_inputs(key, B=2, S=100, di=24, n=8):
+    ks = jax.random.split(key, 5)
+    u = jax.random.normal(ks[0], (B, S, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, di)) - 1)
+    A = jax.random.normal(ks[2], (di, n)) * 0.1
+    Bm = jax.random.normal(ks[3], (B, S, n))
+    Cm = jax.random.normal(ks[4], (B, S, n))
+    return u, dt, A, Bm, Cm
+
+
+def test_seq_scan_matches_chunked():
+    u, dt, A, Bm, Cm = _ssm_inputs(jax.random.PRNGKey(0))
+    y1, h1 = L.ssm_scan_chunked(u, dt, A, Bm, Cm)
+    y2, h2 = L.ssm_scan_seq(u, dt, A, Bm, Cm)
+    np.testing.assert_allclose(y1, y2, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(h1, h2, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(3, 70))
+def test_property_seq_scan_any_length(S):
+    u, dt, A, Bm, Cm = _ssm_inputs(jax.random.PRNGKey(3), B=1, S=S, di=8, n=4)
+    y1, h1 = L.ssm_scan_chunked(u, dt, A, Bm, Cm, chunk=16)
+    y2, h2 = L.ssm_scan_seq(u, dt, A, Bm, Cm, sub=8)
+    np.testing.assert_allclose(y1, y2, atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(h1, h2, atol=3e-5, rtol=3e-5)
+
+
+def test_mamba_forward_return_state_consistent():
+    """return_state must give the same state an explicit second scan
+    would (what prefill relied on before §Perf Opt B)."""
+    cfg = reduced(get_config("falcon-mamba-7b"))
+    p = L.init_mamba(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model))
+    out, state = L.mamba_forward(p, x, cfg, return_state=True)
+    out2 = L.mamba_forward(p, x, cfg)
+    np.testing.assert_allclose(out, out2, atol=1e-6)
+    assert state["ssm"].shape == (2, cfg.d_inner, cfg.ssm.state_dim)
+    assert state["conv"].shape == (2, cfg.ssm.conv_dim - 1, cfg.d_inner)
+
+
+# ----------------------------------------------- grouped layer scan
+
+def test_grouped_scan_matches_flat():
+    cfg = reduced(get_config("gemma3-4b")).with_overrides(
+        num_layers=8, global_every=4)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 128)), jnp.int32)
+    logits_grouped, _ = lm.forward(params, toks, cfg, remat=False)
+    orig = lm._grouped
+    lm._grouped = lambda c: None          # force the flat traced path
+    try:
+        logits_flat, _ = lm.forward(params, toks, cfg, remat=False)
+    finally:
+        lm._grouped = orig
+    np.testing.assert_allclose(
+        np.asarray(logits_grouped, np.float32),
+        np.asarray(logits_flat, np.float32), atol=2e-4, rtol=2e-4)
+
+
+def test_grouped_scan_with_tail_layers():
+    """num_layers not divisible by global_every -> unrolled tail."""
+    cfg = reduced(get_config("gemma3-4b")).with_overrides(
+        num_layers=7, global_every=3)
+    assert lm._grouped(cfg) == (2, 3, 1)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray([[1, 2, 3, 4] * 32], jnp.int32)
+    logits, aux = lm.forward(params, toks, cfg, remat=False)
+    assert logits.shape == (1, 128, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_grouped_prefill_cache_layer_order():
+    """Grouped prefill must stack cache slices in true layer order."""
+    cfg = reduced(get_config("gemma3-4b")).with_overrides(
+        num_layers=7, global_every=3)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray([[5, 6, 7, 8] * 32], jnp.int32)
+    logits, cache = lm.prefill(params, toks, cfg, cache_len=128)
+    assert cache["k"].shape[0] == cfg.num_layers
+    # decode continuation must agree with teacher-forced forward
+    nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    logits2, _ = lm.decode_step(params, cache, nxt, jnp.int32(128), cfg)
+    toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    ref_logits, _ = lm.forward(params, toks2, cfg, remat=False)
+    np.testing.assert_allclose(
+        np.asarray(logits2, np.float32),
+        np.asarray(ref_logits[:, -1], np.float32), atol=5e-2, rtol=5e-2)
+
+
+# ----------------------------------------------- grouped MoE dispatch
+
+def test_moe_grouped_matches_flat_when_capacity_ample():
+    cfg = reduced(get_config("deepseek-moe-16b"))
+    p = L.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model)) * 0.1
+    y3, aux3 = L.moe_block(p, x, cfg, capacity_factor=8.0)
+    yf, auxf = L.moe_block(p, x.reshape(64, cfg.d_model), cfg,
+                           capacity_factor=8.0)
+    np.testing.assert_allclose(y3.reshape(64, -1), yf, atol=1e-5, rtol=1e-4)
+
+
+# ----------------------------------------------- last-only prefill
+
+def test_prefill_last_only_matches_full():
+    cfg = reduced(get_config("qwen3-0.6b"))
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray([[3, 1, 4, 1, 5, 9, 2, 6]], jnp.int32)
+    full, cache_a = lm.prefill(params, toks, cfg, cache_len=16)
+    last, cache_b = lm.prefill(params, toks, cfg, cache_len=16,
+                               last_only=True)
+    assert last.shape == (1, 1, cfg.vocab_size)
+    np.testing.assert_allclose(
+        np.asarray(last[:, 0], np.float32),
+        np.asarray(full[:, -1], np.float32), atol=1e-4, rtol=1e-4)
+    for k in cache_a:
+        np.testing.assert_allclose(np.asarray(cache_a[k], np.float32),
+                                   np.asarray(cache_b[k], np.float32))

@@ -12,6 +12,7 @@ Emits ``name,us_per_call,derived`` CSV.
   thm2     comm_complexity.py    E[C(N)] = O(ln N)  (Theorem 2)
   kernel   kernels_bench.py      Pallas kernels vs jnp oracle
   roofline roofline_table.py     dry-run roofline baselines (40 pairs x 2 meshes)
+  cluster  cluster_bench.py      sync vs async vs elastic on simulated hardware
 """
 from __future__ import annotations
 
@@ -26,6 +27,7 @@ MODULES = [
     ("thm2", "benchmarks.comm_complexity"),
     ("kernel", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline_table"),
+    ("cluster", "benchmarks.cluster_bench"),
 ]
 
 

@@ -1,0 +1,58 @@
+"""repro.cluster — event-driven virtual-cluster runtime for AdLoCo.
+
+Runs real AdLoCo numerics (the same jitted ``TrainerRound`` primitives
+as ``repro.core.adloco``) over *simulated* heterogeneous nodes, so the
+paper's dynamic-workload scenarios — stragglers, slow links, trainers
+joining and leaving — can be exercised and timed without a physical
+cluster.
+
+Quick start::
+
+    from repro.cluster import (ClusterEvent, NetworkModel, run_cluster,
+                               make_heterogeneous_profiles)
+
+    profiles = make_heterogeneous_profiles(k * M, ratio=4.0, jitter=0.1)
+    pool, hist, report = run_cluster(loss_fn, inits, streams, acfg,
+                                     policy="async", profiles=profiles,
+                                     eval_fn=eval_fn)
+    # hist.sim_time x hist.eval_loss -> time-to-target under the sim clock
+
+Which sync policy should I use?
+-------------------------------
+``sync``
+    Barrier semantics identical to the legacy ``train_adloco`` loop.
+    Use it as the ground-truth baseline: with merging disabled the
+    parameter trajectory is bit-identical to the host loop, so any
+    simulated-time comparison is apples-to-apples.  Pick it when the
+    network is fast relative to a round (comm « compute) or when you
+    need exactly reproducible numerics.
+``async``
+    ACCO-style overlap: workers keep accumulating inner steps while the
+    outer all-reduce is in flight; the delayed pseudo-gradient applies
+    on arrival and workers rebase, keeping in-flight progress.  Pick it
+    when outer syncs are expensive — slow/lossy links, large models,
+    high heterogeneity (the slowest node's link bottlenecks the ring).
+    Expect a small loss-trajectory perturbation (one round of delay) in
+    exchange for hiding comm time entirely.
+``elastic``
+    ``async`` plus scripted :class:`ClusterEvent`s — trainers leave
+    (folded into the pool via ``mit.do_merge``) and join (cloned from
+    the most-advanced trainer onto spare nodes/streams).  Pick it to
+    study preemptible/spot capacity and pool-size dynamics; pass extra
+    streams and profiles beyond k*M to give joiners somewhere to land.
+
+``benchmarks/cluster_bench.py`` compares the three under 1x/2x/4x node
+heterogeneity; ``examples/heterogeneous_cluster.py`` is the narrated
+tour.
+"""
+from repro.cluster.network import NetworkModel
+from repro.cluster.node import (NodeProfile, Slowdown,
+                                make_heterogeneous_profiles)
+from repro.cluster.runtime import (POLICIES, ClusterEvent, ClusterReport,
+                                   run_cluster)
+
+__all__ = [
+    "POLICIES", "ClusterEvent", "ClusterReport", "NetworkModel",
+    "NodeProfile", "Slowdown", "make_heterogeneous_profiles",
+    "run_cluster",
+]

@@ -1,0 +1,49 @@
+"""Latency + bandwidth network cost model.
+
+Extends the byte accounting of ``repro.core.comms`` into *time*: a ring
+all-reduce over a set of :class:`~repro.cluster.node.NodeProfile`s is
+bottlenecked by the slowest participating link and pays per-hop latency
+on each of its 2(p−1) steps.  The cluster runtime uses this to decide
+how long an outer sync keeps a trainer (sync policy) or the wire (async
+policy) busy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.core.comms import TimedCommsMeter, ring_allreduce_time
+from repro.cluster.node import DEFAULT_LATENCY, NodeProfile
+
+
+@dataclass
+class NetworkModel:
+    """Cost model for collectives among virtual nodes.
+
+    ``bw_scale``/``extra_latency`` let scenarios degrade the fabric
+    globally (congestion) without touching per-node profiles.
+    """
+
+    bw_scale: float = 1.0
+    extra_latency: float = 0.0
+
+    def allreduce_time(self, payload_bytes: float,
+                       nodes: Sequence[NodeProfile]) -> float:
+        p = len(nodes)
+        if p <= 1:
+            return 0.0
+        bw = min(n.link_bw for n in nodes) * self.bw_scale
+        lat = max(n.link_latency for n in nodes) + self.extra_latency
+        return ring_allreduce_time(payload_bytes, p, bw, lat)
+
+    def point_to_point_time(self, payload_bytes: float, src: NodeProfile,
+                            dst: NodeProfile) -> float:
+        """One-directional transfer (elastic join: shipping params to a
+        fresh trainer)."""
+        bw = min(src.link_bw, dst.link_bw) * self.bw_scale
+        lat = max(src.link_latency, dst.link_latency) + self.extra_latency
+        return lat + payload_bytes / max(bw, 1.0)
+
+
+__all__ = ["NetworkModel", "TimedCommsMeter", "ring_allreduce_time",
+           "DEFAULT_LATENCY"]

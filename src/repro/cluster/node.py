@@ -1,0 +1,114 @@
+"""Virtual node profiles for the cluster runtime.
+
+A :class:`NodeProfile` is a two-term roofline (compute / HBM) plus a link
+spec, derived by default from the TPU v5e constants in
+``repro.launch.roofline``.  Heterogeneity is expressed as a per-node
+``speed`` scale (flops, HBM and link bandwidth all scale together — a
+slow node is slow end to end), stragglers as lognormal jitter on every
+round's compute time, and scheduled degradations as time-windowed
+slowdown factors.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+
+#: default per-hop link latency (s) — ICI-class interconnect
+DEFAULT_LATENCY = 1e-6
+
+
+@dataclass
+class Slowdown:
+    """Compute runs ``factor``x slower inside [start, end)."""
+
+    start: float
+    end: float
+    factor: float
+
+
+@dataclass
+class NodeProfile:
+    name: str
+    flops: float                    # peak FLOP/s
+    hbm_bw: float                   # bytes/s
+    link_bw: float                  # bytes/s on this node's NIC/ICI link
+    link_latency: float = DEFAULT_LATENCY
+    jitter: float = 0.0             # lognormal sigma on compute time
+    seed: int = 0
+    slowdowns: List[Slowdown] = field(default_factory=list)
+    _rng: Optional[np.random.Generator] = field(
+        default=None, repr=False, compare=False)
+
+    @classmethod
+    def from_roofline(cls, name: str = "v5e", *, speed: float = 1.0,
+                      jitter: float = 0.0, seed: int = 0,
+                      link_latency: float = DEFAULT_LATENCY,
+                      flops: Optional[float] = None,
+                      hbm_bw: Optional[float] = None,
+                      link_bw: Optional[float] = None) -> "NodeProfile":
+        """v5e-class node scaled by ``speed``; explicit overrides win
+        (benchmarks shrink the constants so toy problems land in a
+        regime where compute and comm times are comparable)."""
+        return cls(name=name,
+                   flops=(flops if flops is not None else PEAK_FLOPS) * speed,
+                   hbm_bw=(hbm_bw if hbm_bw is not None else HBM_BW) * speed,
+                   link_bw=(link_bw if link_bw is not None else LINK_BW)
+                   * speed,
+                   link_latency=link_latency, jitter=jitter, seed=seed)
+
+    def add_slowdown(self, start: float, duration: float,
+                     factor: float) -> None:
+        self.slowdowns.append(Slowdown(start, start + duration, factor))
+
+    def slow_factor(self, now: float) -> float:
+        f = 1.0
+        for s in self.slowdowns:
+            if s.start <= now < s.end:
+                f *= s.factor
+        return f
+
+    def compute_time(self, flops: float, bytes_accessed: float,
+                     now: float) -> float:
+        """Roofline step time max(compute, memory) under the node's
+        current slowdown, with optional straggler jitter (lognormal,
+        mean-one in log space, deterministic per node seed)."""
+        base = max(flops / max(self.flops, 1.0),
+                   bytes_accessed / max(self.hbm_bw, 1.0))
+        base *= self.slow_factor(now)
+        if self.jitter > 0.0:
+            if self._rng is None:
+                # crc32, not hash(): str hashing is salted per process
+                # and would break cross-run reproducibility
+                self._rng = np.random.default_rng(
+                    np.random.SeedSequence(
+                        [self.seed, zlib.crc32(self.name.encode())]))
+            base *= float(self._rng.lognormal(0.0, self.jitter))
+        return base
+
+
+def make_heterogeneous_profiles(n: int, ratio: float = 1.0, *,
+                                jitter: float = 0.0, seed: int = 0,
+                                link_latency: float = DEFAULT_LATENCY,
+                                flops: Optional[float] = None,
+                                hbm_bw: Optional[float] = None,
+                                link_bw: Optional[float] = None
+                                ) -> List[NodeProfile]:
+    """``n`` nodes with speeds geometrically spaced from 1.0 (node 0)
+    down to 1/ratio (node n-1) — the paper's "heterogeneous hardware"
+    axis.  ratio=1 is a homogeneous cluster."""
+    if n <= 0:
+        return []
+    profiles = []
+    for i in range(n):
+        expo = i / max(n - 1, 1)
+        speed = float(ratio) ** (-expo) if ratio > 0 else 1.0
+        profiles.append(NodeProfile.from_roofline(
+            name=f"node{i}", speed=speed, jitter=jitter, seed=seed + i,
+            link_latency=link_latency, flops=flops, hbm_bw=hbm_bw,
+            link_bw=link_bw))
+    return profiles

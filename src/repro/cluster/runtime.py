@@ -1,0 +1,440 @@
+"""Event-driven virtual-cluster runtime for AdLoCo.
+
+Drives the :class:`repro.core.adloco.TrainerRound` primitive over a set
+of simulated heterogeneous nodes (``node.py``) connected by a latency +
+bandwidth fabric (``network.py``).  Numerics are real — every inner and
+outer step runs through the same jitted code as the legacy host loop —
+while *time* is simulated: each round's compute is costed by the node
+roofline, each outer sync by the ring all-reduce model, and a heap of
+timestamped events decides what happens next.
+
+Sync policies
+-------------
+``sync``     Barrier semantics of ``train_adloco``: a trainer blocks on
+             its outer all-reduce before starting the next round.  With
+             identical configs (and merging disabled so trainers stay
+             independent) this reproduces the legacy loop bit-for-bit —
+             only the clock differs.
+``async``    ACCO-style overlap: workers keep accumulating inner steps
+             while the outer all-reduce is in flight.  The pseudo-
+             gradient is computed against the anchor captured at launch
+             and applied when the collective arrives; workers rebase
+             (``wp <- x_new + (wp - snapshot)``) at the first round
+             boundary after arrival, so in-flight progress is kept.
+             With a zero-cost network this degenerates to ``sync``.
+``elastic``  ``async`` + scenario events: trainers leave (their state is
+             folded into the pool via ``mit.do_merge``) and join
+             (cloning the most-advanced trainer onto spare nodes and
+             streams) mid-run.
+
+Simulation granularity: compute for a round is executed eagerly when the
+round is scheduled, so a collective that arrives mid-round takes effect
+at the next round boundary; a merge interrupts the in-flight round of
+the surviving representative (that round's compute is discarded, as a
+real preemption would).
+"""
+from __future__ import annotations
+
+import copy
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+
+from repro.configs.base import AdLoCoConfig
+from repro.core.adloco import History, RoundOutput, TrainerRound
+from repro.core.comms import TimedCommsMeter, param_bytes
+from repro.core.mit import (TrainerPoolState, check_merge, consolidate,
+                            do_merge)
+from repro.cluster.network import NetworkModel
+from repro.cluster.node import NodeProfile, make_heterogeneous_profiles
+
+POLICIES = ("sync", "async", "elastic")
+
+
+@dataclass
+class ClusterEvent:
+    """Scripted scenario event.
+
+    kind="slowdown": node ``node`` computes ``factor``x slower for
+        ``duration`` simulated seconds.
+    kind="leave":    trainer ``tid`` (default: smallest requested batch)
+        leaves; its knowledge is merged into the pool via ``do_merge``.
+    kind="join":     a new trainer joins on spare nodes/streams, cloned
+        from the most-advanced trainer.
+    """
+
+    time: float
+    kind: str
+    node: Optional[int] = None
+    tid: Optional[int] = None
+    factor: float = 2.0
+    duration: float = 0.0
+
+
+@dataclass
+class ClusterReport:
+    policy: str
+    sim_time: float = 0.0           # simulated seconds to drain the run
+    compute_time: float = 0.0       # sum of per-worker busy seconds
+    comm_time: float = 0.0          # sum of collective durations
+    num_syncs: int = 0
+    rounds: Dict[int, int] = field(default_factory=dict)   # tid -> rounds
+    applied_events: List[dict] = field(default_factory=list)
+
+    def summary(self) -> dict:
+        return {"policy": self.policy, "sim_time": self.sim_time,
+                "compute_time": self.compute_time,
+                "comm_time": self.comm_time, "num_syncs": self.num_syncs,
+                "rounds": dict(self.rounds)}
+
+
+@dataclass
+class _TrainerRT:
+    """Runtime bookkeeping wrapped around a TrainerState."""
+
+    tr: Any
+    nodes: List[NodeProfile]
+    target: int                     # rounds to run
+    round: int = 0                  # completed rounds
+    synced: int = 0                 # last round covered by a launched sync
+    gen: int = 0                    # bumped on merge/leave to drop stale events
+    alive: bool = True
+    inflight: bool = False
+    worker_params: Optional[List[Any]] = None   # None -> start from tr.params
+    pending: Optional[dict] = None  # arrived comm awaiting worker rebase
+    last_loss: float = 0.0          # mean loss of the last completed round
+
+
+class _Sim:
+    def __init__(self, loss_fn: Callable, acfg: AdLoCoConfig, *,
+                 policy: str, profiles: List[NodeProfile],
+                 network: NetworkModel, eval_fn: Optional[Callable],
+                 fixed_batch: Optional[int], verbose: bool):
+        self.rnd = TrainerRound(loss_fn, acfg)
+        self.acfg = acfg
+        self.policy = policy
+        self.profiles = profiles
+        self.network = network
+        self.eval_fn = eval_fn
+        self.fixed_batch = fixed_batch
+        self.verbose = verbose
+        self.heap: list = []
+        self.seq = itertools.count()
+        self.hist = History()
+        self.report = ClusterReport(policy=policy)
+        self.rts: Dict[int, _TrainerRT] = {}
+        self.free_nodes: List[NodeProfile] = []
+        self.free_streams: List[Any] = []
+        self.samples_total = 0
+        self.merged_rounds: set = set()
+        self.next_tid = 0
+        self.t0 = time.time()
+        self.pool: Optional[TrainerPoolState] = None
+
+    # ------------------------------------------------------------ heap
+    def push(self, when: float, kind: str, payload: dict) -> None:
+        heapq.heappush(self.heap, (when, next(self.seq), kind, payload))
+
+    # ----------------------------------------------------------- alive
+    def alive_rts(self) -> List[_TrainerRT]:
+        return [rt for rt in self.rts.values() if rt.alive]
+
+    # ------------------------------------------------------ scheduling
+    def start_round(self, rt: _TrainerRT, now: float) -> None:
+        """Eagerly run the round's compute and schedule its completion."""
+        ri = rt.round + 1
+        self.maybe_merge(ri, now, caller=rt)
+        if not rt.alive or rt.round >= rt.target:
+            return
+        out = self.rnd.inner(rt.tr, fixed_batch=self.fixed_batch,
+                             worker_starts=rt.worker_params)
+        dts = [node.compute_time(out.flops_per_worker, out.bytes_per_worker,
+                                 now)
+               for node in rt.nodes[:len(out.worker_params)]]
+        self.report.compute_time += sum(dts)
+        self.push(now + max(dts), "round",
+                  {"rt": rt, "out": out, "gen": rt.gen})
+
+    def launch_sync(self, rt: _TrainerRT, now: float,
+                    loss: float, mode: str) -> None:
+        # callers only launch after a completed round, so worker params
+        # are always materialized
+        snapshot = list(rt.worker_params)
+        payload = param_bytes(rt.tr.params)
+        dur = self.network.allreduce_time(payload, rt.nodes)
+        self.pool.comms.record_timed(
+            "outer", participants=len(rt.tr.inner_opt_states),
+            payload_bytes=payload, step=rt.round, duration=dur)
+        self.report.comm_time += dur
+        self.report.num_syncs += 1
+        rt.inflight = True
+        rt.synced = rt.round
+        self.push(now + dur, "comm",
+                  {"rt": rt, "gen": rt.gen, "snapshot": snapshot,
+                   "x_prev": rt.tr.params, "round": rt.round,
+                   "loss": loss, "mode": mode})
+
+    # --------------------------------------------------------- history
+    def record(self, rt: _TrainerRT, now: float, round_i: int,
+               loss: float, mode: str) -> None:
+        hist, pool = self.hist, self.pool
+        hist.outer_step.append(round_i)
+        hist.loss.append(loss)
+        hist.pool_size.append(len(self.alive_rts()))
+        hist.requested_batches.append(
+            [t.requested_batch for t in pool.trainers])
+        hist.comm_events.append(pool.comms.events)
+        hist.comm_bytes.append(pool.comms.total_bytes)
+        hist.samples.append(self.samples_total)
+        hist.modes.append([mode])
+        hist.wall.append(time.time() - self.t0)
+        hist.sim_time.append(now)
+        if self.eval_fn is not None:
+            val = float(self.eval_fn(rt.tr.params))
+            hist.eval_loss.append(val)
+            hist.eval_loss_by_trainer.append({rt.tr.tid: val})
+        if self.verbose:
+            print(f"[cluster/{self.policy}] t={now * 1e3:9.3f}ms "
+                  f"tid={rt.tr.tid} round={round_i} loss={loss:.4f} "
+                  f"k={len(self.alive_rts())}")
+
+    # -------------------------------------------------------- handlers
+    def on_round_done(self, now: float, ev: dict) -> None:
+        rt: _TrainerRT = ev["rt"]
+        if not rt.alive or ev["gen"] != rt.gen:
+            return
+        out: RoundOutput = ev["out"]
+        self.report.sim_time = max(self.report.sim_time, now)
+        rt.round += 1
+        self.report.rounds[rt.tr.tid] = rt.round
+        self.samples_total += out.samples
+        rt.worker_params = out.worker_params
+        rt.last_loss = out.mean_loss
+        if rt.pending is not None:        # delayed outer arrived mid-round
+            x_new, snap = rt.pending["x_new"], rt.pending["snapshot"]
+            rt.worker_params = [
+                jax.tree.map(lambda xn, w, s: xn + (w - s), x_new, wp, sm)
+                for wp, sm in zip(rt.worker_params, snap)]
+            rt.pending = None
+
+        if self.policy == "sync":
+            # barrier: wait for the collective before the next round
+            self.launch_sync(rt, now, out.mean_loss, out.mode)
+            return
+
+        # async / elastic: overlap — launch if the wire is free, keep
+        # computing either way
+        if not rt.inflight:
+            self.launch_sync(rt, now, out.mean_loss, out.mode)
+        if rt.round < rt.target:
+            self.start_round(rt, now)
+
+    def on_comm_done(self, now: float, ev: dict) -> None:
+        rt: _TrainerRT = ev["rt"]
+        if not rt.alive or ev["gen"] != rt.gen:
+            return
+        self.report.sim_time = max(self.report.sim_time, now)
+        rt.inflight = False
+        self.rnd.outer(rt.tr, ev["snapshot"], x_prev=ev["x_prev"])
+        self.record(rt, now, ev["round"], ev["loss"], ev["mode"])
+
+        if self.policy == "sync":
+            rt.worker_params = None            # workers restart from x_new
+            if rt.round < rt.target:
+                self.start_round(rt, now)
+            return
+
+        rt.pending = {"x_new": rt.tr.params, "snapshot": ev["snapshot"]}
+        if rt.round >= rt.target:
+            # workers idle: fold the rebase now and flush any unsynced
+            # progress so the final anchor includes every round
+            if rt.pending is not None and rt.worker_params is not None:
+                x_new, snap = rt.pending["x_new"], rt.pending["snapshot"]
+                rt.worker_params = [
+                    jax.tree.map(lambda xn, w, s: xn + (w - s),
+                                 x_new, wp, sm)
+                    for wp, sm in zip(rt.worker_params, snap)]
+                rt.pending = None
+            if rt.synced < rt.round:
+                self.launch_sync(rt, now, rt.last_loss, "flush")
+
+    # ---------------------------------------------------------- merges
+    def maybe_merge(self, round_i: int, now: float,
+                    caller: Optional[_TrainerRT]) -> None:
+        acfg = self.acfg
+        alive = self.alive_rts()
+        if not (acfg.enable_merge and len(alive) > 1
+                and round_i % acfg.merge_frequency == 0
+                and round_i not in self.merged_rounds
+                and min(rt.round for rt in alive) >= round_i - 1):
+            return
+        self.merged_rounds.add(round_i)
+        ids = check_merge([t.requested_batch for t in self.pool.trainers],
+                          acfg.merge_w + 1)
+        if len(ids) <= 1:
+            return
+        involved = [self.pool.trainers[i] for i in ids]
+        self.pool = do_merge(self.pool, ids, step=round_i)
+        survivors = set(id(t) for t in self.pool.trainers)
+        for t in involved:
+            rt = self.rts[t.tid]
+            if id(t) in survivors:
+                # representative: a merge preempts its in-flight round
+                # and supersedes any in-flight sync
+                rt.gen += 1
+                rt.inflight = False
+                rt.pending = None
+                rt.worker_params = None
+                if rt is not caller and rt.round < rt.target:
+                    self.start_round(rt, now)
+            else:
+                rt.alive = False
+                self.free_nodes.extend(rt.nodes)
+        self.report.applied_events.append(
+            {"time": now, "kind": "merge", "round": round_i,
+             "merged": [t.tid for t in involved
+                        if id(t) not in survivors]})
+
+    # -------------------------------------------------------- scenario
+    def on_scenario(self, now: float, ev: ClusterEvent) -> None:
+        if ev.kind == "slowdown":
+            idx = ev.node if ev.node is not None else 0
+            if 0 <= idx < len(self.profiles):
+                self.profiles[idx].add_slowdown(now, ev.duration, ev.factor)
+                self.report.applied_events.append(
+                    {"time": now, "kind": "slowdown", "node": idx,
+                     "factor": ev.factor, "duration": ev.duration})
+            return
+        if ev.kind == "leave":
+            self.do_leave(now, ev.tid)
+            return
+        if ev.kind == "join":
+            self.do_join(now)
+            return
+        raise ValueError(f"unknown scenario event kind: {ev.kind!r}")
+
+    def do_leave(self, now: float, tid: Optional[int]) -> None:
+        alive = self.alive_rts()
+        if len(alive) <= 1:
+            return                               # last trainer can't leave
+        if tid is None:
+            leaver = min(alive, key=lambda rt: rt.tr.requested_batch).tr
+        else:
+            if tid not in self.rts or not self.rts[tid].alive:
+                return
+            leaver = self.rts[tid].tr
+        # a leaving trainer stops requesting work, so it can never be the
+        # merge representative and its merge weight drops to the floor
+        leaver.requested_batch = 0
+        others = [t for t in self.pool.trainers if t is not leaver]
+        best = max(others, key=lambda t: t.requested_batch)
+        ids = [self.pool.trainers.index(leaver),
+               self.pool.trainers.index(best)]
+        self.pool = do_merge(self.pool, ids, step=self.rts[leaver.tid].round)
+        lrt = self.rts[leaver.tid]
+        lrt.alive = False
+        self.free_nodes.extend(lrt.nodes)
+        brt = self.rts[best.tid]
+        brt.gen += 1
+        brt.inflight = False
+        brt.pending = None
+        brt.worker_params = None
+        if brt.round < brt.target:
+            self.start_round(brt, now)
+        self.report.applied_events.append(
+            {"time": now, "kind": "leave", "tid": leaver.tid,
+             "into": best.tid})
+
+    def do_join(self, now: float) -> None:
+        M = self.acfg.nodes_per_gpu
+        alive = self.alive_rts()
+        if not alive or len(self.free_streams) < M or len(self.free_nodes) < M:
+            return                               # nothing to clone / no room
+        remaining = max(rt.target - rt.round for rt in alive)
+        if remaining <= 0:
+            return
+        src = max(alive, key=lambda rt: rt.tr.requested_batch)
+        streams = [self.free_streams.pop(0) for _ in range(M)]
+        nodes = [self.free_nodes.pop(0) for _ in range(M)]
+        tr = self.rnd.new_trainer(self.next_tid, src.tr.params, streams)
+        self.next_tid += 1
+        self.pool.trainers.append(tr)
+        rt = _TrainerRT(tr=tr, nodes=nodes, target=remaining)
+        self.rts[tr.tid] = rt
+        # parameter shipping to the newcomer costs one point-to-point xfer
+        xfer = self.network.point_to_point_time(
+            param_bytes(tr.params), src.nodes[0], nodes[0])
+        self.report.applied_events.append(
+            {"time": now, "kind": "join", "tid": tr.tid,
+             "cloned_from": src.tr.tid, "xfer_s": xfer})
+        self.start_round(rt, now + xfer)
+
+
+def run_cluster(loss_fn: Callable, init_params_list: List[Any],
+                streams: List[Any], acfg: AdLoCoConfig, *,
+                policy: str = "sync",
+                profiles: Optional[List[NodeProfile]] = None,
+                network: Optional[NetworkModel] = None,
+                num_outer_steps: Optional[int] = None,
+                eval_fn: Optional[Callable] = None,
+                fixed_batch: Optional[int] = None,
+                scenario: Sequence[ClusterEvent] = (),
+                verbose: bool = False):
+    """Train AdLoCo on a simulated heterogeneous cluster.
+
+    ``streams`` beyond the initial k*M shards form the spare pool handed
+    to trainers that join mid-run (elastic scenarios); ``profiles``
+    beyond k*M likewise.  Returns (TrainerPoolState, History,
+    ClusterReport) — the History carries ``sim_time`` so convergence can
+    be plotted against the simulated clock.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+    k, M = len(init_params_list), acfg.nodes_per_gpu
+    T = num_outer_steps or acfg.num_outer_steps
+    if profiles is None:
+        profiles = make_heterogeneous_profiles(k * M)
+    if len(profiles) < k * M:
+        raise ValueError(f"need >= {k * M} node profiles, got "
+                         f"{len(profiles)}")
+    # the sim mutates node state (jitter RNG draws, scenario slowdowns):
+    # work on copies so caller-owned profiles stay reusable and repeated
+    # runs are independent and reproducible
+    profiles = [copy.deepcopy(p) for p in profiles]
+    network = network or NetworkModel()
+
+    sim = _Sim(loss_fn, acfg, policy=policy, profiles=list(profiles),
+               network=network, eval_fn=eval_fn, fixed_batch=fixed_batch,
+               verbose=verbose)
+    sim.pool = sim.rnd.init_pool(init_params_list, streams[:k * M])
+    sim.pool.comms = TimedCommsMeter()
+    if fixed_batch is not None and not acfg.adaptive:
+        for t in sim.pool.trainers:
+            t.requested_batch = fixed_batch
+    sim.free_streams = list(streams[k * M:])
+    sim.free_nodes = list(profiles[k * M:])
+    sim.next_tid = k
+    for i, t in enumerate(sim.pool.trainers):
+        sim.rts[t.tid] = _TrainerRT(
+            tr=t, nodes=list(profiles[i * M:(i + 1) * M]), target=T)
+
+    for ev in sorted(scenario, key=lambda e: e.time):
+        sim.push(ev.time, "scenario", {"ev": ev})
+    for rt in sim.rts.values():
+        sim.start_round(rt, 0.0)
+
+    while sim.heap:
+        when, _, kind, payload = heapq.heappop(sim.heap)
+        if kind == "round":
+            sim.on_round_done(when, payload)
+        elif kind == "comm":
+            sim.on_comm_done(when, payload)
+        else:
+            sim.on_scenario(when, payload["ev"])
+
+    pool = consolidate(sim.pool, step=T)
+    return pool, sim.hist, sim.report

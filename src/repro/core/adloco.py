@@ -2,6 +2,13 @@
 DiLoCo core.  Host-level orchestrator over the jitted primitives in
 ``diloco.py``.
 
+The per-trainer round body (inner steps -> batch statistics -> requested
+batch update -> outer sync) lives in :class:`TrainerRound`, shared by
+
+  * :func:`train_adloco` — the legacy synchronous host loop, and
+  * ``repro.cluster.run_cluster`` — the event-driven virtual-cluster
+    runtime (heterogeneous nodes, async outer syncs, elastic pools).
+
 Ablations (paper Fig. 2) via AdLoCoConfig flags:
   adaptive=False       -> fixed-batch DiLoCo-style training
   enable_merge=False   -> no trainer consolidation
@@ -32,6 +39,9 @@ class History:
     outer_step: List[int] = field(default_factory=list)
     loss: List[float] = field(default_factory=list)
     eval_loss: List[float] = field(default_factory=list)
+    # per-record {tid: eval loss} so elastic / multi-trainer runs stay
+    # attributable to the trainer that produced each number
+    eval_loss_by_trainer: List[Dict[int, float]] = field(default_factory=list)
     pool_size: List[int] = field(default_factory=list)
     requested_batches: List[List[int]] = field(default_factory=list)
     comm_events: List[int] = field(default_factory=list)
@@ -39,25 +49,193 @@ class History:
     samples: List[int] = field(default_factory=list)     # cumulative
     modes: List[List[str]] = field(default_factory=list)
     wall: List[float] = field(default_factory=list)
+    # simulated seconds (repro.cluster runtime only; empty for the
+    # legacy host loop, which has no cluster clock)
+    sim_time: List[float] = field(default_factory=list)
 
     def as_dict(self) -> Dict[str, Any]:
         return self.__dict__.copy()
 
 
-def _make_trainers(init_params_list, streams, acfg: AdLoCoConfig,
-                   inner_opt, outer_opt) -> List[TrainerState]:
-    k, M = len(init_params_list), acfg.nodes_per_gpu
-    trainers = []
-    for i, params in enumerate(init_params_list):
-        trainers.append(TrainerState(
-            tid=i,
-            params=params,
-            outer_opt_state=outer_opt.init(params),
-            inner_opt_states=[inner_opt.init(params) for _ in range(M)],
-            requested_batch=acfg.initial_batch_size,
-            streams=[streams[i * M + m] for m in range(M)],
-        ))
-    return trainers
+@dataclass
+class RoundOutput:
+    """Result of one trainer round's compute phase (inner steps + batch
+    adaptation), before the outer sync is applied."""
+
+    worker_params: List[Any]        # per-worker end-of-round params
+    x_start: Any                    # params the pseudo-gradient diffs against
+    mean_loss: float
+    mode: str                       # execution plan mode this round
+    samples: int                    # total samples consumed (all workers)
+    samples_per_worker: int
+    flops_per_worker: float         # estimated compute cost (6*N*samples)
+    bytes_per_worker: float         # estimated HBM traffic per worker
+
+
+class TrainerRound:
+    """Reusable per-trainer round primitive (Alg 3 lines 17–44).
+
+    ``inner`` runs the compute phase: M workers x H inner steps from
+    ``worker_starts`` (default: the trainer's synced params), updates the
+    inner optimizer states and — when adaptive — the requested batch.
+    ``outer`` applies the outer (pseudo-gradient) step to the trainer and
+    meters the all-reduce.  Keeping the two phases separate is what lets
+    the cluster runtime overlap them (ACCO-style async outer syncs).
+    """
+
+    def __init__(self, loss_fn: Callable, acfg: AdLoCoConfig):
+        self.loss_fn = loss_fn
+        self.acfg = acfg
+        self.inner_opt = optim.get_optimizer(
+            acfg.inner_optimizer, acfg.lr_inner,
+            **({"weight_decay": acfg.weight_decay}
+               if acfg.inner_optimizer == "adamw" else {}))
+        self.outer_opt = optim.get_optimizer(
+            acfg.outer_optimizer, acfg.lr_outer,
+            **({"momentum": acfg.outer_momentum}
+               if acfg.outer_optimizer in ("nesterov", "sgd") else {}))
+        self.cache = StepCache(loss_fn, self.inner_opt)
+        self.outer_step = make_outer_step(self.outer_opt)
+        self._n_params: Optional[int] = None
+
+    # ---------------------------------------------------------- pool
+    def init_pool(self, init_params_list: List[Any],
+                  streams: List[Any]) -> TrainerPoolState:
+        acfg = self.acfg
+        M = acfg.nodes_per_gpu
+        trainers = []
+        for i, params in enumerate(init_params_list):
+            trainers.append(TrainerState(
+                tid=i,
+                params=params,
+                outer_opt_state=self.outer_opt.init(params),
+                inner_opt_states=[self.inner_opt.init(params)
+                                  for _ in range(M)],
+                requested_batch=acfg.initial_batch_size,
+                streams=[streams[i * M + m] for m in range(M)],
+            ))
+        return TrainerPoolState(trainers=trainers)
+
+    def new_trainer(self, tid: int, params: Any,
+                    streams: List[Any]) -> TrainerState:
+        """Fresh trainer (elastic join): given params, fresh opt states."""
+        M = self.acfg.nodes_per_gpu
+        return TrainerState(
+            tid=tid, params=params,
+            outer_opt_state=self.outer_opt.init(params),
+            inner_opt_states=[self.inner_opt.init(params) for _ in range(M)],
+            requested_batch=self.acfg.initial_batch_size,
+            streams=list(streams))
+
+    # --------------------------------------------------------- plans
+    def plan_for(self, tr: TrainerState,
+                 fixed_batch: Optional[int] = None) -> ExecutionPlan:
+        acfg = self.acfg
+        b_req = (fixed_batch if (fixed_batch is not None
+                                 and not acfg.adaptive)
+                 else tr.requested_batch)
+        mult = (acfg.switch_multiplier if acfg.enable_switch
+                else 10 ** 9)  # switch off => never accumulate
+        return plan_execution(b_req, acfg.max_batch, mult)
+
+    def _count_params(self, params) -> int:
+        if self._n_params is None:
+            self._n_params = int(sum(
+                jnp.size(l) for l in jax.tree.leaves(params)))
+        return self._n_params
+
+    # --------------------------------------------------------- inner
+    def inner(self, tr: TrainerState, *,
+              fixed_batch: Optional[int] = None,
+              worker_starts: Optional[List[Any]] = None) -> RoundOutput:
+        """Compute phase of one round.  Mutates ``tr.inner_opt_states``
+        and (adaptive) ``tr.requested_batch``; never touches
+        ``tr.params``."""
+        acfg = self.acfg
+        M = len(tr.inner_opt_states)
+        H = acfg.num_inner_steps
+        plan = self.plan_for(tr, fixed_batch)
+        step_fn = self.cache.get(plan)
+
+        x_start = tr.params
+        worker_params, worker_grads, last_losses = [], [], []
+        for m in range(M):
+            wp = worker_starts[m] if worker_starts is not None else x_start
+            opt_m = tr.inner_opt_states[m]
+            stream = tr.streams[m % len(tr.streams)]
+            for h in range(H):
+                batch = stream.next_batch(plan.effective_batch)
+                batch = reshape_for_plan(batch, plan)
+                wp, opt_m, loss, grads = step_fn(wp, opt_m, batch)
+            worker_params.append(wp)
+            worker_grads.append(grads)
+            tr.inner_opt_states[m] = opt_m
+            last_losses.append(float(loss))
+
+        # ---- requested batch for the next round (Alg 3 line 31) ------
+        if acfg.adaptive:
+            if acfg.stats_estimator == "microbatch" and M >= 2:
+                # free distributed estimator: the M workers' last
+                # microbatch-mean grads are already materialized;
+                # Var over workers * m estimates sigma^2 with zero
+                # extra passes (DESIGN.md §3 — the grads come from
+                # slightly diverged worker params, an accepted
+                # approximation of the shared-point statistics)
+                stack = jax.tree.map(lambda *g: jnp.stack(g),
+                                     *worker_grads)
+                st = batching.stats_from_microbatch_grads(
+                    stack, plan.effective_batch)
+            else:
+                # the paper computes sigma_Bk / grad_Bk on the
+                # CURRENT batch; stats_probe_size is only a memory
+                # cap (the E||g_B||^2 = ||g||^2 + sigma^2/B bias of
+                # a too-small probe stalls batch growth and breaks
+                # Theorem 2's ln-N communication profile)
+                probe_b = max(4, min(acfg.stats_probe_size,
+                                     plan.effective_batch))
+                probe = tr.streams[0].next_batch(probe_b)
+                st = batching.per_sample_stats(
+                    self.loss_fn, worker_params[0], probe)
+            tr.requested_batch = batching.requested_batch(
+                st, acfg, tr.requested_batch)
+
+        spw = plan.effective_batch * H
+        n = self._count_params(x_start)
+        return RoundOutput(
+            worker_params=worker_params, x_start=x_start,
+            mean_loss=sum(last_losses) / len(last_losses),
+            mode=plan.mode, samples=spw * M, samples_per_worker=spw,
+            flops_per_worker=6.0 * n * spw,
+            bytes_per_worker=3.0 * param_bytes(x_start) * H)
+
+    # --------------------------------------------------------- outer
+    def outer(self, tr: TrainerState, worker_params: List[Any], *,
+              x_prev: Optional[Any] = None,
+              comms: Optional[CommsMeter] = None, step: int = 0) -> None:
+        """Apply the outer (pseudo-gradient) step: Alg 3 lines 40–44.
+        ``x_prev`` defaults to the trainer's current synced params; the
+        async cluster policy passes the anchor captured at launch time
+        (delayed application)."""
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *worker_params)
+        tr.params, tr.outer_opt_state = self.outer_step(
+            x_prev if x_prev is not None else tr.params,
+            stacked, tr.outer_opt_state)
+        if comms is not None:
+            comms.record("outer", participants=len(worker_params),
+                         payload_bytes=param_bytes(tr.params), step=step)
+
+
+def record_eval(hist: History, pool: TrainerPoolState,
+                eval_fn: Optional[Callable]) -> None:
+    """Evaluate every trainer, keep the per-tid map, and track the best
+    (largest requested batch = most advanced) trainer's loss in the
+    legacy ``eval_loss`` series."""
+    if eval_fn is None:
+        return
+    per = {tr.tid: float(eval_fn(tr.params)) for tr in pool.trainers}
+    hist.eval_loss_by_trainer.append(per)
+    best = max(pool.trainers, key=lambda tr: tr.requested_batch)
+    hist.eval_loss.append(per[best.tid])
 
 
 def train_adloco(loss_fn: Callable, init_params_list: List[Any],
@@ -67,7 +245,7 @@ def train_adloco(loss_fn: Callable, init_params_list: List[Any],
                  fixed_batch: Optional[int] = None,
                  verbose: bool = False,
                  restore_from: Optional[tuple] = None):
-    """Run Algorithm 3.
+    """Run Algorithm 3 (synchronous host loop).
 
     loss_fn(params, batch) -> (loss, aux);  streams: k*M data shards with
     ``next_batch(b)``;  init_params_list: k independent inits (the paper's
@@ -76,22 +254,8 @@ def train_adloco(loss_fn: Callable, init_params_list: List[Any],
     Returns (TrainerPoolState, History).
     """
     T = num_outer_steps or acfg.num_outer_steps
-    M = acfg.nodes_per_gpu
-    H = acfg.num_inner_steps
-    inner_opt = optim.get_optimizer(
-        acfg.inner_optimizer, acfg.lr_inner,
-        **({"weight_decay": acfg.weight_decay}
-           if acfg.inner_optimizer == "adamw" else {}))
-    outer_opt = optim.get_optimizer(
-        acfg.outer_optimizer, acfg.lr_outer,
-        **({"momentum": acfg.outer_momentum}
-           if acfg.outer_optimizer in ("nesterov", "sgd") else {}))
-    cache = StepCache(loss_fn, inner_opt)
-    outer_step = make_outer_step(outer_opt)
-
-    pool = TrainerPoolState(
-        trainers=_make_trainers(init_params_list, streams, acfg,
-                                inner_opt, outer_opt))
+    rnd = TrainerRound(loss_fn, acfg)
+    pool = rnd.init_pool(init_params_list, streams)
     if restore_from is not None:
         from repro.checkpoint import restore_train_state
         pool, _ = restore_train_state(restore_from[0], restore_from[1], pool)
@@ -113,67 +277,12 @@ def train_adloco(loss_fn: Callable, init_params_list: List[Any],
 
         round_losses, modes = [], []
         for tr in pool.trainers:
-            b_req = (fixed_batch if (fixed_batch is not None
-                                     and not acfg.adaptive)
-                     else tr.requested_batch)
-            mult = (acfg.switch_multiplier if acfg.enable_switch
-                    else 10 ** 9)  # switch off => never accumulate
-            plan = plan_execution(b_req, acfg.max_batch, mult)
-            modes.append(plan.mode)
-            step_fn = cache.get(plan)
-
-            x_start = tr.params
-            worker_params = []
-            worker_grads = []
-            last_losses = []
-            for m in range(M):
-                wp = x_start
-                opt_m = tr.inner_opt_states[m]
-                stream = tr.streams[m % len(tr.streams)]
-                for h in range(H):
-                    batch = stream.next_batch(plan.effective_batch)
-                    batch = reshape_for_plan(batch, plan)
-                    wp, opt_m, loss, grads = step_fn(wp, opt_m, batch)
-                    samples_total += plan.effective_batch
-                worker_params.append(wp)
-                worker_grads.append(grads)
-                tr.inner_opt_states[m] = opt_m
-                last_losses.append(float(loss))
-            round_losses.append(sum(last_losses) / len(last_losses))
-
-            # ---- requested batch for the next round (Alg 3 line 31) --
-            if acfg.adaptive:
-                if acfg.stats_estimator == "microbatch" and M >= 2:
-                    # free distributed estimator: the M workers' last
-                    # microbatch-mean grads are already materialized;
-                    # Var over workers * m estimates sigma^2 with zero
-                    # extra passes (DESIGN.md §3 — the grads come from
-                    # slightly diverged worker params, an accepted
-                    # approximation of the shared-point statistics)
-                    stack = jax.tree.map(lambda *g: jnp.stack(g),
-                                         *worker_grads)
-                    st = batching.stats_from_microbatch_grads(
-                        stack, plan.effective_batch)
-                else:
-                    # the paper computes sigma_Bk / grad_Bk on the
-                    # CURRENT batch; stats_probe_size is only a memory
-                    # cap (the E||g_B||^2 = ||g||^2 + sigma^2/B bias of
-                    # a too-small probe stalls batch growth and breaks
-                    # Theorem 2's ln-N communication profile)
-                    probe_b = max(4, min(acfg.stats_probe_size,
-                                         plan.effective_batch))
-                    probe = tr.streams[0].next_batch(probe_b)
-                    st = batching.per_sample_stats(
-                        loss_fn, worker_params[0], probe)
-                tr.requested_batch = batching.requested_batch(
-                    st, acfg, tr.requested_batch)
-
-            # ---- outer sync (Alg 3 lines 40–44) -----------------------
-            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *worker_params)
-            tr.params, tr.outer_opt_state = outer_step(
-                x_start, stacked, tr.outer_opt_state)
-            pool.comms.record("outer", participants=M,
-                              payload_bytes=param_bytes(tr.params), step=t)
+            out = rnd.inner(tr, fixed_batch=fixed_batch)
+            round_losses.append(out.mean_loss)
+            modes.append(out.mode)
+            samples_total += out.samples
+            # ---- outer sync (Alg 3 lines 40–44) ----------------------
+            rnd.outer(tr, out.worker_params, comms=pool.comms, step=t)
 
         hist.outer_step.append(t)
         hist.loss.append(sum(round_losses) / len(round_losses))
@@ -185,9 +294,7 @@ def train_adloco(loss_fn: Callable, init_params_list: List[Any],
         hist.samples.append(samples_total)
         hist.modes.append(modes)
         hist.wall.append(time.time() - t0)
-        if eval_fn is not None:
-            best = min(pool.trainers, key=lambda tr: -tr.requested_batch)
-            hist.eval_loss.append(float(eval_fn(best.params)))
+        record_eval(hist, pool, eval_fn)
         if verbose:
             print(f"[adloco] t={t} loss={hist.loss[-1]:.4f} "
                   f"k={pool.k} b={hist.requested_batches[-1]} "

@@ -36,3 +36,34 @@ class CommsMeter:
 
     def snapshot(self) -> dict:
         return {"events": self.events, "bytes": self.total_bytes}
+
+
+def ring_allreduce_time(payload_bytes: float, participants: int,
+                        link_bw: float, latency: float = 0.0) -> float:
+    """Latency + bandwidth cost of one ring all-reduce, in seconds.
+
+    2(p−1) ring steps, each paying the per-hop latency; every node
+    transmits 2(p−1)/p · payload bytes over its (slowest) link.  With
+    p <= 1 there is nothing to exchange.
+    """
+    p = max(int(participants), 1)
+    if p == 1 or payload_bytes <= 0:
+        return 0.0
+    steps = 2 * (p - 1)
+    wire = 2.0 * (p - 1) / p * payload_bytes
+    return steps * latency + wire / max(link_bw, 1.0)
+
+
+@dataclass
+class TimedCommsMeter(CommsMeter):
+    """CommsMeter that also accounts simulated wall-clock spent in each
+    collective (the quantity async outer syncs hide behind compute)."""
+
+    total_time: float = 0.0
+
+    def record_timed(self, kind: str, participants: int, payload_bytes: int,
+                     step: int, duration: float) -> float:
+        self.record(kind, participants, payload_bytes, step)
+        self.log[-1]["time_s"] = duration
+        self.total_time += duration
+        return duration

@@ -1,0 +1,286 @@
+"""Tests for the event-driven virtual-cluster runtime (repro.cluster):
+policy equivalences, straggler timing, elastic pool invariants, and the
+network/node cost models."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AdLoCoConfig
+from repro.core import train_adloco
+from repro.core.comms import ring_allreduce_time
+from repro.cluster import (ClusterEvent, NetworkModel, NodeProfile,
+                           make_heterogeneous_profiles, run_cluster)
+
+from tests.test_adloco_integration import QuadStream, _quad_setup, quad_loss
+
+
+BASE = AdLoCoConfig(num_outer_steps=8, num_inner_steps=5, lr_inner=0.05,
+                    lr_outer=0.7, outer_momentum=0.5, nodes_per_gpu=2,
+                    num_init_trainers=3, initial_batch_size=2,
+                    merge_frequency=3, eta=0.8, max_batch=16,
+                    inner_optimizer="sgd", stats_probe_size=32)
+
+# toy-scale hardware so compute and comm times are comparable on the
+# 16-dim quadratic (v5e constants make both vanish)
+TOY = dict(flops=1e6, hbm_bw=1e9, link_bw=2e5, link_latency=2e-3)
+
+
+def _eval_fn(prob):
+    return lambda p: 0.5 * float(
+        jnp.sum(jnp.square(p["x"] - prob.x_star))) + 0.5 * prob.noise ** 2
+
+
+def _profiles(n, ratio=1.0, jitter=0.0, seed=0):
+    return make_heterogeneous_profiles(n, ratio=ratio, jitter=jitter,
+                                       seed=seed, **TOY)
+
+
+# --------------------------------------------------------------- cost models
+
+def test_ring_allreduce_time_model():
+    # p=1: nothing to exchange
+    assert ring_allreduce_time(1e6, 1, 1e9) == 0.0
+    # bandwidth term: 2(p-1)/p * payload / bw
+    t4 = ring_allreduce_time(1e6, 4, 1e9, latency=0.0)
+    assert t4 == pytest.approx(2 * 3 / 4 * 1e6 / 1e9)
+    # latency term: 2(p-1) hops
+    t_lat = ring_allreduce_time(8, 4, 1e12, latency=1e-3)
+    assert t_lat == pytest.approx(6e-3, rel=1e-3)
+    # more participants at fixed payload -> more wire time per node
+    assert ring_allreduce_time(1e6, 8, 1e9) > ring_allreduce_time(1e6, 2, 1e9)
+
+
+def test_node_profile_slowdown_and_heterogeneity():
+    prof = NodeProfile.from_roofline(speed=1.0, **TOY)
+    base = prof.compute_time(1e6, 0.0, now=0.0)
+    assert base == pytest.approx(1.0)
+    prof.add_slowdown(start=10.0, duration=5.0, factor=3.0)
+    assert prof.compute_time(1e6, 0.0, now=12.0) == pytest.approx(3.0)
+    assert prof.compute_time(1e6, 0.0, now=20.0) == pytest.approx(1.0)
+
+    profs = _profiles(4, ratio=4.0)
+    speeds = [p.flops for p in profs]
+    assert speeds[0] / speeds[-1] == pytest.approx(4.0)
+    assert all(a >= b for a, b in zip(speeds, speeds[1:]))
+
+
+def test_network_model_bottlenecked_by_slowest_link():
+    fast = NodeProfile.from_roofline(name="f", **TOY)
+    slow = NodeProfile.from_roofline(name="s", speed=0.25, **TOY)
+    net = NetworkModel()
+    t_ff = net.allreduce_time(1e4, [fast, fast])
+    t_fs = net.allreduce_time(1e4, [fast, slow])
+    assert t_fs > t_ff
+
+
+def test_rejects_unknown_policy_and_short_profiles():
+    _, inits, streams = _quad_setup()
+    with pytest.raises(ValueError, match="policy"):
+        run_cluster(quad_loss, inits, streams, BASE, policy="warp")
+    with pytest.raises(ValueError, match="profiles"):
+        run_cluster(quad_loss, inits, streams, BASE, profiles=_profiles(2))
+
+
+# ------------------------------------------------------------ policy: sync
+
+def test_sync_policy_matches_legacy_loop_exactly():
+    """With merging off, trainers are independent and the sync policy
+    must reproduce the host loop bit-for-bit — heterogeneity only moves
+    the simulated clock."""
+    acfg = dataclasses.replace(BASE, enable_merge=False)
+    prob, inits, streams = _quad_setup()
+    pool_l, hist_l = train_adloco(quad_loss, inits, streams, acfg,
+                                  eval_fn=_eval_fn(prob))
+    prob2, inits2, streams2 = _quad_setup()
+    pool_c, hist_c, rep = run_cluster(
+        quad_loss, inits2, streams2, acfg, policy="sync",
+        profiles=_profiles(6, ratio=4.0), eval_fn=_eval_fn(prob2))
+    np.testing.assert_allclose(
+        np.asarray(pool_l.global_params["x"]),
+        np.asarray(pool_c.global_params["x"]), rtol=0, atol=0)
+    assert hist_c.eval_loss[-1] == pytest.approx(hist_l.eval_loss[-1])
+    assert rep.sim_time > 0 and rep.comm_time > 0
+    assert len(hist_c.sim_time) == len(hist_c.loss)
+
+
+def test_sync_cluster_merges_contract_pool():
+    _, inits, streams = _quad_setup()
+    pool, hist, rep = run_cluster(quad_loss, inits, streams, BASE,
+                                  policy="sync", profiles=_profiles(6))
+    assert pool.k < 3
+    assert any(e["kind"] == "merge" for e in pool.comms.log)
+    assert any(e["kind"] == "merge" for e in rep.applied_events)
+
+
+# ------------------------------------------------------- straggler timing
+
+def test_straggler_changes_wallclock_not_loss():
+    """Jitter and slowdown events stretch the simulated clock; in the
+    sync policy the parameter trajectory is untouched."""
+    acfg = dataclasses.replace(BASE, enable_merge=False)
+    runs = {}
+    for jitter in (0.0, 0.5):
+        prob, inits, streams = _quad_setup()
+        scen = [] if jitter == 0.0 else [
+            ClusterEvent(time=0.0, kind="slowdown", node=0, factor=4.0,
+                         duration=1e9)]
+        pool, hist, rep = run_cluster(
+            quad_loss, inits, streams, acfg, policy="sync",
+            profiles=_profiles(6, jitter=jitter), scenario=scen,
+            eval_fn=_eval_fn(prob))
+        runs[jitter] = (pool, hist, rep)
+    np.testing.assert_allclose(
+        np.asarray(runs[0.0][0].global_params["x"]),
+        np.asarray(runs[0.5][0].global_params["x"]), rtol=0, atol=0)
+    # straggler run must be measurably slower on the simulated clock
+    assert runs[0.5][2].sim_time > 1.2 * runs[0.0][2].sim_time
+
+
+# ------------------------------------------------------------ policy: async
+
+def test_async_matches_sync_loss_within_tolerance():
+    """ACCO-style overlap applies pseudo-gradients one round late; the
+    trajectory may differ but the converged loss must agree."""
+    acfg = dataclasses.replace(BASE, enable_merge=False,
+                               num_outer_steps=14)
+    finals = {}
+    for policy in ("sync", "async"):
+        prob, inits, streams = _quad_setup()
+        ev = _eval_fn(prob)
+        pool, hist, rep = run_cluster(
+            quad_loss, inits, streams, acfg, policy=policy,
+            profiles=_profiles(6, ratio=2.0), eval_fn=ev)
+        finals[policy] = ev(pool.global_params)
+    assert finals["async"] == pytest.approx(finals["sync"], rel=0.15)
+
+
+@pytest.mark.slow
+def test_async_matches_sync_loss_on_tiny_lm():
+    import jax
+
+    from repro import models
+    from repro.configs import get_config, reduced
+    from repro.data import MarkovTokenStream
+
+    cfg = reduced(get_config("microllama-300m"))
+    acfg = AdLoCoConfig(num_outer_steps=3, num_inner_steps=3, lr_inner=3e-4,
+                        lr_outer=0.5, outer_momentum=0.5, nodes_per_gpu=2,
+                        num_init_trainers=1, initial_batch_size=2,
+                        enable_merge=False, max_batch=8, stats_probe_size=8)
+    loss_fn = lambda p, b: models.loss_fn(p, b, cfg)  # noqa: E731
+    held = MarkovTokenStream(cfg.vocab_size, 32, shard=99,
+                             seed=0).next_batch(8)
+    eval_fn = lambda p: float(loss_fn(p, held)[0])  # noqa: E731
+    finals = {}
+    for policy in ("sync", "async"):
+        inits = [models.init_params(cfg, jax.random.PRNGKey(0))]
+        streams = [MarkovTokenStream(cfg.vocab_size, 32, shard=i, seed=0)
+                   for i in range(2)]
+        pool, hist, _ = run_cluster(loss_fn, inits, streams, acfg,
+                                    policy=policy, profiles=_profiles(2),
+                                    eval_fn=eval_fn)
+        finals[policy] = eval_fn(pool.global_params)
+    assert np.isfinite(list(finals.values())).all()
+    assert finals["async"] == pytest.approx(finals["sync"], rel=0.1)
+
+
+def test_async_hides_communication_time():
+    """Same numeric work, but the async clock must come in under sync
+    whenever collectives cost nonzero time."""
+    acfg = dataclasses.replace(BASE, enable_merge=False)
+    sims = {}
+    for policy in ("sync", "async"):
+        _, inits, streams = _quad_setup()
+        _, _, rep = run_cluster(quad_loss, inits, streams, acfg,
+                                policy=policy,
+                                profiles=_profiles(6, ratio=2.0))
+        sims[policy] = rep
+    assert sims["async"].sim_time < sims["sync"].sim_time
+    assert sims["async"].comm_time > 0
+
+
+# --------------------------------------------------------- policy: elastic
+
+def _elastic_setup(k=3, M=2, spare=1):
+    prob, inits, streams = _quad_setup(k=k, M=M)
+    spare_streams = [QuadStream(prob, 100 + i) for i in range(spare * M)]
+    return prob, inits, streams + spare_streams
+
+
+def test_elastic_join_leave_keeps_pool_invariants():
+    acfg = dataclasses.replace(BASE, enable_merge=False,
+                               num_outer_steps=10)
+    prob, inits, streams = _elastic_setup()
+    profiles = _profiles(8, ratio=2.0)
+    # time the events inside the run: a sync run of the same shape takes
+    # ~10 rounds; leave early, join midway
+    scen = [ClusterEvent(time=1e-3, kind="leave"),
+            ClusterEvent(time=5e-3, kind="join")]
+    pool, hist, rep = run_cluster(
+        quad_loss, inits, streams, acfg, policy="elastic",
+        profiles=profiles, scenario=scen, eval_fn=_eval_fn(prob))
+
+    kinds = [e["kind"] for e in rep.applied_events]
+    assert "leave" in kinds and "join" in kinds
+    # pool size: 3 initial - 1 leave + 1 join
+    assert pool.k == 3
+    # stream ownership: every stream owned by exactly one trainer, and
+    # the leaver's shards were re-homed (no data orphaned)
+    owned = [id(s) for tr in pool.trainers for s in tr.streams]
+    assert len(owned) == len(set(owned))
+    original = {id(s) for s in streams[:6]}
+    assert original <= set(owned)
+    # the joiner trained and is attributable in history
+    join_tid = next(e["tid"] for e in rep.applied_events
+                    if e["kind"] == "join")
+    assert rep.rounds.get(join_tid, 0) > 0
+    assert any(join_tid in d for d in hist.eval_loss_by_trainer)
+    # elastic run still converges
+    assert hist.eval_loss[-1] < hist.eval_loss[0]
+
+
+def test_elastic_leave_requires_survivor():
+    """The last trainer never leaves (the event is a no-op)."""
+    acfg = dataclasses.replace(BASE, num_init_trainers=1, enable_merge=False,
+                               num_outer_steps=4)
+    _, inits, streams = _quad_setup(k=1, M=2)
+    scen = [ClusterEvent(time=0.0, kind="leave")]
+    pool, _, rep = run_cluster(quad_loss, inits[:1], streams[:2], acfg,
+                               policy="elastic", profiles=_profiles(2),
+                               scenario=scen)
+    assert pool.k == 1
+    assert not any(e["kind"] == "leave" for e in rep.applied_events)
+
+
+def test_elastic_join_without_spares_is_noop():
+    acfg = dataclasses.replace(BASE, enable_merge=False, num_outer_steps=4)
+    _, inits, streams = _quad_setup()
+    scen = [ClusterEvent(time=0.0, kind="join")]
+    pool, _, rep = run_cluster(quad_loss, inits, streams, acfg,
+                               policy="elastic", profiles=_profiles(6),
+                               scenario=scen)
+    assert pool.k <= 3
+    assert not any(e["kind"] == "join" for e in rep.applied_events)
+
+
+# ------------------------------------------------------ time-to-target
+
+def test_async_reduces_time_to_target_under_heterogeneity():
+    """The acceptance headline: with node speeds differing by >= 2x,
+    async must hit the target loss strictly earlier on the sim clock."""
+    acfg = dataclasses.replace(BASE, enable_merge=False,
+                               num_outer_steps=12)
+    t2t = {}
+    for policy in ("sync", "async"):
+        prob, inits, streams = _quad_setup()
+        _, hist, _ = run_cluster(
+            quad_loss, inits, streams, acfg, policy=policy,
+            profiles=_profiles(6, ratio=2.0), eval_fn=_eval_fn(prob))
+        target = 0.5 * prob.noise ** 2 * 1.25
+        t2t[policy] = next((s for v, s in zip(hist.eval_loss,
+                                              hist.sim_time)
+                            if v <= target), None)
+    assert t2t["sync"] is not None and t2t["async"] is not None
+    assert t2t["async"] < t2t["sync"]

@@ -1,15 +1,20 @@
 """Cluster-runtime benchmark: sync vs async vs elastic outer-sync
-policies on simulated heterogeneous hardware.
+policies on simulated heterogeneous hardware and scripted scenarios.
 
 For each heterogeneity ratio (fastest node / slowest node speed) the
 bench trains the same convex proxy under each policy and reports the
 simulated wall-clock, the time spent in collectives, and the simulated
 time-to-target-loss.  The paper's "fully exploits computational
 clusters under dynamic workloads" claim shows up as async strictly
-beating sync's time-to-target once node speeds diverge.
+beating sync's time-to-target once node speeds diverge — and, on the
+2-pod topology scenario sweep, whenever the cross-pod fabric gets
+congested (the wire, not the worker, is the bottleneck: ACCO's case).
 
   PYTHONPATH=src python benchmarks/cluster_bench.py           # full
   PYTHONPATH=src python benchmarks/cluster_bench.py --smoke   # CI job
+  # CI scenario-smoke job: just the registered scenarios, by name
+  PYTHONPATH=src python benchmarks/cluster_bench.py --smoke \\
+      --scenario spot_churn --scenario bursty_congestion
 """
 from __future__ import annotations
 
@@ -20,12 +25,17 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from repro.configs.base import AdLoCoConfig
-from repro.cluster import (ClusterEvent, make_heterogeneous_profiles,
+from repro.cluster import (ClusterEvent, Topology, interleave_pods,
+                           make_heterogeneous_profiles, make_pod_profiles,
                            run_cluster)
+from repro.cluster.scenarios import build_scenario, list_scenarios
 
 from benchmarks.common import quad_setup, quad_loss, row
 
 HET_RATIOS = (1.0, 2.0, 4.0)
+
+#: scenarios swept over the 2-pod topology in the default run
+SCENARIO_NAMES = ("baseline", "bursty_congestion", "spot_churn")
 
 # outer_momentum=0.5: high Nesterov momentum (0.9) is underdamped under
 # the async policy's one-round staleness (see repro.cluster docstring);
@@ -77,8 +87,76 @@ def bench_policy(policy: str, ratio: float, T: int, *, seed: int = 0,
     }
 
 
-def run(quick: bool = False):
+def scenario_cluster(*, seed: int = 0, spare: int = 3, ratio: float = 2.0):
+    """2-pod cluster for the scenario sweep: pods homogeneous inside,
+    pod 1 ``ratio``x slower, interleaved so every trainer's M=2 workers
+    span both pods — each outer sync crosses the bottleneck link.
+    ``spare`` trainers' worth of nodes+streams lets spot_churn rejoins
+    actually land (leaves re-home their shards to the survivor, so
+    spares bound rejoin capacity)."""
+    from benchmarks.common import QuadStream
+    k, M = 3, 2
+    n = (k + spare) * M
+    prob, inits, streams, eval_fn = quad_setup(k=k, M=M, seed=seed)
+    streams = streams + [QuadStream(prob, 100 + i, seed=seed)
+                         for i in range(spare * M)]
+    profiles = make_pod_profiles([n // 2, n - n // 2], ratio=ratio, **TOY)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3)
+    return prob, inits, streams, eval_fn, interleave_pods(profiles), topo
+
+
+def bench_scenario(name: str, policy: str, T: int, *, seed: int = 0):
+    acfg = dataclasses.replace(BASE, num_outer_steps=T)
+    prob, inits, streams, eval_fn, profiles, topo = scenario_cluster(
+        seed=seed)
+    pool, hist, rep = run_cluster(
+        quad_loss, inits, streams, acfg, policy=policy, profiles=profiles,
+        network=topo, eval_fn=eval_fn, scenario=build_scenario(name))
+    target = 0.5 * prob.noise ** 2 * 1.25
+    return {
+        "sim_time": rep.sim_time,
+        "comm_time": rep.comm_time,
+        "t2t": time_to_target(hist, target),
+        "final_eval": eval_fn(pool.global_params),
+        "syncs": rep.num_syncs,
+        "k_final": pool.k,
+        "events": [e["kind"] for e in rep.applied_events],
+    }
+
+
+def run_scenarios(T: int, names):
+    """sync vs async time-to-target per registered scenario on the
+    2-pod topology; the congested fabric is the acceptance gate."""
+    rows, t2ts = [], {}
+    for name in names:
+        if name not in list_scenarios():
+            raise SystemExit(f"unknown scenario {name!r}; registered: "
+                             f"{list_scenarios()}")
+        for policy in ("sync", "async"):
+            r = bench_scenario(name, policy, T)
+            t2ts[(name, policy)] = r["t2t"]
+            t2t = f"{r['t2t']:.4f}" if r["t2t"] is not None else "none"
+            rows.append(row(
+                f"cluster/scenario/{name}/{policy}", r["sim_time"] * 1e6,
+                f"sim_s={r['sim_time']:.4f};comm_s={r['comm_time']:.4f};"
+                f"t2t_s={t2t};final={r['final_eval']:.4f};"
+                f"syncs={r['syncs']};k_final={r['k_final']};"
+                f"events={'+'.join(r['events']) or 'none'}"))
+    wins = {name: (t2ts[(name, "async")] is not None
+                   and t2ts[(name, "sync")] is not None
+                   and t2ts[(name, "async")] < t2ts[(name, "sync")])
+            for name in names}
+    rows.append(row(
+        "cluster/scenario-summary", 0.0,
+        ";".join(f"async_faster_{n}={wins[n]}" for n in names)))
+    return rows
+
+
+def run(quick: bool = False, scenarios=None):
     T = 8 if quick else 16
+    if scenarios is not None:        # scenario-only mode (CI smoke job)
+        return run_scenarios(T, scenarios)
     rows = []
     t2ts = {}
     for ratio in HET_RATIOS:
@@ -116,6 +194,9 @@ def run(quick: bool = False):
         f"async_faster_to_target_1x={wins[1.0]};"
         f"async_faster_to_target_2x={wins[2.0]};"
         f"async_faster_to_target_4x={wins[4.0]}"))
+
+    if not quick:                    # CI covers this via --scenario (the
+        rows.extend(run_scenarios(T, SCENARIO_NAMES))  # scenario-smoke job)
     return rows
 
 
@@ -124,15 +205,26 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI run (fewer outer steps)")
+    ap.add_argument("--scenario", action="append", metavar="NAME",
+                    help="run only the named registered scenario(s) over "
+                         "the 2-pod topology (repeatable); skips the "
+                         "heterogeneity sweep")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     ok = True
-    for r in run(quick=args.smoke):
+    for r in run(quick=args.smoke, scenarios=args.scenario):
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"",
               flush=True)
         if r["name"] == "cluster/summary":
-            ok = ("async_faster_to_target_2x=True" in r["derived"]
-                  and "async_faster_to_target_4x=True" in r["derived"])
+            ok = ok and ("async_faster_to_target_2x=True" in r["derived"]
+                         and "async_faster_to_target_4x=True"
+                         in r["derived"])
+        if r["name"] == "cluster/scenario-summary":
+            # acceptance gate: async must strictly win time-to-target on
+            # the congested fabric whenever that scenario was run
+            if "async_faster_bursty_congestion" in r["derived"]:
+                ok = ok and ("async_faster_bursty_congestion=True"
+                             in r["derived"])
     return 0 if ok else 1
 
 

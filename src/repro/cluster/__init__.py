@@ -2,57 +2,101 @@
 
 Runs real AdLoCo numerics (the same jitted ``TrainerRound`` primitives
 as ``repro.core.adloco``) over *simulated* heterogeneous nodes, so the
-paper's dynamic-workload scenarios — stragglers, slow links, trainers
-joining and leaving — can be exercised and timed without a physical
-cluster.
+paper's dynamic-workload scenarios — stragglers, congested fabrics,
+pod partitions, trainers joining and leaving — can be exercised and
+timed without a physical cluster.  The network model and the scenario
+change the simulated clock, never the numerics.
 
 Quick start::
 
-    from repro.cluster import (ClusterEvent, NetworkModel, run_cluster,
-                               make_heterogeneous_profiles)
+    from repro.cluster import (Topology, make_pod_profiles, run_cluster)
 
-    profiles = make_heterogeneous_profiles(k * M, ratio=4.0, jitter=0.1)
+    profiles = make_pod_profiles([4, 4], ratio=2.0)     # 2 pods, 8 nodes
+    topo = Topology.from_profiles(profiles, inter_bw=1e5)
     pool, hist, report = run_cluster(loss_fn, inits, streams, acfg,
                                      policy="async", profiles=profiles,
-                                     eval_fn=eval_fn)
+                                     network=topo, eval_fn=eval_fn,
+                                     scenario="bursty_congestion")
     # hist.sim_time x hist.eval_loss -> time-to-target under the sim clock
+
+Network models
+--------------
+``NetworkModel``
+    The flat baseline: every collective is one ring over the global
+    min-bandwidth link.
+``Topology``
+    Nodes grouped into pods (by ``NodeProfile.pod`` via
+    ``Topology.from_profiles``, or explicit name lists): intra-pod
+    traffic rides the node links, cross-pod traffic rides explicit
+    bottleneck paths of ``inter_bw`` each, and collectives spanning
+    pods are priced by ``core.comms.hierarchical_allreduce_time``
+    (per-pod reduce-scatter, concurrent cross-pod shard rings, per-pod
+    all-gather).
+
+Both carry time-varying fabric state (``FabricSchedule``): scenarios
+open ``FabricWindow``\\ s — bandwidth scaled by ``bw_scale``, hops
+paying ``extra_latency`` — and the runtime re-prices in-flight
+collectives at every window edge.
+
+Scenario registry
+-----------------
+``repro.cluster.scenarios`` holds named, deterministic generators that
+compile to ``ClusterEvent`` streams; ``run_cluster(scenario="<name>")``
+accepts them directly, so benchmarks and the golden-trace tests in
+``tests/test_scenarios.py`` exercise identical event streams.
+Registered: ``baseline`` (no events), ``bursty_congestion`` (periodic
+cross-pod congestion windows: ``start``/``period``/``burst``/``depth``/
+``extra_latency``/``count``/``scope``), ``spot_churn`` (seeded Poisson
+leave events each followed by a rejoin: ``seed``/``rate``/``horizon``/
+``rejoin_after``/``start``), ``pod_partition`` (cross-pod links drop to
+``residual`` bandwidth for ``duration`` seconds), and
+``flash_crowd_join`` (``joins`` trainers landing every ``spacing``
+seconds).  See the generator docstrings for knob semantics; register
+new ones with ``scenarios.register_scenario``.
 
 Which sync policy should I use?
 -------------------------------
 ``sync``
     Barrier semantics identical to the legacy ``train_adloco`` loop.
     Use it as the ground-truth baseline: with merging disabled the
-    parameter trajectory is bit-identical to the host loop, so any
-    simulated-time comparison is apples-to-apples.  Pick it when the
-    network is fast relative to a round (comm « compute) or when you
-    need exactly reproducible numerics.
+    parameter trajectory is bit-identical to the host loop — under any
+    topology or fabric schedule — so any simulated-time comparison is
+    apples-to-apples.  Pick it when the network is fast relative to a
+    round (comm « compute) or when you need exactly reproducible
+    numerics.
 ``async``
     ACCO-style overlap: workers keep accumulating inner steps while the
     outer all-reduce is in flight; the delayed pseudo-gradient applies
     on arrival and workers rebase, keeping in-flight progress.  Pick it
-    when outer syncs are expensive — slow/lossy links, large models,
-    high heterogeneity (the slowest node's link bottlenecks the ring).
+    when outer syncs are expensive — congested or partitioned fabrics,
+    slow cross-pod bottlenecks, large models, high heterogeneity.
     Expect a small loss-trajectory perturbation (one round of delay) in
     exchange for hiding comm time entirely.
 ``elastic``
-    ``async`` plus scripted :class:`ClusterEvent`s — trainers leave
+    ``async`` plus scripted :class:`ClusterEvent`\\ s — trainers leave
     (folded into the pool via ``mit.do_merge``) and join (cloned from
     the most-advanced trainer onto spare nodes/streams).  Pick it to
     study preemptible/spot capacity and pool-size dynamics; pass extra
     streams and profiles beyond k*M to give joiners somewhere to land.
 
-``benchmarks/cluster_bench.py`` compares the three under 1x/2x/4x node
-heterogeneity; ``examples/heterogeneous_cluster.py`` is the narrated
-tour.
+``benchmarks/cluster_bench.py`` compares sync/async under 1x/2x/4x node
+heterogeneity and across registered scenarios on a 2-pod topology;
+``examples/heterogeneous_cluster.py`` is the narrated tour.
 """
-from repro.cluster.network import NetworkModel
-from repro.cluster.node import (NodeProfile, Slowdown,
-                                make_heterogeneous_profiles)
+from repro.cluster.network import (FABRIC_SCOPES, FabricSchedule,
+                                   FabricWindow, NetworkModel, Topology)
+from repro.cluster.node import (NodeProfile, Slowdown, interleave_pods,
+                                make_heterogeneous_profiles,
+                                make_pod_profiles)
 from repro.cluster.runtime import (POLICIES, ClusterEvent, ClusterReport,
                                    run_cluster)
+from repro.cluster.scenarios import (SCENARIOS, build_scenario,
+                                     list_scenarios, register_scenario)
 
 __all__ = [
-    "POLICIES", "ClusterEvent", "ClusterReport", "NetworkModel",
-    "NodeProfile", "Slowdown", "make_heterogeneous_profiles",
-    "run_cluster",
+    "FABRIC_SCOPES", "POLICIES", "SCENARIOS", "ClusterEvent",
+    "ClusterReport", "FabricSchedule", "FabricWindow", "NetworkModel",
+    "NodeProfile", "Slowdown", "Topology", "build_scenario",
+    "interleave_pods", "list_scenarios", "make_heterogeneous_profiles",
+    "make_pod_profiles", "register_scenario", "run_cluster",
 ]

@@ -1,49 +1,287 @@
-"""Latency + bandwidth network cost model.
+"""Network cost models: flat ring and pod-aware topology.
 
-Extends the byte accounting of ``repro.core.comms`` into *time*: a ring
-all-reduce over a set of :class:`~repro.cluster.node.NodeProfile`s is
-bottlenecked by the slowest participating link and pays per-hop latency
-on each of its 2(p−1) steps.  The cluster runtime uses this to decide
-how long an outer sync keeps a trainer (sync policy) or the wire (async
-policy) busy.
+Extends the byte accounting of ``repro.core.comms`` into *time*.  Two
+models share one interface (``allreduce_time`` / ``point_to_point_time``
+/ ``add_fabric_window``, all taking a ``now``):
+
+:class:`NetworkModel`
+    The flat model: one ring over all participants, bottlenecked by the
+    slowest link.  Kept as the topology-oblivious baseline.
+:class:`Topology`
+    Nodes grouped into pods with fast intra-pod links and explicit,
+    slower cross-pod bottleneck paths.  Collectives spanning pods are
+    priced by :func:`~repro.core.comms.hierarchical_allreduce_time`
+    (per-pod reduce-scatter, cross-pod shard exchange, per-pod
+    all-gather).
+
+Both carry time-varying fabric state: a :class:`FabricSchedule` is a
+baseline ``bw_scale``/``extra_latency`` plus piecewise-constant
+:class:`FabricWindow`\\ s, so scenarios can open bursty congestion
+windows or partition pods without touching per-node profiles.  The
+cluster runtime re-prices in-flight collectives at every window edge.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Sequence
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.comms import TimedCommsMeter, ring_allreduce_time
+from repro.core.comms import (TimedCommsMeter, hierarchical_allreduce_time,
+                              ring_allreduce_time)
 from repro.cluster.node import DEFAULT_LATENCY, NodeProfile
+
+#: valid scopes for fabric windows (Topology distinguishes intra/inter;
+#: the flat NetworkModel has a single fabric and treats them alike)
+FABRIC_SCOPES = ("all", "intra", "inter")
 
 
 @dataclass
-class NetworkModel:
-    """Cost model for collectives among virtual nodes.
+class FabricWindow:
+    """Fabric degradation active inside [start, end): link bandwidth is
+    multiplied by ``bw_scale`` and every hop pays ``extra_latency``."""
 
-    ``bw_scale``/``extra_latency`` let scenarios degrade the fabric
-    globally (congestion) without touching per-node profiles.
+    start: float
+    end: float
+    bw_scale: float = 1.0
+    extra_latency: float = 0.0
+
+
+@dataclass
+class FabricSchedule:
+    """Piecewise-constant time-varying fabric state.
+
+    ``bw_scale``/``extra_latency`` are the always-on baseline;
+    overlapping windows compose (scales multiply, latencies add), so a
+    congestion burst during a partition degrades the fabric further.
     """
 
     bw_scale: float = 1.0
     extra_latency: float = 0.0
+    windows: List[FabricWindow] = field(default_factory=list)
+
+    def add_window(self, start: float, duration: Optional[float] = None, *,
+                   bw_scale: float = 1.0,
+                   extra_latency: float = 0.0) -> FabricWindow:
+        """Open a window at ``start``; ``duration`` of None (or <= 0)
+        means the degradation is permanent."""
+        if bw_scale <= 0.0:
+            raise ValueError(f"bw_scale must be positive, got {bw_scale}")
+        if extra_latency < 0.0:
+            raise ValueError(
+                f"extra_latency must be >= 0, got {extra_latency}")
+        end = (start + duration if duration is not None and duration > 0
+               else math.inf)
+        w = FabricWindow(start, end, bw_scale, extra_latency)
+        self.windows.append(w)
+        return w
+
+    def at(self, now: float) -> Tuple[float, float]:
+        """(bandwidth scale, extra latency) in effect at time ``now``."""
+        scale, extra = self.bw_scale, self.extra_latency
+        for w in self.windows:
+            if w.start <= now < w.end:
+                scale *= w.bw_scale
+                extra += w.extra_latency
+        return scale, extra
+
+    def change_points(self) -> List[float]:
+        """Finite window edges, sorted — the instants pricing changes."""
+        pts = {w.start for w in self.windows}
+        pts |= {w.end for w in self.windows if math.isfinite(w.end)}
+        return sorted(pts)
+
+
+def _check_scope(scope: str) -> None:
+    if scope not in FABRIC_SCOPES:
+        raise ValueError(f"scope must be one of {FABRIC_SCOPES}, "
+                         f"got {scope!r}")
+
+
+@dataclass
+class NetworkModel:
+    """Flat cost model: every collective is one ring over the global
+    min-bandwidth link.
+
+    ``bw_scale``/``extra_latency`` seed the baseline of the fabric
+    schedule (kept as constructor arguments for compatibility);
+    scenarios add time-windowed degradations on top via
+    :meth:`add_fabric_window`.
+    """
+
+    bw_scale: float = 1.0
+    extra_latency: float = 0.0
+    fabric: Optional[FabricSchedule] = None
+
+    def __post_init__(self) -> None:
+        if self.fabric is None:
+            self.fabric = FabricSchedule(bw_scale=self.bw_scale,
+                                         extra_latency=self.extra_latency)
+        elif self.bw_scale != 1.0 or self.extra_latency != 0.0:
+            raise ValueError(
+                "pass the baseline via the FabricSchedule, not both a "
+                "fabric and bw_scale/extra_latency")
+
+    def add_fabric_window(self, start: float,
+                          duration: Optional[float] = None, *,
+                          bw_scale: float = 1.0, extra_latency: float = 0.0,
+                          scope: str = "all") -> None:
+        _check_scope(scope)          # flat fabric: every scope is the wire
+        self.fabric.add_window(start, duration, bw_scale=bw_scale,
+                               extra_latency=extra_latency)
+
+    def fabric_change_points(self) -> List[float]:
+        return self.fabric.change_points()
 
     def allreduce_time(self, payload_bytes: float,
-                       nodes: Sequence[NodeProfile]) -> float:
+                       nodes: Sequence[NodeProfile], *,
+                       now: float = 0.0) -> float:
         p = len(nodes)
         if p <= 1:
             return 0.0
-        bw = min(n.link_bw for n in nodes) * self.bw_scale
-        lat = max(n.link_latency for n in nodes) + self.extra_latency
+        scale, extra = self.fabric.at(now)
+        bw = min(n.link_bw for n in nodes) * scale
+        if bw <= 0.0:
+            raise ValueError(
+                f"non-positive effective bandwidth {bw!r} among "
+                f"{[n.name for n in nodes]}; check link_bw / bw_scale")
+        lat = max(n.link_latency for n in nodes) + extra
         return ring_allreduce_time(payload_bytes, p, bw, lat)
 
     def point_to_point_time(self, payload_bytes: float, src: NodeProfile,
-                            dst: NodeProfile) -> float:
+                            dst: NodeProfile, *, now: float = 0.0) -> float:
         """One-directional transfer (elastic join: shipping params to a
         fresh trainer)."""
-        bw = min(src.link_bw, dst.link_bw) * self.bw_scale
-        lat = max(src.link_latency, dst.link_latency) + self.extra_latency
-        return lat + payload_bytes / max(bw, 1.0)
+        scale, extra = self.fabric.at(now)
+        bw = min(src.link_bw, dst.link_bw) * scale
+        if bw <= 0.0:
+            raise ValueError(
+                f"non-positive effective bandwidth {bw!r} between "
+                f"{src.name!r} and {dst.name!r}; check link_bw / bw_scale")
+        lat = max(src.link_latency, dst.link_latency) + extra
+        return lat + payload_bytes / bw
 
 
-__all__ = ["NetworkModel", "TimedCommsMeter", "ring_allreduce_time",
+@dataclass
+class Topology:
+    """Pods of nodes with fast intra-pod links and slower explicit
+    cross-pod bottleneck paths.
+
+    ``pods`` lists node *names* per pod; collectives are routed per-pod
+    reduce-scatter -> cross-pod shard exchange -> per-pod all-gather,
+    which reduces to the plain ring whenever all participants share a
+    pod.  ``inter_bw`` is the bandwidth of one cross-pod path (a node's
+    route to its peers in other pods; the concurrent per-node shard
+    rings each get one path), typically well below the intra-pod link
+    speed.  ``intra_fabric`` and ``inter_fabric`` carry independent
+    time-varying degradations, so a congestion scenario can squeeze
+    only the cross-pod paths (scope ``"inter"``) while intra-pod
+    traffic stays fast.
+    """
+
+    pods: List[List[str]]
+    inter_bw: float
+    inter_latency: float = DEFAULT_LATENCY
+    intra_fabric: FabricSchedule = field(default_factory=FabricSchedule)
+    inter_fabric: FabricSchedule = field(default_factory=FabricSchedule)
+
+    def __post_init__(self) -> None:
+        if self.inter_bw <= 0.0:
+            raise ValueError(f"inter_bw must be positive, got "
+                             f"{self.inter_bw}")
+        self._pod_of: Dict[str, int] = {}
+        for pi, pod in enumerate(self.pods):
+            for name in pod:
+                if name in self._pod_of:
+                    raise ValueError(f"node {name!r} appears in more than "
+                                     f"one pod")
+                self._pod_of[name] = pi
+
+    @classmethod
+    def from_profiles(cls, profiles: Sequence[NodeProfile], *,
+                      inter_bw: float,
+                      inter_latency: float = DEFAULT_LATENCY) -> "Topology":
+        """Group profiles by their ``pod`` attribute (None -> pod 0)."""
+        pods: Dict[int, List[str]] = {}
+        for p in profiles:
+            pods.setdefault(p.pod if p.pod is not None else 0,
+                            []).append(p.name)
+        return cls(pods=[pods[k] for k in sorted(pods)], inter_bw=inter_bw,
+                   inter_latency=inter_latency)
+
+    def pod_of(self, name: str) -> int:
+        try:
+            return self._pod_of[name]
+        except KeyError:
+            raise ValueError(f"node {name!r} is not in the topology "
+                             f"(known: {sorted(self._pod_of)})") from None
+
+    def add_fabric_window(self, start: float,
+                          duration: Optional[float] = None, *,
+                          bw_scale: float = 1.0, extra_latency: float = 0.0,
+                          scope: str = "all") -> None:
+        _check_scope(scope)
+        if scope in ("all", "intra"):
+            self.intra_fabric.add_window(start, duration, bw_scale=bw_scale,
+                                         extra_latency=extra_latency)
+        if scope in ("all", "inter"):
+            self.inter_fabric.add_window(start, duration, bw_scale=bw_scale,
+                                         extra_latency=extra_latency)
+
+    def fabric_change_points(self) -> List[float]:
+        return sorted(set(self.intra_fabric.change_points())
+                      | set(self.inter_fabric.change_points()))
+
+    def allreduce_time(self, payload_bytes: float,
+                       nodes: Sequence[NodeProfile], *,
+                       now: float = 0.0) -> float:
+        if len(nodes) <= 1:
+            return 0.0
+        groups: Dict[int, List[NodeProfile]] = {}
+        for n in nodes:
+            groups.setdefault(self.pod_of(n.name), []).append(n)
+        iscale, iextra = self.intra_fabric.at(now)
+        xscale, xextra = self.inter_fabric.at(now)
+        # each pod's ring is bottlenecked by its own worst member, not
+        # the worst link in the whole participant set
+        hier = hierarchical_allreduce_time(
+            payload_bytes, [len(g) for g in groups.values()],
+            [min(n.link_bw for n in g) * iscale for g in groups.values()],
+            self.inter_bw * xscale,
+            intra_latency=[max(n.link_latency for n in g) + iextra
+                           for g in groups.values()],
+            inter_latency=self.inter_latency + xextra)
+        if len(groups) == 1:
+            return hier
+        # a lopsided split (smallest pod sets the cross-phase shard
+        # granularity) can make the two-level schedule lose to a plain
+        # ring threaded through the topology; route the cheaper one
+        flat = ring_allreduce_time(
+            payload_bytes, len(nodes),
+            min(min(n.link_bw for n in nodes) * iscale,
+                self.inter_bw * xscale),
+            max(max(n.link_latency for n in nodes) + iextra,
+                self.inter_latency + xextra))
+        return min(hier, flat)
+
+    def point_to_point_time(self, payload_bytes: float, src: NodeProfile,
+                            dst: NodeProfile, *, now: float = 0.0) -> float:
+        """One-directional transfer; a cross-pod hop is additionally
+        bottlenecked by the inter-pod link and pays its latency."""
+        iscale, iextra = self.intra_fabric.at(now)
+        bw = min(src.link_bw, dst.link_bw) * iscale
+        lat = max(src.link_latency, dst.link_latency) + iextra
+        if self.pod_of(src.name) != self.pod_of(dst.name):
+            xscale, xextra = self.inter_fabric.at(now)
+            bw = min(bw, self.inter_bw * xscale)
+            lat += self.inter_latency + xextra
+        if bw <= 0.0:
+            raise ValueError(
+                f"non-positive effective bandwidth {bw!r} between "
+                f"{src.name!r} and {dst.name!r}; check link_bw / bw_scale")
+        return lat + payload_bytes / bw
+
+
+__all__ = ["FABRIC_SCOPES", "FabricSchedule", "FabricWindow",
+           "NetworkModel", "Topology", "TimedCommsMeter",
+           "hierarchical_allreduce_time", "ring_allreduce_time",
            "DEFAULT_LATENCY"]

@@ -10,6 +10,7 @@ slowdown factors.
 """
 from __future__ import annotations
 
+import itertools
 import zlib
 from dataclasses import dataclass, field
 from typing import List, Optional
@@ -40,6 +41,7 @@ class NodeProfile:
     link_latency: float = DEFAULT_LATENCY
     jitter: float = 0.0             # lognormal sigma on compute time
     seed: int = 0
+    pod: Optional[int] = None       # pod membership (None -> pod 0)
     slowdowns: List[Slowdown] = field(default_factory=list)
     _rng: Optional[np.random.Generator] = field(
         default=None, repr=False, compare=False)
@@ -48,6 +50,7 @@ class NodeProfile:
     def from_roofline(cls, name: str = "v5e", *, speed: float = 1.0,
                       jitter: float = 0.0, seed: int = 0,
                       link_latency: float = DEFAULT_LATENCY,
+                      pod: Optional[int] = None,
                       flops: Optional[float] = None,
                       hbm_bw: Optional[float] = None,
                       link_bw: Optional[float] = None) -> "NodeProfile":
@@ -59,7 +62,8 @@ class NodeProfile:
                    hbm_bw=(hbm_bw if hbm_bw is not None else HBM_BW) * speed,
                    link_bw=(link_bw if link_bw is not None else LINK_BW)
                    * speed,
-                   link_latency=link_latency, jitter=jitter, seed=seed)
+                   link_latency=link_latency, jitter=jitter, seed=seed,
+                   pod=pod)
 
     def add_slowdown(self, start: float, duration: float,
                      factor: float) -> None:
@@ -112,3 +116,43 @@ def make_heterogeneous_profiles(n: int, ratio: float = 1.0, *,
             link_latency=link_latency, flops=flops, hbm_bw=hbm_bw,
             link_bw=link_bw))
     return profiles
+
+
+def make_pod_profiles(pod_sizes: List[int], ratio: float = 1.0, *,
+                      jitter: float = 0.0, seed: int = 0,
+                      link_latency: float = DEFAULT_LATENCY,
+                      flops: Optional[float] = None,
+                      hbm_bw: Optional[float] = None,
+                      link_bw: Optional[float] = None
+                      ) -> List[NodeProfile]:
+    """Pod-structured cluster: nodes are homogeneous inside a pod and
+    pod speeds are geometrically spaced from 1.0 (pod 0) down to
+    1/ratio (last pod) — the realistic shape of mixed-generation
+    fleets.  Node ``p{i}n{j}`` carries ``pod=i`` so
+    :meth:`~repro.cluster.network.Topology.from_profiles` can recover
+    the grouping; interleave the returned list before handing it to
+    ``run_cluster`` if trainers should span pods."""
+    P = len(pod_sizes)
+    profiles = []
+    for pi, size in enumerate(pod_sizes):
+        expo = pi / max(P - 1, 1)
+        speed = float(ratio) ** (-expo) if ratio > 0 else 1.0
+        for j in range(size):
+            profiles.append(NodeProfile.from_roofline(
+                name=f"p{pi}n{j}", speed=speed, jitter=jitter,
+                seed=seed + 1000 * pi + j, link_latency=link_latency,
+                pod=pi, flops=flops, hbm_bw=hbm_bw, link_bw=link_bw))
+    return profiles
+
+
+def interleave_pods(profiles: List[NodeProfile]) -> List[NodeProfile]:
+    """Round-robin the profiles across their pods (``pod`` attribute,
+    None -> pod 0), so consecutive slices — and therefore the trainers
+    ``run_cluster`` carves out of the list — span pods and every outer
+    sync crosses the inter-pod bottleneck."""
+    groups: dict = {}
+    for p in profiles:
+        groups.setdefault(p.pod if p.pod is not None else 0, []).append(p)
+    ordered = [groups[k] for k in sorted(groups)]
+    return [p for tup in itertools.zip_longest(*ordered) for p in tup
+            if p is not None]

@@ -32,6 +32,14 @@ round is scheduled, so a collective that arrives mid-round takes effect
 at the next round boundary; a merge interrupts the in-flight round of
 the surviving representative (that round's compute is discarded, as a
 real preemption would).
+
+Fabric dynamics: outer syncs are priced through the network model at
+launch time — under a :class:`~repro.cluster.network.Topology` that
+means per-pod reduce-scatter, cross-pod shard exchange over the
+bottleneck link, and per-pod all-gather — and every ``fabric`` scenario
+event (congestion window opening or closing) re-prices in-flight
+collectives: the fraction already transferred is credited and the
+remainder re-costed under the new fabric state.
 """
 from __future__ import annotations
 
@@ -40,7 +48,7 @@ import heapq
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 
@@ -65,6 +73,13 @@ class ClusterEvent:
         leaves; its knowledge is merged into the pool via ``do_merge``.
     kind="join":     a new trainer joins on spare nodes/streams, cloned
         from the most-advanced trainer.
+    kind="fabric":   a congestion window opens on the network for
+        ``duration`` simulated seconds (<= 0: permanently): link
+        bandwidth is multiplied by ``bw_scale`` and each hop pays
+        ``extra_latency``; ``scope`` ("all"|"intra"|"inter") picks which
+        links of a :class:`~repro.cluster.network.Topology` suffer (the
+        flat model has a single fabric).  In-flight collectives are
+        re-priced at every window edge.
     """
 
     time: float
@@ -73,6 +88,9 @@ class ClusterEvent:
     tid: Optional[int] = None
     factor: float = 2.0
     duration: float = 0.0
+    bw_scale: float = 1.0
+    extra_latency: float = 0.0
+    scope: str = "all"
 
 
 @dataclass
@@ -107,6 +125,7 @@ class _TrainerRT:
     worker_params: Optional[List[Any]] = None   # None -> start from tr.params
     pending: Optional[dict] = None  # arrived comm awaiting worker rebase
     last_loss: float = 0.0          # mean loss of the last completed round
+    comm_ev: Optional[dict] = None  # in-flight collective (for re-pricing)
 
 
 class _Sim:
@@ -162,10 +181,12 @@ class _Sim:
     def launch_sync(self, rt: _TrainerRT, now: float,
                     loss: float, mode: str) -> None:
         # callers only launch after a completed round, so worker params
-        # are always materialized
+        # are always materialized.  The network model routes the
+        # collective: under a Topology the outer all-reduce is priced as
+        # per-pod reduce-scatter -> cross-pod exchange -> pod all-gather.
         snapshot = list(rt.worker_params)
         payload = param_bytes(rt.tr.params)
-        dur = self.network.allreduce_time(payload, rt.nodes)
+        dur = self.network.allreduce_time(payload, rt.nodes, now=now)
         self.pool.comms.record_timed(
             "outer", participants=len(rt.tr.inner_opt_states),
             payload_bytes=payload, step=rt.round, duration=dur)
@@ -173,10 +194,42 @@ class _Sim:
         self.report.num_syncs += 1
         rt.inflight = True
         rt.synced = rt.round
-        self.push(now + dur, "comm",
-                  {"rt": rt, "gen": rt.gen, "snapshot": snapshot,
-                   "x_prev": rt.tr.params, "round": rt.round,
-                   "loss": loss, "mode": mode})
+        ev = {"rt": rt, "gen": rt.gen, "snapshot": snapshot,
+              "x_prev": rt.tr.params, "round": rt.round,
+              "loss": loss, "mode": mode,
+              # re-pricing state: fraction done as of t_last under the
+              # total duration cur_total priced at the last fabric edge
+              "payload_bytes": payload, "t_last": now, "frac": 0.0,
+              "cur_total": dur, "t_end": now + dur,
+              "log": self.pool.comms.log[-1]}
+        rt.comm_ev = ev
+        self.push(ev["t_end"], "comm", ev)
+
+    def reprice_inflight(self, now: float) -> None:
+        """A fabric window just opened or closed: credit every in-flight
+        collective with the fraction already transferred and re-price
+        the remainder under the new fabric state."""
+        for rt in self.rts.values():
+            ev = rt.comm_ev
+            if (ev is None or not rt.alive or not rt.inflight
+                    or ev["gen"] != rt.gen or ev["t_end"] <= now):
+                continue
+            done = ev["frac"]
+            if ev["cur_total"] > 0.0:
+                done = min(1.0, done + (now - ev["t_last"])
+                           / ev["cur_total"])
+            new_total = self.network.allreduce_time(
+                ev["payload_bytes"], rt.nodes, now=now)
+            new_end = now + (1.0 - done) * new_total
+            ev.update(frac=done, t_last=now, cur_total=new_total)
+            if new_end == ev["t_end"]:
+                continue            # the queued completion is still valid
+            delta = new_end - ev["t_end"]
+            self.report.comm_time += delta
+            self.pool.comms.total_time += delta
+            ev["log"]["time_s"] = ev["log"].get("time_s", 0.0) + delta
+            ev["t_end"] = new_end
+            self.push(new_end, "comm", ev)
 
     # --------------------------------------------------------- history
     def record(self, rt: _TrainerRT, now: float, round_i: int,
@@ -237,8 +290,11 @@ class _Sim:
         rt: _TrainerRT = ev["rt"]
         if not rt.alive or ev["gen"] != rt.gen:
             return
+        if ev is not rt.comm_ev or now != ev["t_end"]:
+            return                   # superseded by a fabric re-pricing
         self.report.sim_time = max(self.report.sim_time, now)
         rt.inflight = False
+        rt.comm_ev = None
         self.rnd.outer(rt.tr, ev["snapshot"], x_prev=ev["x_prev"])
         self.record(rt, now, ev["round"], ev["loss"], ev["mode"])
 
@@ -315,6 +371,22 @@ class _Sim:
         if ev.kind == "join":
             self.do_join(now)
             return
+        if ev.kind == "fabric":
+            if not hasattr(self.network, "add_fabric_window"):
+                raise ValueError(
+                    f"network model {type(self.network).__name__} does not "
+                    f"support fabric events")
+            self.network.add_fabric_window(
+                now, ev.duration, bw_scale=ev.bw_scale,
+                extra_latency=ev.extra_latency, scope=ev.scope)
+            self.report.applied_events.append(
+                {"time": now, "kind": "fabric", "scope": ev.scope,
+                 "bw_scale": ev.bw_scale, "extra_latency": ev.extra_latency,
+                 "duration": ev.duration})
+            self.reprice_inflight(now)
+            if ev.duration > 0:      # re-price again when the window closes
+                self.push(now + ev.duration, "reprice", {})
+            return
         raise ValueError(f"unknown scenario event kind: {ev.kind!r}")
 
     def do_leave(self, now: float, tid: Optional[int]) -> None:
@@ -337,6 +409,9 @@ class _Sim:
         self.pool = do_merge(self.pool, ids, step=self.rts[leaver.tid].round)
         lrt = self.rts[leaver.tid]
         lrt.alive = False
+        # nodes go back to the spare pool; the leaver's data shards were
+        # re-homed to the survivor by do_merge, so later joins draw on
+        # the originally-provisioned spare streams only
         self.free_nodes.extend(lrt.nodes)
         brt = self.rts[best.tid]
         brt.gen += 1
@@ -367,7 +442,7 @@ class _Sim:
         self.rts[tr.tid] = rt
         # parameter shipping to the newcomer costs one point-to-point xfer
         xfer = self.network.point_to_point_time(
-            param_bytes(tr.params), src.nodes[0], nodes[0])
+            param_bytes(tr.params), src.nodes[0], nodes[0], now=now)
         self.report.applied_events.append(
             {"time": now, "kind": "join", "tid": tr.tid,
              "cloned_from": src.tr.tid, "xfer_s": xfer})
@@ -382,18 +457,26 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
                 num_outer_steps: Optional[int] = None,
                 eval_fn: Optional[Callable] = None,
                 fixed_batch: Optional[int] = None,
-                scenario: Sequence[ClusterEvent] = (),
+                scenario=(),
                 verbose: bool = False):
     """Train AdLoCo on a simulated heterogeneous cluster.
 
     ``streams`` beyond the initial k*M shards form the spare pool handed
     to trainers that join mid-run (elastic scenarios); ``profiles``
-    beyond k*M likewise.  Returns (TrainerPoolState, History,
-    ClusterReport) — the History carries ``sim_time`` so convergence can
-    be plotted against the simulated clock.
+    beyond k*M likewise.  ``network`` is a flat :class:`NetworkModel`
+    (default) or a pod-aware :class:`~repro.cluster.network.Topology` —
+    the choice changes the simulated clock, never the numerics.
+    ``scenario`` is a sequence of :class:`ClusterEvent`\\ s or the name
+    of a registered scenario (see ``repro.cluster.scenarios``).
+    Returns (TrainerPoolState, History, ClusterReport) — the History
+    carries ``sim_time`` so convergence can be plotted against the
+    simulated clock.
     """
     if policy not in POLICIES:
         raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+    if isinstance(scenario, str):
+        from repro.cluster.scenarios import build_scenario
+        scenario = build_scenario(scenario)
     k, M = len(init_params_list), acfg.nodes_per_gpu
     T = num_outer_steps or acfg.num_outer_steps
     if profiles is None:
@@ -401,11 +484,13 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
     if len(profiles) < k * M:
         raise ValueError(f"need >= {k * M} node profiles, got "
                          f"{len(profiles)}")
-    # the sim mutates node state (jitter RNG draws, scenario slowdowns):
-    # work on copies so caller-owned profiles stay reusable and repeated
-    # runs are independent and reproducible
+    # the sim mutates node and fabric state (jitter RNG draws, scenario
+    # slowdowns, congestion windows): work on copies so caller-owned
+    # profiles/networks stay reusable and repeated runs are independent
+    # and reproducible
     profiles = [copy.deepcopy(p) for p in profiles]
-    network = network or NetworkModel()
+    network = (copy.deepcopy(network) if network is not None
+               else NetworkModel())
 
     sim = _Sim(loss_fn, acfg, policy=policy, profiles=list(profiles),
                network=network, eval_fn=eval_fn, fixed_batch=fixed_batch,
@@ -424,6 +509,12 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
 
     for ev in sorted(scenario, key=lambda e: e.time):
         sim.push(ev.time, "scenario", {"ev": ev})
+    # windows pre-installed on the caller's fabric schedules must also
+    # re-price in-flight collectives at their edges (scenario-delivered
+    # windows handle this when the fabric event is applied)
+    if hasattr(network, "fabric_change_points"):
+        for t in network.fabric_change_points():
+            sim.push(t, "reprice", {})
     for rt in sim.rts.values():
         sim.start_round(rt, 0.0)
 
@@ -433,6 +524,8 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
             sim.on_round_done(when, payload)
         elif kind == "comm":
             sim.on_comm_done(when, payload)
+        elif kind == "reprice":      # a fabric window closed
+            sim.reprice_inflight(when)
         else:
             sim.on_scenario(when, payload["ev"])
 

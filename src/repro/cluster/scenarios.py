@@ -1,0 +1,133 @@
+"""Scripted scenario library: named, deterministic generators that
+compile to :class:`~repro.cluster.runtime.ClusterEvent` streams.
+
+Benchmarks and tests run the *same* scenario by name — ``run_cluster``
+accepts ``scenario="spot_churn"`` directly — so a scheduler refactor
+that changes simulated behavior is caught by the golden-trace suite in
+``tests/test_scenarios.py``.  Every generator is a pure function of its
+keyword knobs (``spot_churn`` draws from a generator seeded by its
+``seed`` knob), so the same knobs always compile to the same event
+stream.
+
+Registered scenarios and their knobs
+------------------------------------
+``baseline()``
+    No events: the undisturbed fabric, the control arm of every sweep.
+``bursty_congestion(start, period, burst, depth, extra_latency, count,
+scope)``
+    ``count`` congestion windows of ``burst`` seconds, one every
+    ``period`` seconds starting at ``start``: bandwidth is multiplied by
+    ``depth`` (< 1) and every hop pays ``extra_latency`` while a window
+    is open.  ``scope`` picks which links suffer ("inter" squeezes only
+    the cross-pod bottleneck of a :class:`Topology`).
+``spot_churn(seed, rate, horizon, rejoin_after, start)``
+    Poisson spot-instance churn: leave events with exponential
+    inter-arrival gaps (``rate`` per simulated second, until
+    ``horizon``), each followed ``rejoin_after`` seconds later by a join
+    that restores capacity from the spare pool.  A leave re-homes the
+    leaver's data shards to the surviving trainer (they are *not*
+    returned as spares), so the number of spare streams provisioned
+    bounds how many rejoins land — under-provision and the pool
+    collapses, which is itself a scenario worth measuring.
+``pod_partition(start, duration, residual, extra_latency)``
+    The cross-pod links all but fail for ``duration`` seconds:
+    bandwidth drops to ``residual`` of nominal and hops pay
+    ``extra_latency`` — a fabric partition that intra-pod traffic never
+    notices.
+``flash_crowd_join(start, joins, spacing)``
+    ``joins`` trainers join in quick succession (every ``spacing``
+    seconds) — a flash crowd landing on the spare pool.  Joins beyond
+    the spare capacity are no-ops.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.cluster.runtime import ClusterEvent
+
+#: name -> generator; use :func:`register_scenario` to extend
+SCENARIOS: Dict[str, Callable[..., List[ClusterEvent]]] = {}
+
+
+def register_scenario(name: str):
+    """Decorator: register a generator under ``name``.  Generators must
+    be deterministic functions of their keyword arguments."""
+    def deco(fn: Callable[..., List[ClusterEvent]]):
+        if name in SCENARIOS:
+            raise ValueError(f"scenario {name!r} already registered")
+        SCENARIOS[name] = fn
+        return fn
+    return deco
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+def build_scenario(name: str, **knobs) -> List[ClusterEvent]:
+    """Compile the registered scenario ``name`` to its event stream."""
+    try:
+        gen = SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; registered: "
+                         f"{list_scenarios()}") from None
+    return gen(**knobs)
+
+
+@register_scenario("baseline")
+def baseline() -> List[ClusterEvent]:
+    return []
+
+
+@register_scenario("bursty_congestion")
+def bursty_congestion(*, start: float = 0.005, period: float = 0.02,
+                      burst: float = 0.01, depth: float = 0.1,
+                      extra_latency: float = 8e-3, count: int = 6,
+                      scope: str = "inter") -> List[ClusterEvent]:
+    if not 0.0 < depth:
+        raise ValueError(f"depth must be positive, got {depth}")
+    return [ClusterEvent(time=start + i * period, kind="fabric",
+                         scope=scope, bw_scale=depth,
+                         extra_latency=extra_latency, duration=burst)
+            for i in range(count)]
+
+
+@register_scenario("spot_churn")
+def spot_churn(*, seed: int = 0, rate: float = 50.0, horizon: float = 0.06,
+               rejoin_after: float = 0.015,
+               start: float = 0.005) -> List[ClusterEvent]:
+    if rate <= 0.0:
+        raise ValueError(f"rate must be positive, got {rate}")
+    rng = np.random.default_rng(seed)
+    events: List[ClusterEvent] = []
+    t = start
+    while True:
+        t += float(rng.exponential(1.0 / rate))
+        if t >= horizon:
+            break
+        events.append(ClusterEvent(time=t, kind="leave"))
+        events.append(ClusterEvent(time=t + rejoin_after, kind="join"))
+    return events
+
+
+@register_scenario("pod_partition")
+def pod_partition(*, start: float = 0.02, duration: float = 0.03,
+                  residual: float = 0.05,
+                  extra_latency: float = 2e-2) -> List[ClusterEvent]:
+    return [ClusterEvent(time=start, kind="fabric", scope="inter",
+                         bw_scale=residual, extra_latency=extra_latency,
+                         duration=duration)]
+
+
+@register_scenario("flash_crowd_join")
+def flash_crowd_join(*, start: float = 0.02, joins: int = 2,
+                     spacing: float = 0.01) -> List[ClusterEvent]:
+    return [ClusterEvent(time=start + i * spacing, kind="join")
+            for i in range(joins)]
+
+
+__all__ = ["SCENARIOS", "register_scenario", "list_scenarios",
+           "build_scenario", "baseline", "bursty_congestion", "spot_churn",
+           "pod_partition", "flash_crowd_join"]

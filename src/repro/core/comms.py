@@ -8,7 +8,7 @@ Bytes use the ring all-reduce model: 2 (p−1)/p · payload per participant.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List
+from typing import List, Sequence
 
 import jax
 import numpy as np
@@ -44,14 +44,81 @@ def ring_allreduce_time(payload_bytes: float, participants: int,
 
     2(p−1) ring steps, each paying the per-hop latency; every node
     transmits 2(p−1)/p · payload bytes over its (slowest) link.  With
-    p <= 1 there is nothing to exchange.
+    p <= 1 there is nothing to exchange.  A non-positive bandwidth is a
+    misconfiguration and fails loudly (there is no 1 byte/s floor to
+    silently absorb it).
     """
     p = max(int(participants), 1)
     if p == 1 or payload_bytes <= 0:
         return 0.0
+    if link_bw <= 0.0:
+        raise ValueError(f"link_bw must be positive, got {link_bw}")
     steps = 2 * (p - 1)
     wire = 2.0 * (p - 1) / p * payload_bytes
-    return steps * latency + wire / max(link_bw, 1.0)
+    return steps * latency + wire / link_bw
+
+
+def _per_pod(value, pod_sizes: Sequence[int], what: str):
+    try:
+        vals = [float(v) for v in value]
+    except TypeError:
+        return [float(value)] * len(pod_sizes)
+    if len(vals) != len(pod_sizes):
+        raise ValueError(f"per-pod {what} needs {len(pod_sizes)} entries, "
+                         f"got {len(vals)}")
+    return vals
+
+
+def hierarchical_allreduce_time(payload_bytes: float,
+                                pod_sizes: Sequence[int],
+                                intra_bw, inter_bw: float, *,
+                                intra_latency=0.0,
+                                inter_latency: float = 0.0) -> float:
+    """Two-level all-reduce cost over pods, in seconds.
+
+    Models the standard hierarchical schedule: (1) ring reduce-scatter
+    inside every pod (pods run in parallel; the slowest pod is the
+    critical path), (2) cross-pod exchange — each node's shard rides its
+    own ring over the P pods, so the critical shard is
+    ``payload / min(pod_sizes)`` — and (3) ring all-gather inside every
+    pod.  ``inter_bw`` is the bandwidth of one cross-pod *path* (one
+    node's route to its peers in other pods), not an aggregate pipe: the
+    per-node shard rings are concurrent, which is what makes the
+    schedule collapse to the flat ring when cross-pod paths match node
+    links.  ``intra_bw``/``intra_latency`` are single values for every
+    pod or per-pod sequences aligned with ``pod_sizes`` (pods of mixed
+    hardware generations have different links).  With a single pod this
+    is exactly :func:`ring_allreduce_time`; with *equal pod splits* and
+    cross-pod paths at least as good as node links (bandwidth and
+    latency) it never exceeds the flat ring over all nodes.  A lopsided
+    split can exceed the flat ring — the smallest pod sets the cross
+    phase's shard granularity — which is why
+    :meth:`~repro.cluster.network.Topology.allreduce_time` routes via
+    the cheaper of this and the topology-priced flat ring.
+    """
+    bws = _per_pod(intra_bw, pod_sizes, "intra_bw")
+    lats = _per_pod(intra_latency, pod_sizes, "intra_latency")
+    pods = [(int(s), b, l) for s, b, l in zip(pod_sizes, bws, lats)
+            if s >= 1]
+    if not pods:
+        return 0.0
+    total = sum(s for s, _, _ in pods)
+    if total <= 1 or payload_bytes <= 0:
+        return 0.0
+    if any(b <= 0.0 for _, b, _ in pods):
+        raise ValueError(f"intra_bw must be positive, got {intra_bw}")
+    if len(pods) == 1:
+        return ring_allreduce_time(payload_bytes, pods[0][0], pods[0][1],
+                                   pods[0][2])
+    if inter_bw <= 0.0:
+        raise ValueError(f"inter_bw must be positive, got {inter_bw}")
+    # reduce-scatter + all-gather: (p-1) hops each, (p-1)/p of the
+    # payload over the pod's slowest link each
+    scatter = max((p - 1) * l + ((p - 1) / p * payload_bytes) / b
+                  for p, b, l in pods)
+    cross = ring_allreduce_time(payload_bytes / min(s for s, _, _ in pods),
+                                len(pods), inter_bw, inter_latency)
+    return 2.0 * scatter + cross
 
 
 @dataclass

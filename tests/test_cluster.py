@@ -9,9 +9,11 @@ import pytest
 
 from repro.configs.base import AdLoCoConfig
 from repro.core import train_adloco
-from repro.core.comms import ring_allreduce_time
-from repro.cluster import (ClusterEvent, NetworkModel, NodeProfile,
-                           make_heterogeneous_profiles, run_cluster)
+from repro.core.comms import hierarchical_allreduce_time, ring_allreduce_time
+from repro.cluster import (ClusterEvent, FabricSchedule, NetworkModel,
+                           NodeProfile, Topology, interleave_pods,
+                           make_heterogeneous_profiles, make_pod_profiles,
+                           run_cluster)
 
 from tests.test_adloco_integration import QuadStream, _quad_setup, quad_loss
 
@@ -75,6 +77,130 @@ def test_network_model_bottlenecked_by_slowest_link():
     assert t_fs > t_ff
 
 
+def test_point_to_point_rejects_nonpositive_bandwidth():
+    """A zero/negative-bandwidth misconfiguration must fail loudly, not
+    silently price the transfer at the old 1 byte/s floor."""
+    good = NodeProfile.from_roofline(name="g", **TOY)
+    dead = NodeProfile.from_roofline(name="d", **TOY)
+    dead.link_bw = 0.0
+    with pytest.raises(ValueError, match="bandwidth"):
+        NetworkModel().point_to_point_time(1e3, good, dead)
+    with pytest.raises(ValueError, match="bandwidth"):
+        NetworkModel().allreduce_time(1e3, [good, dead])
+    topo = Topology(pods=[["g", "d"]], inter_bw=1e5)
+    with pytest.raises(ValueError, match="bandwidth"):
+        topo.point_to_point_time(1e3, good, dead)
+    with pytest.raises(ValueError, match="intra_bw"):
+        topo.allreduce_time(1e3, [good, dead])
+    # a healthy pair still prices finitely
+    assert NetworkModel().point_to_point_time(1e3, good, good) > 0.0
+
+
+def test_network_model_rejects_conflicting_baseline():
+    """Passing a fabric schedule and the legacy bw_scale/extra_latency
+    constants together would silently drop the constants."""
+    with pytest.raises(ValueError, match="FabricSchedule"):
+        NetworkModel(bw_scale=0.5, fabric=FabricSchedule())
+    # either spelling alone works and prices identically
+    a = NetworkModel(bw_scale=0.5)
+    b = NetworkModel(fabric=FabricSchedule(bw_scale=0.5))
+    n0 = NodeProfile.from_roofline(name="n0", **TOY)
+    n1 = NodeProfile.from_roofline(name="n1", **TOY)
+    assert a.allreduce_time(1e3, [n0, n1]) == b.allreduce_time(1e3, [n0, n1])
+
+
+def test_fabric_schedule_windows_compose():
+    sched = FabricSchedule(bw_scale=1.0, extra_latency=0.0)
+    sched.add_window(1.0, 2.0, bw_scale=0.5, extra_latency=1e-3)
+    sched.add_window(2.0, 2.0, bw_scale=0.5, extra_latency=1e-3)
+    assert sched.at(0.5) == (1.0, 0.0)
+    assert sched.at(1.5) == (0.5, 1e-3)              # first window only
+    assert sched.at(2.5) == (0.25, 2e-3)             # overlap: composed
+    assert sched.at(3.5) == (0.5, 1e-3)              # second window only
+    assert sched.at(4.0) == (1.0, 0.0)               # half-open intervals
+    sched.add_window(9.0, None, bw_scale=0.1)        # permanent
+    assert sched.at(1e9) == (0.1, 0.0)
+    with pytest.raises(ValueError, match="bw_scale"):
+        sched.add_window(0.0, 1.0, bw_scale=0.0)
+
+
+def test_topology_routes_through_pods():
+    """Cross-pod collectives pay the bottleneck; intra-pod ones price
+    exactly like the flat ring (the hierarchical model collapses)."""
+    profiles = make_pod_profiles([2, 2], **TOY)
+    topo = Topology.from_profiles(profiles, inter_bw=5e4,
+                                  inter_latency=4e-3)
+    a0, a1, b0, b1 = profiles
+    intra = topo.allreduce_time(1e3, [a0, a1])
+    assert intra == NetworkModel().allreduce_time(1e3, [a0, a1])
+    cross = topo.allreduce_time(1e3, [a0, b0])
+    assert cross == hierarchical_allreduce_time(
+        1e3, [1, 1], a0.link_bw, 5e4, intra_latency=a0.link_latency,
+        inter_latency=4e-3)
+    assert cross > intra                 # the bottleneck link is slower
+    # congestion on the inter fabric leaves intra-pod pricing untouched
+    topo.add_fabric_window(0.0, 1.0, bw_scale=0.1, scope="inter")
+    assert topo.allreduce_time(1e3, [a0, a1], now=0.5) == intra
+    assert topo.allreduce_time(1e3, [a0, b0], now=0.5) > cross
+    with pytest.raises(ValueError, match="not in the topology"):
+        topo.allreduce_time(1e3, [a0, NodeProfile.from_roofline(
+            name="stranger", **TOY)])
+    with pytest.raises(ValueError, match="scope"):
+        topo.add_fabric_window(0.0, 1.0, scope="wat")
+
+
+def test_topology_prices_each_pod_ring_at_its_own_bandwidth():
+    """Mixed-generation pods: the fast pod's reduce-scatter must not be
+    billed at the slow pod's link speed — the critical path is the max
+    of the per-pod times, each at that pod's own bandwidth."""
+    profiles = make_pod_profiles([3, 1], ratio=2.0, **TOY)
+    topo = Topology.from_profiles(profiles, inter_bw=1e9,
+                                  inter_latency=0.0)
+    a0, a1, a2, b0 = profiles
+    assert b0.link_bw == pytest.approx(a0.link_bw / 2)
+    t = topo.allreduce_time(1e3, profiles)
+    lat = max(p.link_latency for p in profiles)
+    # slow pod has one node (its ring is free): the critical scatter is
+    # the fast pod's, at the fast pod's own bandwidth
+    scatter = 2 * lat + (2 / 3 * 1e3) / a0.link_bw
+    cross = ring_allreduce_time(1e3, 2, 1e9, 0.0)
+    assert t == pytest.approx(2 * scatter + cross)
+    # the old global-min pricing billed that ring at the slow pod's bw
+    old = 2 * (2 * lat + (2 / 3 * 1e3) / b0.link_bw) + cross
+    assert t < old
+    # latency is per-pod too: a high-latency pod whose ring has no hops
+    # (single node) must not tax the fast pod's hops
+    b0.link_latency = 0.1
+    assert topo.allreduce_time(1e3, profiles) == pytest.approx(t)
+
+
+def test_preinstalled_fabric_window_reprices_inflight():
+    """A congestion window configured directly on the network (no
+    scenario events) that opens while the run's only collective is in
+    flight must stretch that collective: window edges from the caller's
+    schedule re-price in-flight syncs too."""
+    acfg = dataclasses.replace(BASE, enable_merge=False,
+                               num_init_trainers=1, num_outer_steps=1)
+    sims = {}
+    for congested in (False, True):
+        net = NetworkModel()
+        if congested:
+            # the single sync flies roughly [1ms, 5.3ms); open at 2ms
+            net.add_fabric_window(2e-3, 1.0, bw_scale=0.05,
+                                  extra_latency=0.1)
+        _, inits, streams = _quad_setup(k=1, M=2)
+        _, _, rep = run_cluster(quad_loss, inits, streams, acfg,
+                                policy="sync", profiles=_profiles(2),
+                                network=net)
+        sims[congested] = rep
+        assert rep.num_syncs == 1
+    # launch-time pricing alone would leave sim_time unchanged (~5.3ms);
+    # re-pricing the in-flight sync at the window edge dominates it
+    assert sims[False].sim_time < 1e-2
+    assert sims[True].sim_time > 5e-2
+    assert sims[True].comm_time > 10 * sims[False].comm_time
+
+
 def test_rejects_unknown_policy_and_short_profiles():
     _, inits, streams = _quad_setup()
     with pytest.raises(ValueError, match="policy"):
@@ -103,6 +229,54 @@ def test_sync_policy_matches_legacy_loop_exactly():
     assert hist_c.eval_loss[-1] == pytest.approx(hist_l.eval_loss[-1])
     assert rep.sim_time > 0 and rep.comm_time > 0
     assert len(hist_c.sim_time) == len(hist_c.loss)
+
+
+def test_sync_policy_matches_legacy_loop_under_topology():
+    """Topology + congestion change *time*, never numerics: the sync
+    policy must stay bit-identical to the host loop on a 2-pod fabric
+    with bursty cross-pod congestion in flight."""
+    acfg = dataclasses.replace(BASE, enable_merge=False)
+    prob, inits, streams = _quad_setup()
+    pool_l, _ = train_adloco(quad_loss, inits, streams, acfg)
+
+    profiles = make_pod_profiles([3, 3], ratio=2.0, **TOY)
+    interleaved = interleave_pods(profiles)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3)
+    _, inits2, streams2 = _quad_setup()
+    pool_c, _, rep = run_cluster(
+        quad_loss, inits2, streams2, acfg, policy="sync",
+        profiles=interleaved, network=topo,
+        scenario="bursty_congestion")
+    np.testing.assert_allclose(
+        np.asarray(pool_l.global_params["x"]),
+        np.asarray(pool_c.global_params["x"]), rtol=0, atol=0)
+    # the congestion windows actually hit the clock
+    assert any(e["kind"] == "fabric" for e in rep.applied_events)
+    assert rep.sim_time > 0 and rep.comm_time > 0
+
+
+def test_elastic_same_seed_and_scenario_is_reproducible():
+    """Elastic runs are exactly reproducible: same seed + registered
+    scenario => identical report and bit-identical final params."""
+    def go():
+        profiles = make_pod_profiles([4, 4], ratio=2.0, **TOY)
+        interleaved = interleave_pods(profiles)
+        topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                      inter_latency=4e-3)
+        prob, inits, streams = _quad_setup()
+        streams = streams + [QuadStream(prob, 100 + i) for i in range(2)]
+        return run_cluster(quad_loss, inits, streams, BASE,
+                           policy="elastic", profiles=interleaved,
+                           network=topo, scenario="spot_churn")
+
+    pool1, _, rep1 = go()
+    pool2, _, rep2 = go()
+    assert rep1.summary() == rep2.summary()
+    assert rep1.applied_events == rep2.applied_events
+    np.testing.assert_allclose(
+        np.asarray(pool1.global_params["x"]),
+        np.asarray(pool2.global_params["x"]), rtol=0, atol=0)
 
 
 def test_sync_cluster_merges_contract_pool():

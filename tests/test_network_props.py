@@ -1,0 +1,83 @@
+"""Property tests for the network cost models.
+
+The invariants that make topology-aware routing safe to use
+unconditionally: the two-level hierarchical schedule never loses to the
+flat ring when the cross-pod bottleneck is at least as good as a node
+link, it is monotone in payload, cheaper cross-pod links never hurt,
+and a single pod collapses exactly to the ring model.
+"""
+import pytest
+
+# property tests ride along whenever hypothesis is installed (CI
+# installs it; the bare jax image can still run the rest of the suite)
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.comms import (hierarchical_allreduce_time,  # noqa: E402
+                              ring_allreduce_time)
+
+bws = st.floats(min_value=1e-6, max_value=1e12)
+payloads = st.floats(min_value=1.0, max_value=1e12)
+lats = st.floats(min_value=0.0, max_value=1.0)
+
+
+@given(payload=payloads, pods=st.integers(2, 8), per_pod=st.integers(1, 8),
+       bw=bws, boost=st.floats(1.0, 1e4), lat=lats,
+       lat_frac=st.floats(0.0, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_hierarchical_never_loses_to_flat_ring(payload, pods, per_pod, bw,
+                                               boost, lat, lat_frac):
+    """With equal-size pods, cross-pod bandwidth >= the per-node link
+    bandwidth and cross-pod latency no worse than a hop, the two-level
+    schedule is at most the flat ring over all nodes (equality when the
+    bottleneck is exactly a node link)."""
+    n = pods * per_pod
+    flat = ring_allreduce_time(payload, n, bw, lat)
+    hier = hierarchical_allreduce_time(
+        payload, [per_pod] * pods, bw, bw * boost,
+        intra_latency=lat, inter_latency=lat * lat_frac)
+    assert hier <= flat * (1 + 1e-9) + 1e-12
+
+
+@given(a=payloads, b=payloads, pods=st.lists(st.integers(1, 8), min_size=1,
+                                             max_size=6),
+       intra=bws, inter=bws, lat_i=lats, lat_x=lats)
+@settings(max_examples=200, deadline=None)
+def test_hierarchical_monotone_in_payload(a, b, pods, intra, inter,
+                                          lat_i, lat_x):
+    lo, hi = min(a, b), max(a, b)
+    t_lo = hierarchical_allreduce_time(lo, pods, intra, inter,
+                                       intra_latency=lat_i,
+                                       inter_latency=lat_x)
+    t_hi = hierarchical_allreduce_time(hi, pods, intra, inter,
+                                       intra_latency=lat_i,
+                                       inter_latency=lat_x)
+    assert t_lo <= t_hi * (1 + 1e-9)
+
+
+@given(payload=payloads, p=st.integers(1, 64), bw=bws, lat=lats,
+       inter=bws, lat_x=lats)
+@settings(max_examples=200, deadline=None)
+def test_single_pod_reduces_to_ring(payload, p, bw, lat, inter, lat_x):
+    """One pod: the cross-pod terms vanish and the result is exactly
+    the flat ring (bit-for-bit, so Topology pricing of an intra-pod
+    collective agrees with NetworkModel)."""
+    assert hierarchical_allreduce_time(
+        payload, [p], bw, inter, intra_latency=lat,
+        inter_latency=lat_x) == ring_allreduce_time(payload, p, bw, lat)
+
+
+@given(payload=payloads, pods=st.lists(st.integers(1, 8), min_size=2,
+                                       max_size=6),
+       intra=bws, inter=bws, boost=st.floats(1.0, 1e4), lat_i=lats,
+       lat_x=lats)
+@settings(max_examples=200, deadline=None)
+def test_more_cross_pod_bandwidth_never_hurts(payload, pods, intra, inter,
+                                              boost, lat_i, lat_x):
+    slow = hierarchical_allreduce_time(payload, pods, intra, inter,
+                                       intra_latency=lat_i,
+                                       inter_latency=lat_x)
+    fast = hierarchical_allreduce_time(payload, pods, intra, inter * boost,
+                                       intra_latency=lat_i,
+                                       inter_latency=lat_x)
+    assert fast <= slow * (1 + 1e-9)

@@ -1,0 +1,158 @@
+"""Golden-trace regression tests for the scenario registry.
+
+Every registered scenario, run with a fixed seed on a canonical 2-pod
+cluster, must reproduce a stored digest of its ``ClusterReport`` —
+summary *and* applied events — so a scheduler or cost-model refactor
+cannot silently change simulated behavior.  The harness pins
+``fixed_batch`` + ``adaptive=False`` so simulated timings are pure
+Python float arithmetic (no jax numerics in the digest) and the goldens
+hold across platforms.
+
+If a change to the runtime/cost models is *intended* to move these
+digests, rerun ``_run(name)`` for each scenario and update GOLDEN with
+the new values — that diff is the reviewable record of the behavior
+change.
+"""
+import dataclasses
+import hashlib
+import json
+
+import pytest
+
+from repro.configs.base import AdLoCoConfig
+from repro.cluster import (Topology, interleave_pods, list_scenarios,
+                           make_pod_profiles, run_cluster)
+from repro.cluster.scenarios import build_scenario
+
+from tests.test_adloco_integration import QuadStream, _quad_setup, quad_loss
+
+TOY = dict(flops=1e6, hbm_bw=1e9, link_bw=2e5, link_latency=2e-3)
+
+# fixed_batch + adaptive=False: timings decouple from jax numerics, so
+# the digests are pure-Python-float deterministic
+ACFG = AdLoCoConfig(num_outer_steps=8, num_inner_steps=5, lr_inner=0.05,
+                    lr_outer=0.7, outer_momentum=0.5, nodes_per_gpu=2,
+                    num_init_trainers=3, initial_batch_size=2,
+                    merge_frequency=3, eta=0.8, max_batch=16,
+                    inner_optimizer="sgd", stats_probe_size=32,
+                    enable_merge=False, adaptive=False)
+
+GOLDEN = {
+    "baseline": "d84cea9f20b3edc8",
+    "bursty_congestion": "d33d3451a9bcb212",
+    "flash_crowd_join": "3260d6cef3af4529",
+    "pod_partition": "868dc71fa3b7d1cc",
+    "spot_churn": "4242497cbb02a519",
+}
+
+
+def _run(name):
+    """Canonical scenario harness: 2 pods x 5 nodes at 2x pod speed
+    ratio, interleaved so every trainer's M=2 workers span both pods
+    (outer syncs always cross the bottleneck), 2 spare trainers' worth
+    of nodes/streams for joiners."""
+    profiles = make_pod_profiles([5, 5], ratio=2.0, **TOY)
+    interleaved = interleave_pods(profiles)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3)
+    prob, inits, streams = _quad_setup(k=3, M=2)
+    streams = streams + [QuadStream(prob, 100 + i) for i in range(4)]
+    return run_cluster(quad_loss, inits, streams, ACFG, policy="elastic",
+                       profiles=interleaved, network=topo, scenario=name,
+                       fixed_batch=4)
+
+
+def _trace(rep):
+    return {"summary": rep.summary(), "events": rep.applied_events}
+
+
+def _digest(rep) -> str:
+    blob = json.dumps(_trace(rep), sort_keys=True, default=float)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+_MEMO = {}
+
+
+def _memo_run(name):
+    if name not in _MEMO:
+        _MEMO[name] = _run(name)
+    return _MEMO[name]
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_scenario_matches_golden_trace(name):
+    _, _, rep = _memo_run(name)
+    assert _digest(rep) == GOLDEN[name], (
+        f"scenario {name!r} produced a different event/timing trace: "
+        f"{_trace(rep)}")
+
+
+def test_every_registered_scenario_has_a_golden():
+    """Registering a scenario without pinning its trace defeats the
+    regression net — add a digest here when adding a generator."""
+    assert sorted(list_scenarios()) == sorted(GOLDEN)
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_scenario_is_deterministic(name):
+    """Same seed + scenario => identical ClusterReport, field by field
+    (the acceptance criterion behind the golden digests)."""
+    _, _, rep1 = _memo_run(name)
+    _, _, rep2 = _run(name)
+    assert rep1.summary() == rep2.summary()
+    assert rep1.applied_events == rep2.applied_events
+
+
+def test_scenarios_exercise_their_event_kinds():
+    """The canonical harness must actually reach each scenario's events
+    (a scenario whose events land after the run drains tests nothing)."""
+    expected = {"bursty_congestion": {"fabric"},
+                "pod_partition": {"fabric"},
+                "flash_crowd_join": {"join"},
+                "spot_churn": {"leave", "join"}}
+    for name, kinds in expected.items():
+        _, _, rep = _memo_run(name)
+        assert kinds <= {e["kind"] for e in rep.applied_events}
+
+
+def test_build_scenario_rejects_unknown_name():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        build_scenario("nope")
+    with pytest.raises(ValueError, match="unknown scenario"):
+        _run("nope")
+
+
+def test_spot_churn_seed_controls_stream():
+    a = build_scenario("spot_churn", seed=0)
+    b = build_scenario("spot_churn", seed=0)
+    c = build_scenario("spot_churn", seed=7)
+    assert [dataclasses.astuple(e) for e in a] == \
+        [dataclasses.astuple(e) for e in b]
+    assert [e.time for e in a] != [e.time for e in c]
+
+
+def test_congestion_slows_sync_but_async_hides_it():
+    """The fabric windows must actually bite: under the sync policy the
+    congested run is strictly slower on the simulated clock than the
+    baseline, and the async policy recovers most of the gap."""
+    sims = {}
+    for name in ("baseline", "bursty_congestion"):
+        for policy in ("sync", "async"):
+            profiles = make_pod_profiles([3, 3], ratio=1.0, **TOY)
+            interleaved = interleave_pods(profiles)
+            topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                          inter_latency=4e-3)
+            _, inits, streams = _quad_setup(k=3, M=2)
+            _, _, rep = run_cluster(quad_loss, inits, streams, ACFG,
+                                    policy=policy, profiles=interleaved,
+                                    network=topo, scenario=name,
+                                    fixed_batch=4)
+            sims[(name, policy)] = rep.sim_time
+    assert sims[("bursty_congestion", "sync")] > \
+        1.05 * sims[("baseline", "sync")]
+    sync_overhead = (sims[("bursty_congestion", "sync")]
+                     - sims[("baseline", "sync")])
+    async_overhead = (sims[("bursty_congestion", "async")]
+                      - sims[("baseline", "async")])
+    assert async_overhead < sync_overhead

@@ -12,9 +12,12 @@ congested (the wire, not the worker, is the bottleneck: ACCO's case).
 
   PYTHONPATH=src python benchmarks/cluster_bench.py           # full
   PYTHONPATH=src python benchmarks/cluster_bench.py --smoke   # CI job
-  # CI scenario-smoke job: just the registered scenarios, by name
+  # CI scenario-smoke jobs: just the registered scenarios, by name
   PYTHONPATH=src python benchmarks/cluster_bench.py --smoke \\
       --scenario spot_churn --scenario bursty_congestion
+  # co-scripted scenarios on the 3-level rack/pod/cluster fabric
+  PYTHONPATH=src python benchmarks/cluster_bench.py --smoke --levels 3 \\
+      --scenario correlated_pod_failure --scenario diurnal_congestion
 """
 from __future__ import annotations
 
@@ -27,7 +30,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from repro.configs.base import AdLoCoConfig
 from repro.cluster import (ClusterEvent, Topology, interleave_pods,
                            make_heterogeneous_profiles, make_pod_profiles,
-                           run_cluster)
+                           make_rack_profiles, run_cluster)
 from repro.cluster.scenarios import build_scenario, list_scenarios
 
 from benchmarks.common import quad_setup, quad_loss, row
@@ -36,6 +39,12 @@ HET_RATIOS = (1.0, 2.0, 4.0)
 
 #: scenarios swept over the 2-pod topology in the default run
 SCENARIO_NAMES = ("baseline", "bursty_congestion", "spot_churn")
+
+#: co-scripted scenarios swept over the 3-level fabric — their default
+#: knobs target the rack/pod/cluster domain names, so they default to
+#: the 3-level harness when no --levels is given
+SCENARIO_NAMES3 = ("correlated_pod_failure", "diurnal_congestion",
+                   "rack_flap", "straggler_cascade")
 
 # outer_momentum=0.5: high Nesterov momentum (0.9) is underdamped under
 # the async policy's one-round staleness (see repro.cluster docstring);
@@ -106,10 +115,33 @@ def scenario_cluster(*, seed: int = 0, spare: int = 3, ratio: float = 2.0):
     return prob, inits, streams, eval_fn, interleave_pods(profiles), topo
 
 
-def bench_scenario(name: str, policy: str, T: int, *, seed: int = 0):
+def scenario_cluster3(*, seed: int = 0, spare: int = 1, ratio: float = 2.0):
+    """3-level cluster for the co-scripted sweep: 2 pods x 2 racks x
+    ((k + spare) * M / 4) nodes, pod 1 ``ratio``x slower, interleaved so
+    every trainer's M=2 workers span both pods — each outer sync crosses
+    the rack, pod and cluster levels."""
+    from benchmarks.common import QuadStream
+    k, M = 3, 2
+    if (k + spare) * M % 4:
+        raise ValueError(f"(k + spare) * M = {(k + spare) * M} must fill "
+                         f"the 4 racks evenly; pick spare accordingly")
+    per_rack = (k + spare) * M // 4
+    prob, inits, streams, eval_fn = quad_setup(k=k, M=M, seed=seed)
+    streams = streams + [QuadStream(prob, 100 + i, seed=seed)
+                         for i in range(spare * M)]
+    profiles = make_rack_profiles([[per_rack, per_rack]] * 2, ratio=ratio,
+                                  **TOY)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3, pod_bw=1.5e5,
+                                  pod_latency=3e-3)
+    return prob, inits, streams, eval_fn, interleave_pods(profiles), topo
+
+
+def bench_scenario(name: str, policy: str, T: int, *, seed: int = 0,
+                   levels: int = 2):
     acfg = dataclasses.replace(BASE, num_outer_steps=T)
-    prob, inits, streams, eval_fn, profiles, topo = scenario_cluster(
-        seed=seed)
+    cluster = scenario_cluster3 if levels == 3 else scenario_cluster
+    prob, inits, streams, eval_fn, profiles, topo = cluster(seed=seed)
     pool, hist, rep = run_cluster(
         quad_loss, inits, streams, acfg, policy=policy, profiles=profiles,
         network=topo, eval_fn=eval_fn, scenario=build_scenario(name))
@@ -125,21 +157,27 @@ def bench_scenario(name: str, policy: str, T: int, *, seed: int = 0):
     }
 
 
-def run_scenarios(T: int, names):
-    """sync vs async time-to-target per registered scenario on the
-    2-pod topology; the congested fabric is the acceptance gate."""
+def run_scenarios(T: int, names, levels=None):
+    """sync vs async time-to-target per registered scenario; the
+    congested 2-pod fabric is the acceptance gate.  ``levels`` of None
+    picks per scenario: co-scripted generators whose default knobs name
+    rack/pod/cluster domains run on the 3-level tree, the rest on the
+    2-pod topology."""
     rows, t2ts = [], {}
     for name in names:
         if name not in list_scenarios():
             raise SystemExit(f"unknown scenario {name!r}; registered: "
                              f"{list_scenarios()}")
+        lv = levels if levels is not None else (
+            3 if name in SCENARIO_NAMES3 else 2)
         for policy in ("sync", "async"):
-            r = bench_scenario(name, policy, T)
+            r = bench_scenario(name, policy, T, levels=lv)
             t2ts[(name, policy)] = r["t2t"]
             t2t = f"{r['t2t']:.4f}" if r["t2t"] is not None else "none"
             rows.append(row(
                 f"cluster/scenario/{name}/{policy}", r["sim_time"] * 1e6,
-                f"sim_s={r['sim_time']:.4f};comm_s={r['comm_time']:.4f};"
+                f"levels={lv};sim_s={r['sim_time']:.4f};"
+                f"comm_s={r['comm_time']:.4f};"
                 f"t2t_s={t2t};final={r['final_eval']:.4f};"
                 f"syncs={r['syncs']};k_final={r['k_final']};"
                 f"events={'+'.join(r['events']) or 'none'}"))
@@ -153,10 +191,10 @@ def run_scenarios(T: int, names):
     return rows
 
 
-def run(quick: bool = False, scenarios=None):
+def run(quick: bool = False, scenarios=None, levels=None):
     T = 8 if quick else 16
-    if scenarios is not None:        # scenario-only mode (CI smoke job)
-        return run_scenarios(T, scenarios)
+    if scenarios is not None:        # scenario-only mode (CI smoke jobs)
+        return run_scenarios(T, scenarios, levels)
     rows = []
     t2ts = {}
     for ratio in HET_RATIOS:
@@ -195,8 +233,9 @@ def run(quick: bool = False, scenarios=None):
         f"async_faster_to_target_2x={wins[2.0]};"
         f"async_faster_to_target_4x={wins[4.0]}"))
 
-    if not quick:                    # CI covers this via --scenario (the
-        rows.extend(run_scenarios(T, SCENARIO_NAMES))  # scenario-smoke job)
+    if not quick:                    # CI covers these via --scenario (the
+        rows.extend(run_scenarios(T, SCENARIO_NAMES))  # scenario-smoke jobs)
+        rows.extend(run_scenarios(T, SCENARIO_NAMES3))
     return rows
 
 
@@ -206,13 +245,17 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI run (fewer outer steps)")
     ap.add_argument("--scenario", action="append", metavar="NAME",
-                    help="run only the named registered scenario(s) over "
-                         "the 2-pod topology (repeatable); skips the "
-                         "heterogeneity sweep")
+                    help="run only the named registered scenario(s) "
+                         "(repeatable); skips the heterogeneity sweep")
+    ap.add_argument("--levels", type=int, choices=(2, 3), default=None,
+                    help="fabric depth for --scenario runs: 2 = pod "
+                         "topology, 3 = rack/pod/cluster tree (default: "
+                         "3 for the co-scripted scenarios, else 2)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     ok = True
-    for r in run(quick=args.smoke, scenarios=args.scenario):
+    for r in run(quick=args.smoke, scenarios=args.scenario,
+                 levels=args.levels):
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"",
               flush=True)
         if r["name"] == "cluster/summary":

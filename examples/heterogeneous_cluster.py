@@ -1,7 +1,8 @@
 """Tour of the virtual-cluster runtime: AdLoCo on simulated
 heterogeneous hardware with stragglers, a trainer leaving, a fresh one
-joining, and a 2-pod topology whose cross-pod bottleneck gets congested
-— comparing sync vs async outer-sync policies on the simulated clock.
+joining, a 2-pod topology whose cross-pod bottleneck gets congested,
+and a 3-level rack/pod/cluster fabric where a whole pod fails at once —
+comparing sync vs async outer-sync policies on the simulated clock.
 
   PYTHONPATH=src python examples/heterogeneous_cluster.py
 """
@@ -14,7 +15,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from repro.configs.base import AdLoCoConfig
 from repro.cluster import (ClusterEvent, Topology, interleave_pods,
                            make_heterogeneous_profiles, make_pod_profiles,
-                           run_cluster)
+                           make_rack_profiles, run_cluster)
 
 from benchmarks.common import QuadStream, quad_setup, quad_loss  # noqa: E402
 
@@ -116,6 +117,27 @@ def main():
         print(f"    {policy:5s}: {rep.sim_time * 1e3:6.1f}ms simulated "
               f"({rep.comm_time * 1e3:6.1f}ms in collectives, {n_win} "
               f"congestion windows re-priced in flight), "
+              f"E[f]={eval_fn(pool.global_params):.4f}")
+
+    print("\n=== 6. three levels: 2 pods x 2 racks x 2 nodes, and a "
+          "correlated pod\n       failure (the pod's nodes slow down AND "
+          "the pod uplinks degrade together)")
+    profiles = make_rack_profiles([[2, 2], [2, 2]], ratio=2.0, **TOY)
+    interleaved = interleave_pods(profiles)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3, pod_bw=1.5e5,
+                                  pod_latency=3e-3)
+    print(f"    domains: {', '.join(topo.domain_names())}")
+    for policy in ("sync", "async"):
+        prob, inits, streams, eval_fn = quad_setup(k=3, M=2, seed=0)
+        pool, hist, rep = run_cluster(
+            quad_loss, inits, streams, ACFG, policy=policy,
+            profiles=interleaved, network=topo, eval_fn=eval_fn,
+            scenario="correlated_pod_failure")
+        kinds = [e["kind"] for e in rep.applied_events]
+        print(f"    {policy:5s}: {rep.sim_time * 1e3:6.1f}ms simulated "
+              f"({rep.comm_time * 1e3:6.1f}ms in collectives), "
+              f"events={'+'.join(kinds)}, "
               f"E[f]={eval_fn(pool.global_params):.4f}")
 
 

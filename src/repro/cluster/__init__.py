@@ -3,20 +3,21 @@
 Runs real AdLoCo numerics (the same jitted ``TrainerRound`` primitives
 as ``repro.core.adloco``) over *simulated* heterogeneous nodes, so the
 paper's dynamic-workload scenarios — stragglers, congested fabrics,
-pod partitions, trainers joining and leaving — can be exercised and
-timed without a physical cluster.  The network model and the scenario
-change the simulated clock, never the numerics.
+flapping racks, pod partitions, trainers joining and leaving — can be
+exercised and timed without a physical cluster.  The network model and
+the scenario change the simulated clock, never the numerics.
 
 Quick start::
 
-    from repro.cluster import (Topology, make_pod_profiles, run_cluster)
+    from repro.cluster import (Topology, make_rack_profiles, run_cluster)
 
-    profiles = make_pod_profiles([4, 4], ratio=2.0)     # 2 pods, 8 nodes
-    topo = Topology.from_profiles(profiles, inter_bw=1e5)
+    # 3-level fabric: 2 pods x 2 racks x 2 nodes
+    profiles = make_rack_profiles([[2, 2], [2, 2]], ratio=2.0)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5, pod_bw=1.5e5)
     pool, hist, report = run_cluster(loss_fn, inits, streams, acfg,
                                      policy="async", profiles=profiles,
                                      network=topo, eval_fn=eval_fn,
-                                     scenario="bursty_congestion")
+                                     scenario="correlated_pod_failure")
     # hist.sim_time x hist.eval_loss -> time-to-target under the sim clock
 
 Network models
@@ -25,18 +26,29 @@ Network models
     The flat baseline: every collective is one ring over the global
     min-bandwidth link.
 ``Topology``
-    Nodes grouped into pods (by ``NodeProfile.pod`` via
-    ``Topology.from_profiles``, or explicit name lists): intra-pod
-    traffic rides the node links, cross-pod traffic rides explicit
-    bottleneck paths of ``inter_bw`` each, and collectives spanning
-    pods are priced by ``core.comms.hierarchical_allreduce_time``
-    (per-pod reduce-scatter, concurrent cross-pod shard rings, per-pod
-    all-gather).
+    An n-level tree of ``FabricDomain``\\ s (rack -> pod -> cluster, to
+    any depth).  Leaf domains hold nodes — their links are the nodes'
+    own ``link_bw`` — and each internal domain joins its children with
+    explicit per-path bandwidth/latency.  Collectives are priced by
+    ``core.comms.hierarchical_allreduce_time``: ring reduce-scatter
+    inside every leaf group, reduce-scatters of the surviving shards up
+    the internal levels, a concurrent shard ring across the top
+    bottleneck, and the mirror-image all-gathers back down.  Build one
+    from the classic two-level spelling (``pods`` + ``inter_bw``; prices
+    bit-identically to the old pod-only model), from profile attributes
+    (``from_profiles``; pass ``pod_bw`` to get rack/pod/cluster from
+    ``NodeProfile.pod``/``.rack``), or hand ``tree=`` an explicit
+    ``FabricDomain``.
 
-Both carry time-varying fabric state (``FabricSchedule``): scenarios
+Every domain carries its own time-varying ``FabricSchedule``: scenarios
 open ``FabricWindow``\\ s — bandwidth scaled by ``bw_scale``, hops
-paying ``extra_latency`` — and the runtime re-prices in-flight
-collectives at every window edge.
+paying ``extra_latency`` — scoped to ``"all"``, the leaf level
+(``"intra"``), every internal level (``"inter"``), one level
+(``"level:<k>"``, 0 = leaves), or one named domain
+(``"domain:<name>"``), so a window can hit one rack's links without
+touching the rest of the fabric.  The runtime re-prices in-flight
+collectives *and* join-time parameter transfers at every window edge
+(fraction done credited, remainder re-costed).
 
 Scenario registry
 -----------------
@@ -45,14 +57,18 @@ compile to ``ClusterEvent`` streams; ``run_cluster(scenario="<name>")``
 accepts them directly, so benchmarks and the golden-trace tests in
 ``tests/test_scenarios.py`` exercise identical event streams.
 Registered: ``baseline`` (no events), ``bursty_congestion`` (periodic
-cross-pod congestion windows: ``start``/``period``/``burst``/``depth``/
-``extra_latency``/``count``/``scope``), ``spot_churn`` (seeded Poisson
-leave events each followed by a rejoin: ``seed``/``rate``/``horizon``/
-``rejoin_after``/``start``), ``pod_partition`` (cross-pod links drop to
-``residual`` bandwidth for ``duration`` seconds), and
-``flash_crowd_join`` (``joins`` trainers landing every ``spacing``
-seconds).  See the generator docstrings for knob semantics; register
-new ones with ``scenarios.register_scenario``.
+congestion windows), ``spot_churn`` (seeded Poisson leave events each
+followed by a rejoin), ``pod_partition`` (cross-pod links drop to
+``residual`` bandwidth), ``flash_crowd_join`` (``joins`` trainers
+landing every ``spacing`` seconds), and four co-scripted generators
+that couple node dynamics with fabric windows:
+``correlated_pod_failure`` (a pod's nodes slow down *and* the fabric
+joining pods degrades, together), ``diurnal_congestion`` (piecewise-
+constant cosine bandwidth schedule), ``rack_flap`` (one named rack
+domain's level-0 fabric oscillates) and ``straggler_cascade``
+(staggered node slowdowns inside an open congestion window).  See the
+generator docstrings for knob semantics; register new ones with
+``scenarios.register_scenario``.
 
 Which sync policy should I use?
 -------------------------------
@@ -80,14 +96,16 @@ Which sync policy should I use?
     streams and profiles beyond k*M to give joiners somewhere to land.
 
 ``benchmarks/cluster_bench.py`` compares sync/async under 1x/2x/4x node
-heterogeneity and across registered scenarios on a 2-pod topology;
+heterogeneity, across registered scenarios on a 2-pod topology, and
+across the co-scripted scenarios on a 3-level rack/pod/cluster fabric;
 ``examples/heterogeneous_cluster.py`` is the narrated tour.
 """
-from repro.cluster.network import (FABRIC_SCOPES, FabricSchedule,
-                                   FabricWindow, NetworkModel, Topology)
+from repro.cluster.network import (FABRIC_SCOPES, CommDomain, FabricDomain,
+                                   FabricSchedule, FabricWindow,
+                                   NetworkModel, Topology)
 from repro.cluster.node import (NodeProfile, Slowdown, interleave_pods,
                                 make_heterogeneous_profiles,
-                                make_pod_profiles)
+                                make_pod_profiles, make_rack_profiles)
 from repro.cluster.runtime import (POLICIES, ClusterEvent, ClusterReport,
                                    run_cluster)
 from repro.cluster.scenarios import (SCENARIOS, build_scenario,
@@ -95,8 +113,9 @@ from repro.cluster.scenarios import (SCENARIOS, build_scenario,
 
 __all__ = [
     "FABRIC_SCOPES", "POLICIES", "SCENARIOS", "ClusterEvent",
-    "ClusterReport", "FabricSchedule", "FabricWindow", "NetworkModel",
-    "NodeProfile", "Slowdown", "Topology", "build_scenario",
-    "interleave_pods", "list_scenarios", "make_heterogeneous_profiles",
-    "make_pod_profiles", "register_scenario", "run_cluster",
+    "ClusterReport", "CommDomain", "FabricDomain", "FabricSchedule",
+    "FabricWindow", "NetworkModel", "NodeProfile", "Slowdown", "Topology",
+    "build_scenario", "interleave_pods", "list_scenarios",
+    "make_heterogeneous_profiles", "make_pod_profiles",
+    "make_rack_profiles", "register_scenario", "run_cluster",
 ]

@@ -1,4 +1,4 @@
-"""Network cost models: flat ring and pod-aware topology.
+"""Network cost models: flat ring and an n-level fabric-domain tree.
 
 Extends the byte accounting of ``repro.core.comms`` into *time*.  Two
 models share one interface (``allreduce_time`` / ``point_to_point_time``
@@ -8,30 +8,39 @@ models share one interface (``allreduce_time`` / ``point_to_point_time``
     The flat model: one ring over all participants, bottlenecked by the
     slowest link.  Kept as the topology-oblivious baseline.
 :class:`Topology`
-    Nodes grouped into pods with fast intra-pod links and explicit,
-    slower cross-pod bottleneck paths.  Collectives spanning pods are
+    Nodes grouped into a tree of :class:`FabricDomain`\\ s — rack ->
+    pod -> cluster, to any depth.  Leaf domains hold nodes (their links
+    are the nodes' own ``link_bw``); each internal domain joins its
+    children with explicit per-path bandwidth/latency.  Collectives are
     priced by :func:`~repro.core.comms.hierarchical_allreduce_time`
-    (per-pod reduce-scatter, cross-pod shard exchange, per-pod
-    all-gather).
+    (reduce-scatter down the levels, a shard ring across the top
+    bottleneck, all-gather back up).  The classic two-level pod scheme
+    is the depth-2 special case and prices bit-identically to it.
 
-Both carry time-varying fabric state: a :class:`FabricSchedule` is a
-baseline ``bw_scale``/``extra_latency`` plus piecewise-constant
-:class:`FabricWindow`\\ s, so scenarios can open bursty congestion
-windows or partition pods without touching per-node profiles.  The
-cluster runtime re-prices in-flight collectives at every window edge.
+Every domain carries its *own* time-varying fabric state: a
+:class:`FabricSchedule` is a baseline ``bw_scale``/``extra_latency``
+plus piecewise-constant :class:`FabricWindow`\\ s, so scenarios can open
+bursty congestion windows on one level — or one named domain — without
+touching the others.  The cluster runtime re-prices in-flight
+collectives *and* join-time point-to-point transfers at every window
+edge.
 """
 from __future__ import annotations
 
+import copy
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.comms import (TimedCommsMeter, hierarchical_allreduce_time,
+from repro.core.comms import (CommDomain, TimedCommsMeter,
+                              hierarchical_allreduce_time,
                               ring_allreduce_time)
 from repro.cluster.node import DEFAULT_LATENCY, NodeProfile
 
-#: valid scopes for fabric windows (Topology distinguishes intra/inter;
-#: the flat NetworkModel has a single fabric and treats them alike)
+#: fixed scopes for fabric windows; ``Topology`` additionally accepts
+#: ``"level:<k>"`` (every domain at height k, 0 = leaves) and
+#: ``"domain:<name>"`` (one named domain).  The flat NetworkModel has a
+#: single fabric and treats every valid scope as the wire.
 FABRIC_SCOPES = ("all", "intra", "inter")
 
 
@@ -92,9 +101,34 @@ class FabricSchedule:
 
 
 def _check_scope(scope: str) -> None:
-    if scope not in FABRIC_SCOPES:
-        raise ValueError(f"scope must be one of {FABRIC_SCOPES}, "
-                         f"got {scope!r}")
+    if scope in FABRIC_SCOPES:
+        return
+    if scope.startswith("level:") or scope.startswith("domain:"):
+        return
+    raise ValueError(f"scope must be one of {FABRIC_SCOPES} or "
+                     f"'level:<k>' / 'domain:<name>', got {scope!r}")
+
+
+@dataclass
+class FabricDomain:
+    """One domain in the fabric level tree.
+
+    A *leaf* domain lists the node names it contains; its links are the
+    nodes' own ``link_bw``/``link_latency``, so it needs no bandwidth of
+    its own.  An *internal* domain joins its ``children`` with per-path
+    bandwidth ``bw`` (one child's route to its peers at this level, not
+    an aggregate pipe) and per-hop ``latency``.  Every domain carries
+    its own :class:`FabricSchedule`: a congestion window on a pod's
+    domain squeezes only the links joining that pod's racks, a window on
+    the root squeezes only the paths joining pods.
+    """
+
+    name: str
+    bw: Optional[float] = None
+    latency: float = 0.0
+    children: List["FabricDomain"] = field(default_factory=list)
+    nodes: List[str] = field(default_factory=list)
+    fabric: FabricSchedule = field(default_factory=FabricSchedule)
 
 
 @dataclass
@@ -163,117 +197,310 @@ class NetworkModel:
 
 @dataclass
 class Topology:
-    """Pods of nodes with fast intra-pod links and slower explicit
-    cross-pod bottleneck paths.
+    """N-level fabric: a tree of :class:`FabricDomain`\\ s.
 
-    ``pods`` lists node *names* per pod; collectives are routed per-pod
-    reduce-scatter -> cross-pod shard exchange -> per-pod all-gather,
-    which reduces to the plain ring whenever all participants share a
-    pod.  ``inter_bw`` is the bandwidth of one cross-pod path (a node's
-    route to its peers in other pods; the concurrent per-node shard
-    rings each get one path), typically well below the intra-pod link
-    speed.  ``intra_fabric`` and ``inter_fabric`` carry independent
-    time-varying degradations, so a congestion scenario can squeeze
-    only the cross-pod paths (scope ``"inter"``) while intra-pod
-    traffic stays fast.
+    Construct either from the classic two-level pod spelling — ``pods``
+    lists node *names* per pod, joined by cross-pod paths of ``inter_bw``
+    each — or from an explicit ``tree`` (see :meth:`from_profiles` for
+    the rack/pod/cluster builder).  Collectives are routed reduce-scatter
+    down the levels -> shard ring across the top -> all-gather up, which
+    reduces to the plain ring whenever all participants share a leaf
+    domain.  Because the smallest sibling group sets the cross-phase
+    shard granularity, a lopsided split can lose to a plain ring
+    threaded through the same fabric; :meth:`allreduce_time` routes the
+    cheaper of the two.
+
+    Every domain has its own time-varying :class:`FabricSchedule`;
+    :meth:`add_fabric_window` scopes a degradation to all links
+    (``"all"``), the leaf level (``"intra"``), every internal level
+    (``"inter"``), one level (``"level:<k>"``, 0 = leaves), or one named
+    domain (``"domain:<name>"``).  ``intra_fabric``/``inter_fabric``
+    keep the two-level spelling working: when given, all leaf (resp.
+    internal) domains share that schedule object.
     """
 
-    pods: List[List[str]]
-    inter_bw: float
+    pods: Optional[List[List[str]]] = None
+    inter_bw: Optional[float] = None
     inter_latency: float = DEFAULT_LATENCY
-    intra_fabric: FabricSchedule = field(default_factory=FabricSchedule)
-    inter_fabric: FabricSchedule = field(default_factory=FabricSchedule)
+    intra_fabric: Optional[FabricSchedule] = None
+    inter_fabric: Optional[FabricSchedule] = None
+    tree: Optional[FabricDomain] = None
 
     def __post_init__(self) -> None:
-        if self.inter_bw <= 0.0:
-            raise ValueError(f"inter_bw must be positive, got "
-                             f"{self.inter_bw}")
+        if self.tree is None:
+            if self.pods is None or self.inter_bw is None:
+                raise ValueError("Topology needs either a tree or "
+                                 "pods + inter_bw")
+            if self.inter_bw <= 0.0:
+                raise ValueError(f"inter_bw must be positive, got "
+                                 f"{self.inter_bw}")
+            leaves = [
+                FabricDomain(
+                    name=f"p{i}", nodes=list(pod),
+                    fabric=(self.intra_fabric if self.intra_fabric
+                            is not None else FabricSchedule()))
+                for i, pod in enumerate(self.pods)]
+            self.tree = FabricDomain(
+                name="cluster", bw=self.inter_bw,
+                latency=self.inter_latency, children=leaves,
+                fabric=(self.inter_fabric if self.inter_fabric is not None
+                        else FabricSchedule()))
+        self._reindex()
+
+    # ------------------------------------------------------------ index
+    def _reindex(self) -> None:
+        self._domains: List[FabricDomain] = []
+        self._by_name: Dict[str, FabricDomain] = {}
+        self._parent: Dict[int, Optional[FabricDomain]] = {}
+        self._height: Dict[int, int] = {}
+        self._leaf_of: Dict[str, FabricDomain] = {}
         self._pod_of: Dict[str, int] = {}
-        for pi, pod in enumerate(self.pods):
-            for name in pod:
-                if name in self._pod_of:
-                    raise ValueError(f"node {name!r} appears in more than "
-                                     f"one pod")
-                self._pod_of[name] = pi
+
+        def walk(dom: FabricDomain, parent: Optional[FabricDomain],
+                 top: int) -> int:
+            if dom.nodes and dom.children:
+                raise ValueError(f"domain {dom.name!r} is both a leaf "
+                                 f"(nodes) and a parent (children)")
+            if dom.name in self._by_name:
+                raise ValueError(f"domain name {dom.name!r} appears more "
+                                 f"than once in the tree")
+            self._domains.append(dom)
+            self._by_name[dom.name] = dom
+            self._parent[id(dom)] = parent
+            if dom.children:
+                if dom.bw is None or dom.bw <= 0.0:
+                    raise ValueError(
+                        f"internal domain {dom.name!r} needs a positive "
+                        f"bw, got {dom.bw}")
+                h = 1 + max(walk(c, dom, i if parent is None else top)
+                            for i, c in enumerate(dom.children))
+            else:
+                for n in dom.nodes:
+                    if n in self._leaf_of:
+                        raise ValueError(f"node {n!r} appears in more "
+                                         f"than one domain")
+                    self._leaf_of[n] = dom
+                    self._pod_of[n] = top
+                h = 0
+            self._height[id(dom)] = h
+            return h
+
+        walk(self.tree, None, 0)
+        # derived two-level view: node names under each top-level child
+        def names(dom: FabricDomain) -> List[str]:
+            if not dom.children:
+                return list(dom.nodes)
+            return [n for c in dom.children for n in names(c)]
+        self.pods = ([names(c) for c in self.tree.children]
+                     if self.tree.children else [names(self.tree)])
+
+    def __deepcopy__(self, memo) -> "Topology":
+        new = object.__new__(Topology)
+        memo[id(self)] = new
+        new.inter_bw = self.inter_bw
+        new.inter_latency = self.inter_latency
+        new.intra_fabric = copy.deepcopy(self.intra_fabric, memo)
+        new.inter_fabric = copy.deepcopy(self.inter_fabric, memo)
+        new.tree = copy.deepcopy(self.tree, memo)
+        new._reindex()               # recomputes pods from the copied tree
+        return new
 
     @classmethod
     def from_profiles(cls, profiles: Sequence[NodeProfile], *,
                       inter_bw: float,
-                      inter_latency: float = DEFAULT_LATENCY) -> "Topology":
-        """Group profiles by their ``pod`` attribute (None -> pod 0)."""
-        pods: Dict[int, List[str]] = {}
-        for p in profiles:
-            pods.setdefault(p.pod if p.pod is not None else 0,
-                            []).append(p.name)
-        return cls(pods=[pods[k] for k in sorted(pods)], inter_bw=inter_bw,
-                   inter_latency=inter_latency)
+                      inter_latency: float = DEFAULT_LATENCY,
+                      pod_bw: Optional[float] = None,
+                      pod_latency: float = DEFAULT_LATENCY) -> "Topology":
+        """Build the tree from profile attributes.
 
-    def pod_of(self, name: str) -> int:
+        Without ``pod_bw``: the two-level scheme — profiles group by
+        their ``pod`` attribute (None -> pod 0) into leaf domains joined
+        by cross-pod paths of ``inter_bw``.  With ``pod_bw``: three
+        levels — profiles group by ``(pod, rack)`` (None -> 0) into rack
+        leaf domains named ``p<i>r<j>``, racks join inside pod domains
+        ``p<i>`` over paths of ``pod_bw``/``pod_latency``, and pods join
+        at the ``cluster`` root over ``inter_bw``/``inter_latency``.
+        """
+        if pod_bw is None:
+            pods: Dict[int, List[str]] = {}
+            for p in profiles:
+                pods.setdefault(p.pod if p.pod is not None else 0,
+                                []).append(p.name)
+            return cls(pods=[pods[k] for k in sorted(pods)],
+                       inter_bw=inter_bw, inter_latency=inter_latency)
+        grouped: Dict[int, Dict[int, List[str]]] = {}
+        for p in profiles:
+            pi = p.pod if p.pod is not None else 0
+            ri = p.rack if p.rack is not None else 0
+            grouped.setdefault(pi, {}).setdefault(ri, []).append(p.name)
+        pods_doms = [
+            FabricDomain(
+                name=f"p{pi}", bw=pod_bw, latency=pod_latency,
+                children=[FabricDomain(name=f"p{pi}r{ri}",
+                                       nodes=grouped[pi][ri])
+                          for ri in sorted(grouped[pi])])
+            for pi in sorted(grouped)]
+        return cls(tree=FabricDomain(name="cluster", bw=inter_bw,
+                                     latency=inter_latency,
+                                     children=pods_doms))
+
+    # ----------------------------------------------------------- lookup
+    def _leaf(self, name: str) -> FabricDomain:
         try:
-            return self._pod_of[name]
+            return self._leaf_of[name]
         except KeyError:
             raise ValueError(f"node {name!r} is not in the topology "
-                             f"(known: {sorted(self._pod_of)})") from None
+                             f"(known: {sorted(self._leaf_of)})") from None
+
+    def pod_of(self, name: str) -> int:
+        """Index of the top-level domain containing ``name`` (the pod
+        index under the two-level spelling)."""
+        self._leaf(name)
+        return self._pod_of[name]
+
+    def domain_names(self) -> List[str]:
+        return [d.name for d in self._domains]
+
+    # ----------------------------------------------------------- fabric
+    def _scope_domains(self, scope: str) -> List[FabricDomain]:
+        _check_scope(scope)
+        if scope == "all":
+            return list(self._domains)
+        if scope == "intra":
+            return [d for d in self._domains if not d.children]
+        if scope == "inter":
+            return [d for d in self._domains if d.children]
+        if scope.startswith("level:"):
+            try:
+                k = int(scope.split(":", 1)[1])
+            except ValueError:
+                raise ValueError(f"bad level scope {scope!r}") from None
+            doms = [d for d in self._domains if self._height[id(d)] == k]
+            if not doms:
+                raise ValueError(
+                    f"no domains at level {k} (tree height "
+                    f"{self._height[id(self.tree)]})")
+            return doms
+        name = scope.split(":", 1)[1]
+        if name not in self._by_name:
+            raise ValueError(f"unknown domain {name!r} (known: "
+                             f"{self.domain_names()})")
+        return [self._by_name[name]]
 
     def add_fabric_window(self, start: float,
                           duration: Optional[float] = None, *,
                           bw_scale: float = 1.0, extra_latency: float = 0.0,
                           scope: str = "all") -> None:
-        _check_scope(scope)
-        if scope in ("all", "intra"):
-            self.intra_fabric.add_window(start, duration, bw_scale=bw_scale,
-                                         extra_latency=extra_latency)
-        if scope in ("all", "inter"):
-            self.inter_fabric.add_window(start, duration, bw_scale=bw_scale,
-                                         extra_latency=extra_latency)
+        # domains may share a schedule object (the two-level spelling
+        # shares one across all pods): dedupe so a window lands once
+        scheds = {id(d.fabric): d.fabric
+                  for d in self._scope_domains(scope)}
+        for f in scheds.values():
+            f.add_window(start, duration, bw_scale=bw_scale,
+                         extra_latency=extra_latency)
 
     def fabric_change_points(self) -> List[float]:
-        return sorted(set(self.intra_fabric.change_points())
-                      | set(self.inter_fabric.change_points()))
+        pts: set = set()
+        for f in {id(d.fabric): d.fabric for d in self._domains}.values():
+            pts |= set(f.change_points())
+        return sorted(pts)
 
+    # ---------------------------------------------------------- pricing
     def allreduce_time(self, payload_bytes: float,
                        nodes: Sequence[NodeProfile], *,
                        now: float = 0.0) -> float:
         if len(nodes) <= 1:
             return 0.0
-        groups: Dict[int, List[NodeProfile]] = {}
+        members: Dict[int, List[NodeProfile]] = {}
         for n in nodes:
-            groups.setdefault(self.pod_of(n.name), []).append(n)
-        iscale, iextra = self.intra_fabric.at(now)
-        xscale, xextra = self.inter_fabric.at(now)
-        # each pod's ring is bottlenecked by its own worst member, not
-        # the worst link in the whole participant set
-        hier = hierarchical_allreduce_time(
-            payload_bytes, [len(g) for g in groups.values()],
-            [min(n.link_bw for n in g) * iscale for g in groups.values()],
-            self.inter_bw * xscale,
-            intra_latency=[max(n.link_latency for n in g) + iextra
-                           for g in groups.values()],
-            inter_latency=self.inter_latency + xextra)
-        if len(groups) == 1:
+            members.setdefault(id(self._leaf(n.name)), []).append(n)
+        # effective per-level links of the participant-pruned tree; the
+        # same walk collects the bottleneck set for the flat fallback
+        path_bws: List[float] = []
+        path_lats: List[float] = []
+
+        def build(dom: FabricDomain) -> Optional[CommDomain]:
+            if not dom.children:
+                g = members.get(id(dom))
+                if not g:
+                    return None
+                scale, extra = dom.fabric.at(now)
+                bw = min(n.link_bw for n in g) * scale
+                if bw <= 0.0:
+                    raise ValueError(
+                        f"non-positive effective intra_bw {bw!r} in domain "
+                        f"{dom.name!r} among {[n.name for n in g]}; check "
+                        f"link_bw / bw_scale")
+                lat = max(n.link_latency for n in g) + extra
+                path_bws.append(bw)
+                path_lats.append(lat)
+                return CommDomain(bw=bw, latency=lat, size=len(g))
+            kids = [k for k in (build(c) for c in dom.children)
+                    if k is not None]
+            if not kids:
+                return None
+            if len(kids) == 1:       # level not crossed: prices nothing
+                return kids[0]
+            scale, extra = dom.fabric.at(now)
+            bw = dom.bw * scale
+            if bw <= 0.0:
+                raise ValueError(
+                    f"non-positive effective bandwidth {bw!r} on domain "
+                    f"{dom.name!r}; check bw / bw_scale")
+            lat = dom.latency + extra
+            path_bws.append(bw)
+            path_lats.append(lat)
+            return CommDomain(bw=bw, latency=lat, children=tuple(kids))
+
+        spec = build(self.tree)
+        hier = hierarchical_allreduce_time(payload_bytes, spec)
+        if not spec.children:
             return hier
-        # a lopsided split (smallest pod sets the cross-phase shard
-        # granularity) can make the two-level schedule lose to a plain
-        # ring threaded through the topology; route the cheaper one
-        flat = ring_allreduce_time(
-            payload_bytes, len(nodes),
-            min(min(n.link_bw for n in nodes) * iscale,
-                self.inter_bw * xscale),
-            max(max(n.link_latency for n in nodes) + iextra,
-                self.inter_latency + xextra))
+        # the smallest sibling group sets the cross-phase shard
+        # granularity, so a lopsided split can make the level schedule
+        # lose to a plain ring threaded through the same fabric — route
+        # the cheaper one
+        flat = ring_allreduce_time(payload_bytes, len(nodes),
+                                   min(path_bws), max(path_lats))
         return min(hier, flat)
+
+    def _path(self, a: FabricDomain, b: FabricDomain) -> List[FabricDomain]:
+        """Internal domains crossed between two leaves: each side's
+        ancestors up to and including the lowest common one."""
+        up_a: List[FabricDomain] = []
+        d = self._parent[id(a)]
+        while d is not None:
+            up_a.append(d)
+            d = self._parent[id(d)]
+        idx = {id(x): i for i, x in enumerate(up_a)}
+        up_b: List[FabricDomain] = []
+        d = self._parent[id(b)]
+        while d is not None and id(d) not in idx:
+            up_b.append(d)
+            d = self._parent[id(d)]
+        if d is None:
+            raise ValueError(f"domains {a.name!r} and {b.name!r} share no "
+                             f"ancestor")
+        return up_a[:idx[id(d)] + 1] + up_b
 
     def point_to_point_time(self, payload_bytes: float, src: NodeProfile,
                             dst: NodeProfile, *, now: float = 0.0) -> float:
-        """One-directional transfer; a cross-pod hop is additionally
-        bottlenecked by the inter-pod link and pays its latency."""
-        iscale, iextra = self.intra_fabric.at(now)
-        bw = min(src.link_bw, dst.link_bw) * iscale
-        lat = max(src.link_latency, dst.link_latency) + iextra
-        if self.pod_of(src.name) != self.pod_of(dst.name):
-            xscale, xextra = self.inter_fabric.at(now)
-            bw = min(bw, self.inter_bw * xscale)
-            lat += self.inter_latency + xextra
+        """One-directional transfer (elastic join): bottlenecked by both
+        endpoints' links and every internal level crossed between their
+        leaf domains, each of which also adds its per-hop latency."""
+        ls, ld = self._leaf(src.name), self._leaf(dst.name)
+        sscale, sextra = ls.fabric.at(now)
+        if ls is ld:
+            bw = min(src.link_bw, dst.link_bw) * sscale
+            lat = max(src.link_latency, dst.link_latency) + sextra
+        else:
+            dscale, dextra = ld.fabric.at(now)
+            bw = min(src.link_bw * sscale, dst.link_bw * dscale)
+            lat = max(src.link_latency + sextra, dst.link_latency + dextra)
+            for dom in self._path(ls, ld):
+                scale, extra = dom.fabric.at(now)
+                bw = min(bw, dom.bw * scale)
+                lat += dom.latency + extra
         if bw <= 0.0:
             raise ValueError(
                 f"non-positive effective bandwidth {bw!r} between "
@@ -281,7 +508,7 @@ class Topology:
         return lat + payload_bytes / bw
 
 
-__all__ = ["FABRIC_SCOPES", "FabricSchedule", "FabricWindow",
-           "NetworkModel", "Topology", "TimedCommsMeter",
+__all__ = ["FABRIC_SCOPES", "CommDomain", "FabricDomain", "FabricSchedule",
+           "FabricWindow", "NetworkModel", "Topology", "TimedCommsMeter",
            "hierarchical_allreduce_time", "ring_allreduce_time",
            "DEFAULT_LATENCY"]

@@ -42,6 +42,7 @@ class NodeProfile:
     jitter: float = 0.0             # lognormal sigma on compute time
     seed: int = 0
     pod: Optional[int] = None       # pod membership (None -> pod 0)
+    rack: Optional[int] = None      # rack within the pod (None -> rack 0)
     slowdowns: List[Slowdown] = field(default_factory=list)
     _rng: Optional[np.random.Generator] = field(
         default=None, repr=False, compare=False)
@@ -51,6 +52,7 @@ class NodeProfile:
                       jitter: float = 0.0, seed: int = 0,
                       link_latency: float = DEFAULT_LATENCY,
                       pod: Optional[int] = None,
+                      rack: Optional[int] = None,
                       flops: Optional[float] = None,
                       hbm_bw: Optional[float] = None,
                       link_bw: Optional[float] = None) -> "NodeProfile":
@@ -63,7 +65,7 @@ class NodeProfile:
                    link_bw=(link_bw if link_bw is not None else LINK_BW)
                    * speed,
                    link_latency=link_latency, jitter=jitter, seed=seed,
-                   pod=pod)
+                   pod=pod, rack=rack)
 
     def add_slowdown(self, start: float, duration: float,
                      factor: float) -> None:
@@ -142,6 +144,39 @@ def make_pod_profiles(pod_sizes: List[int], ratio: float = 1.0, *,
                 name=f"p{pi}n{j}", speed=speed, jitter=jitter,
                 seed=seed + 1000 * pi + j, link_latency=link_latency,
                 pod=pi, flops=flops, hbm_bw=hbm_bw, link_bw=link_bw))
+    return profiles
+
+
+def make_rack_profiles(shape: List[List[int]], ratio: float = 1.0, *,
+                       jitter: float = 0.0, seed: int = 0,
+                       link_latency: float = DEFAULT_LATENCY,
+                       flops: Optional[float] = None,
+                       hbm_bw: Optional[float] = None,
+                       link_bw: Optional[float] = None
+                       ) -> List[NodeProfile]:
+    """Rack/pod-structured cluster for three-level fabrics: ``shape``
+    lists, per pod, the node count of each of its racks (``[[2, 2],
+    [3]]`` is pod 0 with two 2-node racks and pod 1 with one 3-node
+    rack).  Nodes are homogeneous inside a pod and pod speeds are
+    geometrically spaced from 1.0 (pod 0) down to 1/``ratio`` (last
+    pod), matching :func:`make_pod_profiles`.  Node ``p{i}r{j}n{k}``
+    carries ``pod=i, rack=j`` so
+    :meth:`~repro.cluster.network.Topology.from_profiles` (with
+    ``pod_bw``) can recover the rack -> pod -> cluster tree; interleave
+    the returned list before handing it to ``run_cluster`` if trainers
+    should span pods."""
+    P = len(shape)
+    profiles = []
+    for pi, racks in enumerate(shape):
+        expo = pi / max(P - 1, 1)
+        speed = float(ratio) ** (-expo) if ratio > 0 else 1.0
+        for ri, size in enumerate(racks):
+            for k in range(size):
+                profiles.append(NodeProfile.from_roofline(
+                    name=f"p{pi}r{ri}n{k}", speed=speed, jitter=jitter,
+                    seed=seed + 10000 * pi + 100 * ri + k,
+                    link_latency=link_latency, pod=pi, rack=ri,
+                    flops=flops, hbm_bw=hbm_bw, link_bw=link_bw))
     return profiles
 
 

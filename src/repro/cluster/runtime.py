@@ -35,11 +35,13 @@ real preemption would).
 
 Fabric dynamics: outer syncs are priced through the network model at
 launch time — under a :class:`~repro.cluster.network.Topology` that
-means per-pod reduce-scatter, cross-pod shard exchange over the
-bottleneck link, and per-pod all-gather — and every ``fabric`` scenario
-event (congestion window opening or closing) re-prices in-flight
-collectives: the fraction already transferred is credited and the
-remainder re-costed under the new fabric state.
+means reduce-scatter down the fabric levels, a shard ring across the
+top bottleneck, and all-gathers back up — and every ``fabric`` scenario
+event (congestion window opening or closing) re-prices what is in
+flight: both collectives and join-time point-to-point parameter
+transfers have the fraction already transferred credited and the
+remainder re-costed under the new fabric state (model-scale joins
+spanning a window edge would otherwise be silently mispriced).
 """
 from __future__ import annotations
 
@@ -76,10 +78,13 @@ class ClusterEvent:
     kind="fabric":   a congestion window opens on the network for
         ``duration`` simulated seconds (<= 0: permanently): link
         bandwidth is multiplied by ``bw_scale`` and each hop pays
-        ``extra_latency``; ``scope`` ("all"|"intra"|"inter") picks which
-        links of a :class:`~repro.cluster.network.Topology` suffer (the
-        flat model has a single fabric).  In-flight collectives are
-        re-priced at every window edge.
+        ``extra_latency``; ``scope`` picks which links of a
+        :class:`~repro.cluster.network.Topology` suffer — "all",
+        "intra" (leaf domains), "inter" (every internal level),
+        "level:<k>" (one level, 0 = leaves) or "domain:<name>" (one
+        named domain; the flat model has a single fabric and treats
+        every scope as the wire).  In-flight collectives and join
+        transfers are re-priced at every window edge.
     """
 
     time: float
@@ -149,6 +154,7 @@ class _Sim:
         self.free_nodes: List[NodeProfile] = []
         self.free_streams: List[Any] = []
         self.samples_total = 0
+        self.xfers: List[dict] = []     # in-flight join transfers
         self.merged_rounds: set = set()
         self.next_tid = 0
         self.t0 = time.time()
@@ -183,7 +189,8 @@ class _Sim:
         # callers only launch after a completed round, so worker params
         # are always materialized.  The network model routes the
         # collective: under a Topology the outer all-reduce is priced as
-        # per-pod reduce-scatter -> cross-pod exchange -> pod all-gather.
+        # reduce-scatter down the fabric levels -> shard ring across the
+        # top bottleneck -> all-gathers back up.
         snapshot = list(rt.worker_params)
         payload = param_bytes(rt.tr.params)
         dur = self.network.allreduce_time(payload, rt.nodes, now=now)
@@ -207,8 +214,8 @@ class _Sim:
 
     def reprice_inflight(self, now: float) -> None:
         """A fabric window just opened or closed: credit every in-flight
-        collective with the fraction already transferred and re-price
-        the remainder under the new fabric state."""
+        collective and join transfer with the fraction already
+        transferred and re-price the remainder under the new state."""
         for rt in self.rts.values():
             ev = rt.comm_ev
             if (ev is None or not rt.alive or not rt.inflight
@@ -230,6 +237,24 @@ class _Sim:
             ev["log"]["time_s"] = ev["log"].get("time_s", 0.0) + delta
             ev["t_end"] = new_end
             self.push(new_end, "comm", ev)
+        for ev in self.xfers:
+            rt = ev["rt"]
+            if (not rt.alive or ev["gen"] != rt.gen
+                    or ev["t_end"] <= now):
+                continue
+            done = ev["frac"]
+            if ev["cur_total"] > 0.0:
+                done = min(1.0, done + (now - ev["t_last"])
+                           / ev["cur_total"])
+            new_total = self.network.point_to_point_time(
+                ev["payload_bytes"], ev["src"], ev["dst"], now=now)
+            new_end = now + (1.0 - done) * new_total
+            ev.update(frac=done, t_last=now, cur_total=new_total)
+            if new_end == ev["t_end"]:
+                continue
+            ev["log"]["xfer_s"] += new_end - ev["t_end"]
+            ev["t_end"] = new_end
+            self.push(new_end, "xfer", ev)
 
     # --------------------------------------------------------- history
     def record(self, rt: _TrainerRT, now: float, round_i: int,
@@ -440,13 +465,30 @@ class _Sim:
         self.pool.trainers.append(tr)
         rt = _TrainerRT(tr=tr, nodes=nodes, target=remaining)
         self.rts[tr.tid] = rt
-        # parameter shipping to the newcomer costs one point-to-point xfer
+        # parameter shipping to the newcomer costs one point-to-point
+        # xfer, tracked in flight so fabric window edges re-price it
+        # (fraction done credited) exactly like a collective
+        payload = param_bytes(tr.params)
         xfer = self.network.point_to_point_time(
-            param_bytes(tr.params), src.nodes[0], nodes[0], now=now)
-        self.report.applied_events.append(
-            {"time": now, "kind": "join", "tid": tr.tid,
-             "cloned_from": src.tr.tid, "xfer_s": xfer})
-        self.start_round(rt, now + xfer)
+            payload, src.nodes[0], nodes[0], now=now)
+        log = {"time": now, "kind": "join", "tid": tr.tid,
+               "cloned_from": src.tr.tid, "xfer_s": xfer}
+        self.report.applied_events.append(log)
+        ev = {"rt": rt, "gen": rt.gen, "payload_bytes": payload,
+              "src": src.nodes[0], "dst": nodes[0],
+              "t_last": now, "frac": 0.0, "cur_total": xfer,
+              "t_end": now + xfer, "log": log}
+        self.xfers.append(ev)
+        self.push(ev["t_end"], "xfer", ev)
+
+    def on_xfer_done(self, now: float, ev: dict) -> None:
+        rt: _TrainerRT = ev["rt"]
+        if ev["t_end"] != now:
+            return                   # superseded by a fabric re-pricing
+        self.xfers.remove(ev)
+        if not rt.alive or ev["gen"] != rt.gen:
+            return
+        self.start_round(rt, now)
 
 
 def run_cluster(loss_fn: Callable, init_params_list: List[Any],
@@ -464,8 +506,9 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
     ``streams`` beyond the initial k*M shards form the spare pool handed
     to trainers that join mid-run (elastic scenarios); ``profiles``
     beyond k*M likewise.  ``network`` is a flat :class:`NetworkModel`
-    (default) or a pod-aware :class:`~repro.cluster.network.Topology` —
-    the choice changes the simulated clock, never the numerics.
+    (default) or an n-level :class:`~repro.cluster.network.Topology`
+    (tree of fabric domains) — the choice changes the simulated clock,
+    never the numerics.
     ``scenario`` is a sequence of :class:`ClusterEvent`\\ s or the name
     of a registered scenario (see ``repro.cluster.scenarios``).
     Returns (TrainerPoolState, History, ClusterReport) — the History
@@ -524,6 +567,8 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
             sim.on_round_done(when, payload)
         elif kind == "comm":
             sim.on_comm_done(when, payload)
+        elif kind == "xfer":         # join transfer finished shipping
+            sim.on_xfer_done(when, payload)
         elif kind == "reprice":      # a fabric window closed
             sim.reprice_inflight(when)
         else:

@@ -38,9 +38,42 @@ scope)``
     ``joins`` trainers join in quick succession (every ``spacing``
     seconds) — a flash crowd landing on the spare pool.  Joins beyond
     the spare capacity are no-ops.
+
+Co-scripted scenarios (node dynamics + fabric windows together)
+---------------------------------------------------------------
+``correlated_pod_failure(start, duration, factor, nodes, depth,
+extra_latency, scope)``
+    One pod fails together: its nodes compute ``factor``x slower *and*
+    the fabric joining pods degrades (``depth`` bandwidth scale,
+    ``extra_latency`` per hop) for the same window.  ``nodes`` are the
+    afflicted pod's indices into the profile list handed to
+    ``run_cluster`` (defaults match pod 1 of a 2-pod interleaved
+    layout); ``scope`` defaults to ``domain:cluster`` — the level whose
+    paths are the pods' uplinks (the ring across pods is bottlenecked by
+    its slowest path, so degrading the level prices like degrading the
+    one uplink).
+``diurnal_congestion(start, period, depth, cycles, steps, scope)``
+    Smooth periodic congestion: each ``period`` is cut into ``steps``
+    piecewise-constant windows whose bandwidth scale traces a cosine
+    from 1.0 down to ``depth`` and back — the diurnal load curve of a
+    shared fabric, repeated ``cycles`` times.
+``rack_flap(start, period, burst, depth, extra_latency, count, domain)``
+    One rack's level-0 fabric oscillates: ``count`` windows of ``burst``
+    seconds every ``period`` on the named leaf domain only (default
+    ``p0r0`` — the first rack of a 3-level
+    ``Topology.from_profiles(..., pod_bw=...)`` tree); every other
+    domain keeps its nominal links.
+``straggler_cascade(start, window, depth, extra_latency, nodes, factor,
+slow_for, stagger, scope)``
+    Stragglers inside a congestion window: the fabric degrades for
+    ``window`` seconds and, while it is open, ``nodes`` slow down one
+    after another (``stagger`` apart, each ``factor``x slower for
+    ``slow_for`` seconds) — the compounded worst case where the wire
+    and the workers degrade together.
 """
 from __future__ import annotations
 
+import math
 from typing import Callable, Dict, List
 
 import numpy as np
@@ -128,6 +161,82 @@ def flash_crowd_join(*, start: float = 0.02, joins: int = 2,
             for i in range(joins)]
 
 
+@register_scenario("correlated_pod_failure")
+def correlated_pod_failure(*, start: float = 0.01, duration: float = 0.03,
+                           factor: float = 3.0, nodes=(1, 3, 5),
+                           depth: float = 0.15, extra_latency: float = 6e-3,
+                           scope: str = "domain:cluster"
+                           ) -> List[ClusterEvent]:
+    if not 0.0 < depth:
+        raise ValueError(f"depth must be positive, got {depth}")
+    evs = [ClusterEvent(time=start, kind="slowdown", node=int(i),
+                        factor=factor, duration=duration)
+           for i in nodes]
+    evs.append(ClusterEvent(time=start, kind="fabric", scope=scope,
+                            bw_scale=depth, extra_latency=extra_latency,
+                            duration=duration))
+    return evs
+
+
+@register_scenario("diurnal_congestion")
+def diurnal_congestion(*, start: float = 0.0, period: float = 0.04,
+                       depth: float = 0.25, cycles: int = 2,
+                       steps: int = 8,
+                       scope: str = "inter") -> List[ClusterEvent]:
+    if not 0.0 < depth <= 1.0:
+        raise ValueError(f"depth must be in (0, 1], got {depth}")
+    if steps < 1 or cycles < 1:
+        raise ValueError(f"steps and cycles must be >= 1, got "
+                         f"{steps}/{cycles}")
+    dt = period / steps
+    evs = []
+    for c in range(cycles):
+        for s in range(steps):
+            # midpoint of the step on the cosine load curve: scale 1.0
+            # at the period edges, `depth` at its trough
+            phase = (s + 0.5) / steps
+            scale = depth + (1.0 - depth) * 0.5 * (
+                1.0 + math.cos(2.0 * math.pi * phase))
+            evs.append(ClusterEvent(time=start + (c * steps + s) * dt,
+                                    kind="fabric", scope=scope,
+                                    bw_scale=scale, duration=dt))
+    return evs
+
+
+@register_scenario("rack_flap")
+def rack_flap(*, start: float = 0.004, period: float = 0.016,
+              burst: float = 0.008, depth: float = 0.1,
+              extra_latency: float = 4e-3, count: int = 5,
+              domain: str = "p0r0") -> List[ClusterEvent]:
+    if not 0.0 < depth:
+        raise ValueError(f"depth must be positive, got {depth}")
+    return [ClusterEvent(time=start + i * period, kind="fabric",
+                         scope=f"domain:{domain}", bw_scale=depth,
+                         extra_latency=extra_latency, duration=burst)
+            for i in range(count)]
+
+
+@register_scenario("straggler_cascade")
+def straggler_cascade(*, start: float = 0.01, window: float = 0.04,
+                      depth: float = 0.2, extra_latency: float = 5e-3,
+                      nodes=(0, 2, 4), factor: float = 4.0,
+                      slow_for: float = 0.02, stagger: float = 0.006,
+                      scope: str = "inter") -> List[ClusterEvent]:
+    if not 0.0 < depth:
+        raise ValueError(f"depth must be positive, got {depth}")
+    evs = [ClusterEvent(time=start, kind="fabric", scope=scope,
+                        bw_scale=depth, extra_latency=extra_latency,
+                        duration=window)]
+    for i, n in enumerate(nodes):
+        t = start + (i + 1) * stagger
+        if t >= start + window:      # cascade stays inside the window
+            break
+        evs.append(ClusterEvent(time=t, kind="slowdown", node=int(n),
+                                factor=factor, duration=slow_for))
+    return evs
+
+
 __all__ = ["SCENARIOS", "register_scenario", "list_scenarios",
            "build_scenario", "baseline", "bursty_congestion", "spot_churn",
-           "pod_partition", "flash_crowd_join"]
+           "pod_partition", "flash_crowd_join", "correlated_pod_failure",
+           "diurnal_congestion", "rack_flap", "straggler_cascade"]

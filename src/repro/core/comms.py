@@ -8,7 +8,7 @@ Bytes use the ring all-reduce model: 2 (p−1)/p · payload per participant.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Sequence
+from typing import List, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -58,6 +58,99 @@ def ring_allreduce_time(payload_bytes: float, participants: int,
     return steps * latency + wire / link_bw
 
 
+@dataclass
+class CommDomain:
+    """One fabric domain in an n-level all-reduce hierarchy.
+
+    A *leaf* domain is a group of ``size`` nodes whose links run at
+    ``bw`` bytes/s with ``latency`` seconds per hop.  An *internal*
+    domain joins its ``children`` with per-path bandwidth ``bw`` — one
+    child's route to its peers at this level, not an aggregate pipe —
+    and per-hop ``latency``.  Nesting domains to any depth describes a
+    rack / pod / cluster style fabric; :func:`hierarchical_allreduce_time`
+    prices an all-reduce over the tree by recursing over the levels.
+    """
+
+    bw: float
+    latency: float = 0.0
+    size: int = 0
+    children: Tuple["CommDomain", ...] = ()
+
+    def __post_init__(self) -> None:
+        self.children = tuple(self.children)
+        if self.children and self.size:
+            raise ValueError("a CommDomain is either a leaf (size) or a "
+                             "parent (children), not both")
+
+    def leaves(self) -> int:
+        """Total node count under this domain."""
+        if not self.children:
+            return max(int(self.size), 0)
+        return sum(c.leaves() for c in self.children)
+
+
+def _prune(d: CommDomain):
+    """Drop empty groups and collapse single-child levels (a level with
+    one participating child prices nothing — there is no ring to run)."""
+    if not d.children:
+        return d if d.size >= 1 else None
+    kids = [k for k in (_prune(c) for c in d.children) if k is not None]
+    if not kids:
+        return None
+    if len(kids) == 1:
+        return kids[0]
+    return CommDomain(bw=d.bw, latency=d.latency, children=tuple(kids))
+
+
+def _check_bws(d: CommDomain) -> None:
+    if not d.children:
+        if d.size > 1 and d.bw <= 0.0:
+            raise ValueError(f"leaf domain bandwidth must be positive, "
+                             f"got {d.bw}")
+        return
+    if d.bw <= 0.0:
+        raise ValueError(f"internal domain bandwidth must be positive, "
+                         f"got {d.bw}")
+    for c in d.children:
+        _check_bws(c)
+
+
+def _scatter(payload_bytes: float, d: CommDomain):
+    """(reduce-scatter time down this subtree, shard capacity).
+
+    After the subtree's reduce-scatter every node holds a shard no
+    larger than ``payload / capacity``; unbalanced sibling groups leave
+    the largest shard — ``payload / min(child capacities)`` — as the
+    critical payload of the level above.  The all-gather back up is the
+    mirror image and costs the same, which is why callers double it.
+    """
+    if not d.children:
+        p = d.size
+        if p <= 1:
+            return 0.0, max(p, 1)
+        return (p - 1) * d.latency + ((p - 1) / p * payload_bytes) / d.bw, p
+    subs = [_scatter(payload_bytes, c) for c in d.children]
+    down = max(t for t, _ in subs)
+    cap = min(c for _, c in subs)
+    k = len(d.children)
+    here = (k - 1) * d.latency + ((k - 1) / k * (payload_bytes / cap)) / d.bw
+    return down + here, k * cap
+
+
+def _tree_allreduce_time(payload_bytes: float, root: CommDomain) -> float:
+    d = _prune(root)
+    if d is None or d.leaves() <= 1 or payload_bytes <= 0:
+        return 0.0
+    _check_bws(d)
+    if not d.children:
+        return ring_allreduce_time(payload_bytes, d.size, d.bw, d.latency)
+    subs = [_scatter(payload_bytes, c) for c in d.children]
+    down = max(t for t, _ in subs)
+    shard = payload_bytes / min(c for _, c in subs)
+    cross = ring_allreduce_time(shard, len(d.children), d.bw, d.latency)
+    return 2.0 * down + cross
+
+
 def _per_pod(value, pod_sizes: Sequence[int], what: str):
     try:
         vals = [float(v) for v in value]
@@ -70,32 +163,44 @@ def _per_pod(value, pod_sizes: Sequence[int], what: str):
 
 
 def hierarchical_allreduce_time(payload_bytes: float,
-                                pod_sizes: Sequence[int],
-                                intra_bw, inter_bw: float, *,
+                                tree: Union[CommDomain, Sequence[int]],
+                                intra_bw=None, inter_bw: float = None, *,
                                 intra_latency=0.0,
                                 inter_latency: float = 0.0) -> float:
-    """Two-level all-reduce cost over pods, in seconds.
+    """N-level hierarchical all-reduce cost, in seconds.
 
-    Models the standard hierarchical schedule: (1) ring reduce-scatter
-    inside every pod (pods run in parallel; the slowest pod is the
-    critical path), (2) cross-pod exchange — each node's shard rides its
-    own ring over the P pods, so the critical shard is
-    ``payload / min(pod_sizes)`` — and (3) ring all-gather inside every
-    pod.  ``inter_bw`` is the bandwidth of one cross-pod *path* (one
-    node's route to its peers in other pods), not an aggregate pipe: the
-    per-node shard rings are concurrent, which is what makes the
-    schedule collapse to the flat ring when cross-pod paths match node
-    links.  ``intra_bw``/``intra_latency`` are single values for every
-    pod or per-pod sequences aligned with ``pod_sizes`` (pods of mixed
-    hardware generations have different links).  With a single pod this
-    is exactly :func:`ring_allreduce_time`; with *equal pod splits* and
-    cross-pod paths at least as good as node links (bandwidth and
-    latency) it never exceeds the flat ring over all nodes.  A lopsided
-    split can exceed the flat ring — the smallest pod sets the cross
-    phase's shard granularity — which is why
-    :meth:`~repro.cluster.network.Topology.allreduce_time` routes via
-    the cheaper of this and the topology-priced flat ring.
+    The schedule is a recursion over fabric levels: ring reduce-scatter
+    inside every leaf group (siblings run in parallel; the slowest group
+    is the critical path), then a reduce-scatter of the surviving shards
+    across each internal level on the way up, a full shard ring across
+    the top level's children, and the mirror-image all-gathers back
+    down.  At every level ``bw`` is the bandwidth of one *path* (one
+    child's route to its peers at that level), not an aggregate pipe:
+    the per-node shard rings are concurrent, which is what makes the
+    schedule collapse to the flat ring when upper levels match the node
+    links.  The shard entering a level is ``payload / min(child
+    capacities)`` — the smallest sibling sets the granularity, which is
+    why a lopsided split can lose to a flat ring threaded through the
+    same fabric (see :meth:`~repro.cluster.network.Topology.
+    allreduce_time`, which routes via the cheaper of the two).
+
+    ``tree`` is either a :class:`CommDomain` (arbitrary depth >= 1; a
+    single leaf domain is priced *exactly* as
+    :func:`ring_allreduce_time`) or, for the classic two-level pod
+    scheme, a sequence of pod sizes with ``intra_bw``/``intra_latency``
+    as single values or per-pod sequences and ``inter_bw``/
+    ``inter_latency`` for the cross-pod paths.  The two spellings agree
+    bit-for-bit at depth 2.
     """
+    if isinstance(tree, CommDomain):
+        if intra_bw is not None or inter_bw is not None:
+            raise ValueError("pass bandwidths inside the CommDomain tree, "
+                             "not as separate arguments")
+        return _tree_allreduce_time(payload_bytes, tree)
+    pod_sizes = tree
+    if intra_bw is None:
+        raise ValueError("intra_bw is required with the pod-sizes "
+                         "spelling (or pass a CommDomain tree)")
     bws = _per_pod(intra_bw, pod_sizes, "intra_bw")
     lats = _per_pod(intra_latency, pod_sizes, "intra_latency")
     pods = [(int(s), b, l) for s, b, l in zip(pod_sizes, bws, lats)
@@ -107,18 +212,13 @@ def hierarchical_allreduce_time(payload_bytes: float,
         return 0.0
     if any(b <= 0.0 for _, b, _ in pods):
         raise ValueError(f"intra_bw must be positive, got {intra_bw}")
-    if len(pods) == 1:
-        return ring_allreduce_time(payload_bytes, pods[0][0], pods[0][1],
-                                   pods[0][2])
-    if inter_bw <= 0.0:
+    if len(pods) > 1 and (inter_bw is None or inter_bw <= 0.0):
         raise ValueError(f"inter_bw must be positive, got {inter_bw}")
-    # reduce-scatter + all-gather: (p-1) hops each, (p-1)/p of the
-    # payload over the pod's slowest link each
-    scatter = max((p - 1) * l + ((p - 1) / p * payload_bytes) / b
-                  for p, b, l in pods)
-    cross = ring_allreduce_time(payload_bytes / min(s for s, _, _ in pods),
-                                len(pods), inter_bw, inter_latency)
-    return 2.0 * scatter + cross
+    return _tree_allreduce_time(payload_bytes, CommDomain(
+        bw=inter_bw if inter_bw is not None else 1.0,
+        latency=inter_latency,
+        children=tuple(CommDomain(bw=b, latency=l, size=s)
+                       for s, b, l in pods)))
 
 
 @dataclass

@@ -9,10 +9,12 @@ import pytest
 
 from repro.configs.base import AdLoCoConfig
 from repro.core import train_adloco
-from repro.core.comms import hierarchical_allreduce_time, ring_allreduce_time
-from repro.cluster import (ClusterEvent, FabricSchedule, NetworkModel,
-                           NodeProfile, Topology, interleave_pods,
-                           make_heterogeneous_profiles, make_pod_profiles,
+from repro.core.comms import (CommDomain, hierarchical_allreduce_time,
+                              ring_allreduce_time)
+from repro.cluster import (ClusterEvent, FabricDomain, FabricSchedule,
+                           NetworkModel, NodeProfile, Topology,
+                           interleave_pods, make_heterogeneous_profiles,
+                           make_pod_profiles, make_rack_profiles,
                            run_cluster)
 
 from tests.test_adloco_integration import QuadStream, _quad_setup, quad_loss
@@ -172,6 +174,173 @@ def test_topology_prices_each_pod_ring_at_its_own_bandwidth():
     # (single node) must not tax the fast pod's hops
     b0.link_latency = 0.1
     assert topo.allreduce_time(1e3, profiles) == pytest.approx(t)
+
+
+# ------------------------------------------- n-level differential tests
+
+def test_hierarchical_depth1_is_exactly_the_ring():
+    """A single leaf domain must price bit-for-bit as the flat ring —
+    the depth-1 base case of the level recursion."""
+    for p in (1, 2, 3, 7, 64):
+        for payload in (1.0, 64.0, 3.3e7):
+            leaf = CommDomain(bw=3.7e5, latency=1.3e-3, size=p)
+            assert hierarchical_allreduce_time(payload, leaf) == \
+                ring_allreduce_time(payload, p, 3.7e5, 1.3e-3)
+
+
+def test_hierarchical_depth2_matches_pod_implementation():
+    """The depth-2 tree spelling must reproduce the PR 2 pod
+    implementation bit-for-bit: same values as the legacy pod-sizes
+    signature *and* as the original closed form (per-pod reduce-scatter
+    critical path, cross-pod shard ring, per-pod all-gather) — no
+    silent re-pricing of existing scenarios."""
+    fixtures = [
+        # (pod_sizes, intra_bw(s), inter_bw, intra_lat(s), inter_lat)
+        ([5, 5], 2e5, 1e5, 2e-3, 4e-3),          # test_scenarios fixture
+        ([3, 3], 2e5, 1e5, 2e-3, 4e-3),          # cluster_bench fixture
+        ([2, 2], 2e5, 5e4, 2e-3, 4e-3),
+        ([3, 1], [2e5, 1e5], 1e9, [2e-3, 2e-3], 0.0),   # mixed-gen pods
+        ([1, 1], 2e5, 1e5, 2e-3, 4e-3),
+        ([4, 2, 7], [3e5, 1e5, 2e5], 8e4, [1e-3, 2e-3, 0.0], 5e-3),
+    ]
+    for sizes, intra, inter, ilat, xlat in fixtures:
+        for payload in (64.0, 1e3, 7.7e8):
+            legacy = hierarchical_allreduce_time(
+                payload, sizes, intra, inter, intra_latency=ilat,
+                inter_latency=xlat)
+            bws = intra if isinstance(intra, list) else [intra] * len(sizes)
+            lats = ilat if isinstance(ilat, list) else [ilat] * len(sizes)
+            tree = CommDomain(bw=inter, latency=xlat, children=[
+                CommDomain(bw=b, latency=l, size=s)
+                for s, b, l in zip(sizes, bws, lats)])
+            assert hierarchical_allreduce_time(payload, tree) == legacy
+            # the PR 2 closed form, inlined
+            scatter = max((p - 1) * l + ((p - 1) / p * payload) / b
+                          for p, b, l in zip(sizes, bws, lats))
+            cross = ring_allreduce_time(payload / min(sizes), len(sizes),
+                                        inter, xlat)
+            assert legacy == 2.0 * scatter + cross
+
+
+def test_hierarchical_depth3_recursion():
+    """Three levels priced by hand: rack reduce-scatters, pod-level
+    shard reduce-scatter, cluster shard ring, and the mirror gathers."""
+    payload = 1e4
+    rack = CommDomain(bw=4e5, latency=1e-3, size=2)
+    pod = CommDomain(bw=2e5, latency=2e-3, children=[rack, rack])
+    root = CommDomain(bw=1e5, latency=4e-3, children=[pod, pod])
+    rack_rs = 1 * 1e-3 + ((1 / 2) * payload) / 4e5
+    pod_rs = 1 * 2e-3 + ((1 / 2) * (payload / 2)) / 2e5
+    cross = ring_allreduce_time(payload / 4, 2, 1e5, 4e-3)
+    expect = 2.0 * (rack_rs + pod_rs) + cross
+    assert hierarchical_allreduce_time(payload, root) == \
+        pytest.approx(expect, rel=1e-12)
+    # a domain tree with the same links everywhere collapses toward the
+    # flat ring's bandwidth term; nesting must never price negative/zero
+    assert hierarchical_allreduce_time(payload, root) > 0.0
+
+
+def test_tree_topology_prices_like_the_comm_tree():
+    """Topology routing on a 3-level tree = hand-built CommDomain
+    pricing (min'd with the topology-threaded flat ring)."""
+    profiles = make_rack_profiles([[2, 2], [2, 2]], **TOY)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3, pod_bw=1.5e5,
+                                  pod_latency=3e-3)
+    payload = 1e3
+    bw, lat = TOY["link_bw"], TOY["link_latency"]
+    rack = CommDomain(bw=bw, latency=lat, size=2)
+    pod = CommDomain(bw=1.5e5, latency=3e-3, children=[rack, rack])
+    root = CommDomain(bw=1e5, latency=4e-3, children=[pod, pod])
+    hier = hierarchical_allreduce_time(payload, root)
+    flat = ring_allreduce_time(payload, 8, min(bw, 1.5e5, 1e5),
+                               max(lat, 3e-3, 4e-3))
+    assert topo.allreduce_time(payload, profiles) == min(hier, flat)
+    # participants inside one rack: plain ring on the node links
+    r0 = [p for p in profiles if p.pod == 0 and p.rack == 0]
+    assert topo.allreduce_time(payload, r0) == \
+        ring_allreduce_time(payload, 2, bw, lat)
+    # spanning racks of one pod: two-level pricing, no cluster terms
+    p0 = [p for p in profiles if p.pod == 0]
+    two = CommDomain(bw=1.5e5, latency=3e-3, children=[rack, rack])
+    flat2 = ring_allreduce_time(payload, 4, min(bw, 1.5e5),
+                                max(lat, 3e-3))
+    assert topo.allreduce_time(payload, p0) == \
+        min(hierarchical_allreduce_time(payload, two), flat2)
+
+
+def test_tree_topology_point_to_point_crosses_levels():
+    """Each internal level crossed bottlenecks the transfer and adds its
+    hop latency; a same-rack transfer sees only the node links."""
+    profiles = make_rack_profiles([[2, 2], [2, 2]], **TOY)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3, pod_bw=1.5e5,
+                                  pod_latency=3e-3)
+    bw, lat = TOY["link_bw"], TOY["link_latency"]
+    a, b = profiles[0], profiles[1]          # same rack p0r0
+    c = profiles[2]                          # p0r1: same pod, other rack
+    d = profiles[4]                          # p1r0: other pod
+    assert topo.point_to_point_time(1e3, a, b) == lat + 1e3 / bw
+    assert topo.point_to_point_time(1e3, a, c) == \
+        (lat + 3e-3) + 1e3 / min(bw, 1.5e5)
+    assert topo.point_to_point_time(1e3, a, d) == \
+        (lat + 3e-3 + 4e-3 + 3e-3) + 1e3 / min(bw, 1.5e5, 1e5)
+
+
+def test_tree_topology_level_and_domain_scopes():
+    """Windows target one level or one named domain without touching
+    the rest; bad scopes fail loudly."""
+    profiles = make_rack_profiles([[2, 2], [2, 2]], **TOY)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5, pod_bw=1.5e5)
+    r0 = [p for p in profiles if p.pod == 0 and p.rack == 0]
+    p0 = [p for p in profiles if p.pod == 0]
+    base_rack = topo.allreduce_time(1e3, r0)
+    base_pod = topo.allreduce_time(1e3, p0)
+    base_all = topo.allreduce_time(1e3, profiles)
+    # level:1 = the pod domains (paths joining racks): rack-local
+    # collectives don't notice, pod- and cluster-spanning ones do
+    topo.add_fabric_window(10.0, 1.0, bw_scale=0.1, scope="level:1")
+    assert topo.allreduce_time(1e3, r0, now=10.5) == base_rack
+    assert topo.allreduce_time(1e3, p0, now=10.5) > base_pod
+    assert topo.allreduce_time(1e3, profiles, now=10.5) > base_all
+    # domain:p1r0 hits only that rack
+    topo.add_fabric_window(20.0, 1.0, bw_scale=0.1, scope="domain:p1r0")
+    assert topo.allreduce_time(1e3, r0, now=20.5) == base_rack
+    r1 = [p for p in profiles if p.pod == 1 and p.rack == 0]
+    assert topo.allreduce_time(1e3, r1, now=20.5) > \
+        topo.allreduce_time(1e3, r1, now=0.0)
+    with pytest.raises(ValueError, match="unknown domain"):
+        topo.add_fabric_window(0.0, 1.0, scope="domain:nope")
+    with pytest.raises(ValueError, match="no domains at level"):
+        topo.add_fabric_window(0.0, 1.0, scope="level:7")
+    with pytest.raises(ValueError, match="scope"):
+        topo.add_fabric_window(0.0, 1.0, scope="wat")
+    assert set(topo.domain_names()) == {
+        "cluster", "p0", "p1", "p0r0", "p0r1", "p1r0", "p1r1"}
+
+
+def test_explicit_tree_constructor_and_validation():
+    tree = FabricDomain(name="root", bw=1e5, latency=1e-3, children=[
+        FabricDomain(name="a", nodes=["n0", "n1"]),
+        FabricDomain(name="b", nodes=["n2"])])
+    topo = Topology(tree=tree)
+    assert topo.pods == [["n0", "n1"], ["n2"]]
+    assert topo.pod_of("n2") == 1
+    with pytest.raises(ValueError, match="not in the topology"):
+        topo.pod_of("stranger")
+    with pytest.raises(ValueError, match="positive bw"):
+        Topology(tree=FabricDomain(name="r", bw=0.0, children=[
+            FabricDomain(name="a", nodes=["x"])]))
+    with pytest.raises(ValueError, match="more than once"):
+        Topology(tree=FabricDomain(name="r", bw=1.0, children=[
+            FabricDomain(name="a", nodes=["x"]),
+            FabricDomain(name="a", nodes=["y"])]))
+    with pytest.raises(ValueError, match="more than one domain"):
+        Topology(tree=FabricDomain(name="r", bw=1.0, children=[
+            FabricDomain(name="a", nodes=["x"]),
+            FabricDomain(name="b", nodes=["x"])]))
+    with pytest.raises(ValueError, match="either a tree or"):
+        Topology()
 
 
 def test_preinstalled_fabric_window_reprices_inflight():

@@ -1,10 +1,12 @@
 """Property tests for the network cost models.
 
 The invariants that make topology-aware routing safe to use
-unconditionally: the two-level hierarchical schedule never loses to the
-flat ring when the cross-pod bottleneck is at least as good as a node
-link, it is monotone in payload, cheaper cross-pod links never hurt,
-and a single pod collapses exactly to the ring model.
+unconditionally: the hierarchical schedule — at any depth — never loses
+to the flat ring when every level's paths are at least as good as a
+node link, it is monotone in payload and in every level's latency,
+cheaper cross-pod links never hurt, a single pod collapses exactly to
+the ring model, and the cost of a collective depends only on *which*
+nodes participate, never on the order they are listed in.
 """
 import pytest
 
@@ -13,8 +15,10 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.comms import (hierarchical_allreduce_time,  # noqa: E402
+from repro.core.comms import (CommDomain,  # noqa: E402
+                              hierarchical_allreduce_time,
                               ring_allreduce_time)
+from repro.cluster import (Topology, make_rack_profiles)  # noqa: E402
 
 bws = st.floats(min_value=1e-6, max_value=1e12)
 payloads = st.floats(min_value=1.0, max_value=1e12)
@@ -81,3 +85,113 @@ def test_more_cross_pod_bandwidth_never_hurts(payload, pods, intra, inter,
                                        intra_latency=lat_i,
                                        inter_latency=lat_x)
     assert fast <= slow * (1 + 1e-9)
+
+
+# --------------------------------------------------- n-level invariants
+
+#: random balanced level stacks: (leaf_size, [branching per level])
+stacks = st.tuples(st.integers(1, 4),
+                   st.lists(st.integers(2, 4), min_size=1, max_size=3))
+
+
+def _stack_tree(leaf_size, branches, bw, lat, boosts, lat_fracs):
+    """Balanced tree bottom-up: every level's paths run at bw*boost
+    (>= bw) with latency lat*frac (<= lat)."""
+    dom = CommDomain(bw=bw, latency=lat, size=leaf_size)
+    for k, boost, frac in zip(branches, boosts, lat_fracs):
+        dom = CommDomain(bw=bw * boost, latency=lat * frac,
+                         children=(dom,) * k)
+    return dom
+
+
+@given(payload=payloads, stack=stacks, bw=bws, lat=lats,
+       boosts=st.lists(st.floats(1.0, 1e4), min_size=3, max_size=3),
+       fracs=st.lists(st.floats(0.0, 1.0), min_size=3, max_size=3))
+@settings(max_examples=200, deadline=None)
+def test_deeper_hierarchy_never_loses_to_flat_ring(payload, stack, bw, lat,
+                                                   boosts, fracs):
+    """At any depth: with every level's per-path bandwidth >= the leaf
+    link bandwidth and per-hop latency no worse than a leaf hop, the
+    level schedule is at most the flat ring over all nodes."""
+    leaf_size, branches = stack
+    root = _stack_tree(leaf_size, branches, bw, lat, boosts, fracs)
+    n = leaf_size
+    for k in branches:
+        n *= k
+    flat = ring_allreduce_time(payload, n, bw, lat)
+    hier = hierarchical_allreduce_time(payload, root)
+    assert hier <= flat * (1 + 1e-9) + 1e-12
+
+
+#: recursive random (possibly lopsided) domain-tree *specs* — plain
+#: data so a test can rebuild the same tree with one knob changed
+leaf_specs = st.tuples(st.just("leaf"), st.integers(0, 5), bws, lats)
+tree_specs = st.recursive(
+    leaf_specs,
+    lambda sub: st.tuples(st.just("node"), bws, lats,
+                          st.lists(sub, min_size=1, max_size=3)),
+    max_leaves=12)
+
+
+def _spec_height(spec):
+    if spec[0] == "leaf":
+        return 0
+    return 1 + max(_spec_height(c) for c in spec[3])
+
+
+def _spec_tree(spec, bump_height=None, delta=0.0):
+    """Build the CommDomain, adding ``delta`` latency to every domain
+    at height ``bump_height`` (None: build as-is)."""
+    h = _spec_height(spec)
+    extra = delta if h == bump_height else 0.0
+    if spec[0] == "leaf":
+        return CommDomain(bw=spec[2], latency=spec[3] + extra,
+                          size=spec[1])
+    return CommDomain(bw=spec[1], latency=spec[2] + extra,
+                      children=tuple(_spec_tree(c, bump_height, delta)
+                                     for c in spec[3]))
+
+
+@given(a=payloads, b=payloads, spec=tree_specs)
+@settings(max_examples=200, deadline=None)
+def test_tree_cost_monotone_in_payload(a, b, spec):
+    lo, hi = min(a, b), max(a, b)
+    t_lo = hierarchical_allreduce_time(lo, _spec_tree(spec))
+    t_hi = hierarchical_allreduce_time(hi, _spec_tree(spec))
+    assert t_lo <= t_hi * (1 + 1e-9)
+
+
+@given(payload=payloads, spec=tree_specs, level=st.integers(0, 4),
+       delta=st.floats(0.0, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_tree_cost_monotone_in_per_level_latency(payload, spec, level,
+                                                 delta):
+    """Slower hops at any one level never make the collective cheaper."""
+    base = hierarchical_allreduce_time(payload, _spec_tree(spec))
+    bumped = hierarchical_allreduce_time(
+        payload, _spec_tree(spec, bump_height=level, delta=delta))
+    assert base <= bumped * (1 + 1e-9) + 1e-12
+
+
+TOY = dict(flops=1e6, hbm_bw=1e9, link_bw=2e5, link_latency=2e-3)
+
+
+@given(perm=st.permutations(list(range(8))),
+       size=st.integers(2, 8), payload=payloads)
+@settings(max_examples=100, deadline=None)
+def test_participant_permutation_leaves_cost_unchanged(perm, size,
+                                                       payload):
+    """Topology pricing is a function of *which* nodes participate:
+    permuting the participant list — including nodes within one domain —
+    changes nothing, bit for bit."""
+    profiles = make_rack_profiles([[2, 2], [2, 2]], **TOY)
+    for i, p in enumerate(profiles):     # heterogeneous inside racks too
+        p.link_bw *= 1.0 + i / 7.0
+        p.link_latency *= 1.0 + (7 - i) / 7.0
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3, pod_bw=1.5e5,
+                                  pod_latency=3e-3)
+    chosen = [profiles[i] for i in perm[:size]]
+    shuffled = [profiles[i] for i in sorted(perm[:size])]
+    assert topo.allreduce_time(payload, chosen) == \
+        topo.allreduce_time(payload, shuffled)

@@ -1,27 +1,33 @@
 """Golden-trace regression tests for the scenario registry.
 
-Every registered scenario, run with a fixed seed on a canonical 2-pod
+Every registered scenario, run with a fixed seed on a canonical
 cluster, must reproduce a stored digest of its ``ClusterReport`` —
 summary *and* applied events — so a scheduler or cost-model refactor
-cannot silently change simulated behavior.  The harness pins
-``fixed_batch`` + ``adaptive=False`` so simulated timings are pure
-Python float arithmetic (no jax numerics in the digest) and the goldens
-hold across platforms.
+cannot silently change simulated behavior.  The original five
+scenarios run on the PR 2 fixture (2-pod topology; their digests are
+untouched by the n-level fabric refactor — the differential guarantee),
+and the co-scripted scenarios run on a 3-level rack/pod/cluster tree.
+The harness pins ``fixed_batch`` + ``adaptive=False`` so simulated
+timings are pure Python float arithmetic (no jax numerics in the
+digest) and the goldens hold across platforms.
 
 If a change to the runtime/cost models is *intended* to move these
-digests, rerun ``_run(name)`` for each scenario and update GOLDEN with
-the new values — that diff is the reviewable record of the behavior
-change.
+digests, rerun ``_run(name)`` / ``_run3(name)`` for each scenario and
+update GOLDEN/GOLDEN3 with the new values — that diff is the reviewable
+record of the behavior change.
 """
 import dataclasses
 import hashlib
 import json
 
+import numpy as np
 import pytest
 
 from repro.configs.base import AdLoCoConfig
-from repro.cluster import (Topology, interleave_pods, list_scenarios,
-                           make_pod_profiles, run_cluster)
+from repro.core import train_adloco
+from repro.cluster import (ClusterEvent, Topology, interleave_pods,
+                           list_scenarios, make_pod_profiles,
+                           make_rack_profiles, run_cluster)
 from repro.cluster.scenarios import build_scenario
 
 from tests.test_adloco_integration import QuadStream, _quad_setup, quad_loss
@@ -37,6 +43,8 @@ ACFG = AdLoCoConfig(num_outer_steps=8, num_inner_steps=5, lr_inner=0.05,
                     inner_optimizer="sgd", stats_probe_size=32,
                     enable_merge=False, adaptive=False)
 
+#: PR 2 fixture digests (2-pod topology) — pinned across the n-level
+#: fabric refactor: the tree model must not silently re-price them
 GOLDEN = {
     "baseline": "d84cea9f20b3edc8",
     "bursty_congestion": "d33d3451a9bcb212",
@@ -45,18 +53,47 @@ GOLDEN = {
     "spot_churn": "4242497cbb02a519",
 }
 
+#: co-scripted scenarios on the 3-level rack/pod/cluster fixture
+GOLDEN3 = {
+    "correlated_pod_failure": "554a96773439b4b4",
+    "diurnal_congestion": "341bc165da185d5f",
+    "rack_flap": "ff4f1a612d1c83d0",
+    "straggler_cascade": "46823150505ccb35",
+}
+
 
 def _run(name):
-    """Canonical scenario harness: 2 pods x 5 nodes at 2x pod speed
-    ratio, interleaved so every trainer's M=2 workers span both pods
-    (outer syncs always cross the bottleneck), 2 spare trainers' worth
-    of nodes/streams for joiners."""
+    """PR 2 scenario harness: 2 pods x 5 nodes at 2x pod speed ratio,
+    interleaved so every trainer's M=2 workers span both pods (outer
+    syncs always cross the bottleneck), 2 spare trainers' worth of
+    nodes/streams for joiners."""
     profiles = make_pod_profiles([5, 5], ratio=2.0, **TOY)
     interleaved = interleave_pods(profiles)
     topo = Topology.from_profiles(profiles, inter_bw=1e5,
                                   inter_latency=4e-3)
     prob, inits, streams = _quad_setup(k=3, M=2)
     streams = streams + [QuadStream(prob, 100 + i) for i in range(4)]
+    return run_cluster(quad_loss, inits, streams, ACFG, policy="elastic",
+                       profiles=interleaved, network=topo, scenario=name,
+                       fixed_batch=4)
+
+
+def _tree_cluster():
+    """3-level fixture: 2 pods x 2 racks x 2 nodes, pod 1 at half speed,
+    interleaved so every trainer's M=2 workers span both pods — each
+    outer sync crosses every fabric level."""
+    profiles = make_rack_profiles([[2, 2], [2, 2]], ratio=2.0, **TOY)
+    interleaved = interleave_pods(profiles)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3, pod_bw=1.5e5,
+                                  pod_latency=3e-3)
+    return interleaved, topo
+
+
+def _run3(name):
+    interleaved, topo = _tree_cluster()
+    prob, inits, streams = _quad_setup(k=3, M=2)
+    streams = streams + [QuadStream(prob, 100 + i) for i in range(2)]
     return run_cluster(quad_loss, inits, streams, ACFG, policy="elastic",
                        profiles=interleaved, network=topo, scenario=name,
                        fixed_batch=4)
@@ -76,14 +113,15 @@ _MEMO = {}
 
 def _memo_run(name):
     if name not in _MEMO:
-        _MEMO[name] = _run(name)
+        _MEMO[name] = _run3(name) if name in GOLDEN3 else _run(name)
     return _MEMO[name]
 
 
-@pytest.mark.parametrize("name", sorted(GOLDEN))
+@pytest.mark.parametrize("name", sorted(GOLDEN) + sorted(GOLDEN3))
 def test_scenario_matches_golden_trace(name):
     _, _, rep = _memo_run(name)
-    assert _digest(rep) == GOLDEN[name], (
+    golden = GOLDEN3[name] if name in GOLDEN3 else GOLDEN[name]
+    assert _digest(rep) == golden, (
         f"scenario {name!r} produced a different event/timing trace: "
         f"{_trace(rep)}")
 
@@ -91,15 +129,15 @@ def test_scenario_matches_golden_trace(name):
 def test_every_registered_scenario_has_a_golden():
     """Registering a scenario without pinning its trace defeats the
     regression net — add a digest here when adding a generator."""
-    assert sorted(list_scenarios()) == sorted(GOLDEN)
+    assert sorted(list_scenarios()) == sorted({**GOLDEN, **GOLDEN3})
 
 
-@pytest.mark.parametrize("name", sorted(GOLDEN))
+@pytest.mark.parametrize("name", sorted(GOLDEN) + sorted(GOLDEN3))
 def test_scenario_is_deterministic(name):
     """Same seed + scenario => identical ClusterReport, field by field
     (the acceptance criterion behind the golden digests)."""
     _, _, rep1 = _memo_run(name)
-    _, _, rep2 = _run(name)
+    _, _, rep2 = _run3(name) if name in GOLDEN3 else _run(name)
     assert rep1.summary() == rep2.summary()
     assert rep1.applied_events == rep2.applied_events
 
@@ -110,7 +148,12 @@ def test_scenarios_exercise_their_event_kinds():
     expected = {"bursty_congestion": {"fabric"},
                 "pod_partition": {"fabric"},
                 "flash_crowd_join": {"join"},
-                "spot_churn": {"leave", "join"}}
+                "spot_churn": {"leave", "join"},
+                "correlated_pod_failure": {"slowdown", "fabric"},
+                "diurnal_congestion": {"fabric"},
+                "rack_flap": {"fabric"},
+                "straggler_cascade": {"slowdown", "fabric"}}
+    assert set(expected) == (set(GOLDEN) | set(GOLDEN3)) - {"baseline"}
     for name, kinds in expected.items():
         _, _, rep = _memo_run(name)
         assert kinds <= {e["kind"] for e in rep.applied_events}
@@ -130,6 +173,53 @@ def test_spot_churn_seed_controls_stream():
     assert [dataclasses.astuple(e) for e in a] == \
         [dataclasses.astuple(e) for e in b]
     assert [e.time for e in a] != [e.time for e in c]
+
+
+def test_diurnal_schedule_traces_the_cosine():
+    """The piecewise-constant windows must actually dip to the trough
+    and recover: scale 1.0-ish at the period edges, `depth` at the
+    middle, symmetric."""
+    evs = build_scenario("diurnal_congestion", period=0.08, depth=0.3,
+                         cycles=1, steps=8)
+    scales = [e.bw_scale for e in evs]
+    assert len(scales) == 8
+    assert min(scales) >= 0.3 and max(scales) <= 1.0
+    assert min(scales) == pytest.approx(scales[3]) == pytest.approx(
+        scales[4])                   # trough at mid-period
+    assert scales[0] == max(scales)
+    np.testing.assert_allclose(scales, scales[::-1], rtol=1e-12)
+    # windows tile the period with no gaps
+    for a, b in zip(evs, evs[1:]):
+        assert b.time == pytest.approx(a.time + a.duration)
+
+
+def test_rack_flap_hits_only_the_named_rack():
+    """The flapping rack's windows must leave every other domain's
+    pricing untouched — the point of per-domain schedules."""
+    profiles = make_rack_profiles([[2, 2], [2, 2]], **TOY)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5, pod_bw=1.5e5)
+    for ev in build_scenario("rack_flap", domain="p0r0"):
+        topo.add_fabric_window(ev.time, ev.duration, bw_scale=ev.bw_scale,
+                               extra_latency=ev.extra_latency,
+                               scope=ev.scope)
+    inside = build_scenario("rack_flap", domain="p0r0")[0].time
+    a0, a1 = profiles[0], profiles[1]          # p0r0 nodes
+    b0, b1 = profiles[2], profiles[3]          # p0r1 nodes
+    c0, c1 = profiles[4], profiles[5]          # p1r0 nodes
+    quiet = Topology.from_profiles(profiles, inter_bw=1e5, pod_bw=1.5e5)
+    # flapped rack slows down...
+    assert topo.allreduce_time(1e3, [a0, a1], now=inside) > \
+        quiet.allreduce_time(1e3, [a0, a1], now=inside)
+    # ...sibling rack and the other pod do not
+    assert topo.allreduce_time(1e3, [b0, b1], now=inside) == \
+        quiet.allreduce_time(1e3, [b0, b1], now=inside)
+    assert topo.allreduce_time(1e3, [c0, c1], now=inside) == \
+        quiet.allreduce_time(1e3, [c0, c1], now=inside)
+    # between bursts the flapped rack is nominal again
+    evs = build_scenario("rack_flap", domain="p0r0")
+    between = evs[0].time + evs[0].duration + 1e-6
+    assert topo.allreduce_time(1e3, [a0, a1], now=between) == \
+        quiet.allreduce_time(1e3, [a0, a1], now=between)
 
 
 def test_congestion_slows_sync_but_async_hides_it():
@@ -156,3 +246,72 @@ def test_congestion_slows_sync_but_async_hides_it():
     async_overhead = (sims[("bursty_congestion", "async")]
                       - sims[("baseline", "async")])
     assert async_overhead < sync_overhead
+
+
+def test_sync_policy_matches_legacy_loop_under_tree_fabric():
+    """3-level fabric + an open congestion window change *time*, never
+    numerics: the sync policy must stay bit-identical to the host loop
+    while a correlated pod failure is degrading the cluster level."""
+    acfg = dataclasses.replace(ACFG, adaptive=True)
+    prob, inits, streams = _quad_setup()
+    pool_l, _ = train_adloco(quad_loss, inits, streams, acfg)
+
+    interleaved, topo = _tree_cluster()
+    _, inits2, streams2 = _quad_setup()
+    pool_c, _, rep = run_cluster(
+        quad_loss, inits2, streams2, acfg, policy="sync",
+        profiles=interleaved, network=topo,
+        scenario="correlated_pod_failure")
+    np.testing.assert_allclose(
+        np.asarray(pool_l.global_params["x"]),
+        np.asarray(pool_c.global_params["x"]), rtol=0, atol=0)
+    # the co-scripted events actually hit the run
+    kinds = {e["kind"] for e in rep.applied_events}
+    assert {"fabric", "slowdown"} <= kinds
+    assert rep.sim_time > 0 and rep.comm_time > 0
+
+
+# ------------------------------------------------- join re-pricing fix
+
+def test_join_transfer_spanning_window_edge_is_repriced():
+    """A flash_crowd_join parameter transfer in flight when a congestion
+    window opens must be re-priced — fraction done credited, remainder
+    re-costed — not left at its launch-time price.  The old
+    single-pricing answer is pinned below as the *wrong* value."""
+    join_t, window_t = 0.02, 0.025
+    # duration <= 0: the window never closes, so the transfer crosses
+    # exactly one edge and the expected value below has a closed form
+    scen = (build_scenario("flash_crowd_join", start=join_t, joins=1)
+            + [ClusterEvent(time=window_t, kind="fabric", bw_scale=1e-3,
+                            extra_latency=0.05, duration=0.0)])
+    acfg = dataclasses.replace(ACFG, num_outer_steps=12)
+    # slow links: the 64 B payload takes ~0.01 s to ship, so the window
+    # at join_t + 5 ms opens mid-transfer
+    toy = dict(TOY, link_bw=6e3)
+    prob, inits, streams = _quad_setup(k=3, M=2)
+    streams = streams + [QuadStream(prob, 100 + i) for i in range(2)]
+    from repro.cluster import NetworkModel, make_heterogeneous_profiles
+    profiles = make_heterogeneous_profiles(8, **toy)
+    _, _, rep = run_cluster(quad_loss, inits, streams, acfg,
+                            policy="elastic", profiles=profiles,
+                            network=NetworkModel(), scenario=scen,
+                            fixed_batch=4)
+    join = next(e for e in rep.applied_events if e["kind"] == "join")
+    assert join["time"] == join_t
+
+    net = NetworkModel()
+    payload = 16 * 4                 # 16-dim float32 params
+    old_single_price = net.point_to_point_time(payload, profiles[0],
+                                               profiles[6], now=join_t)
+    # the window opens while the transfer flies...
+    assert join_t < window_t < join_t + old_single_price
+    # ...and the correct re-priced duration credits the fraction done
+    # then re-costs the remainder under the degraded fabric
+    net.add_fabric_window(window_t, None, bw_scale=1e-3, extra_latency=0.05)
+    frac_done = (window_t - join_t) / old_single_price
+    new_total = net.point_to_point_time(payload, profiles[0], profiles[6],
+                                        now=window_t)
+    expected = (window_t - join_t) + (1.0 - frac_done) * new_total
+    assert join["xfer_s"] == pytest.approx(expected, rel=1e-12)
+    # the bug this fixes: pricing once at launch undershoots badly
+    assert join["xfer_s"] > 3.0 * old_single_price

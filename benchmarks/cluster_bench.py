@@ -241,6 +241,7 @@ def run(quick: bool = False, scenarios=None, levels=None):
 
 def main(argv=None) -> int:
     import argparse
+    import json
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="quick CI run (fewer outer steps)")
@@ -251,11 +252,22 @@ def main(argv=None) -> int:
                     help="fabric depth for --scenario runs: 2 = pod "
                          "topology, 3 = rack/pod/cluster tree (default: "
                          "3 for the co-scripted scenarios, else 2)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the sweep rows as JSON — CI uploads "
+                         "this as a workflow artifact and diffs it "
+                         "against the committed BENCH_cluster.json "
+                         "baseline (simulated timings are deterministic "
+                         "floats, so the file is reproducible)")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="compare the sweep rows against a stored "
+                         "baseline JSON and fail on any drift (the perf "
+                         "trajectory gate)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     ok = True
-    for r in run(quick=args.smoke, scenarios=args.scenario,
-                 levels=args.levels):
+    rows = run(quick=args.smoke, scenarios=args.scenario,
+               levels=args.levels)
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"",
               flush=True)
         if r["name"] == "cluster/summary":
@@ -268,6 +280,53 @@ def main(argv=None) -> int:
             if "async_faster_bursty_congestion" in r["derived"]:
                 ok = ok and ("async_faster_bursty_congestion=True"
                              in r["derived"])
+    # read the baseline BEFORE writing --json: if both flags resolve to
+    # the same file (case-insensitive filesystems!), writing first would
+    # clobber the baseline and the gate would compare it to itself
+    base = None
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+    if args.json:
+        blob = {"bench": "cluster_bench",
+                "args": {"smoke": bool(args.smoke),
+                         "scenario": args.scenario,
+                         "levels": args.levels},
+                "ok": ok, "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(blob, f, indent=2, sort_keys=True)
+            f.write("\n")
+    if base is not None:
+        # row set/order and the boolean summary verdicts must match
+        # exactly; simulated times get a 5% band because the adaptive
+        # runs fold jax numerics (matmuls) into the clock and CPU
+        # codegen differs slightly across instruction sets
+        drift = []
+        if [r["name"] for r in rows] != [r["name"] for r in base["rows"]]:
+            drift.append("row names/order changed")
+        for a, b in zip(rows, base["rows"]):
+            if a["name"].endswith("summary") and a["derived"] != \
+                    b["derived"]:
+                drift.append(f"{a['name']}: {a['derived']!r} != "
+                             f"{b['derived']!r}")
+            hi = max(abs(a["us_per_call"]), abs(b["us_per_call"]), 1e-9)
+            if abs(a["us_per_call"] - b["us_per_call"]) / hi > 0.05:
+                drift.append(f"{a['name']}: {a['us_per_call']:.1f}us vs "
+                             f"baseline {b['us_per_call']:.1f}us")
+        if drift:
+            flags = (["--smoke"] if args.smoke else []) \
+                + [f"--scenario {s}" for s in (args.scenario or [])] \
+                + ([f"--levels {args.levels}"] if args.levels else [])
+            print(f"BASELINE DRIFT vs {args.baseline}:\n  "
+                  + "\n  ".join(drift)
+                  + "\nIf the cost-model/scheduler change is intended, "
+                  f"regenerate with:\n"
+                  f"  PYTHONPATH=src python benchmarks/cluster_bench.py "
+                  f"{' '.join(flags)} --json {args.baseline}\n"
+                  f"and commit the diff.")
+            return 1
+        print(f"baseline OK: {len(rows)} rows within tolerance of "
+              f"{args.baseline}")
     return 0 if ok else 1
 
 

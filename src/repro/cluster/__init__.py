@@ -1,11 +1,26 @@
-"""repro.cluster — event-driven virtual-cluster runtime for AdLoCo.
+"""repro.cluster — event-driven cluster runtime for AdLoCo, with
+pluggable execution backends.
 
 Runs real AdLoCo numerics (the same jitted ``TrainerRound`` primitives
-as ``repro.core.adloco``) over *simulated* heterogeneous nodes, so the
-paper's dynamic-workload scenarios — stragglers, congested fabrics,
-flapping racks, pod partitions, trainers joining and leaving — can be
-exercised and timed without a physical cluster.  The network model and
-the scenario change the simulated clock, never the numerics.
+as ``repro.core.adloco``) over heterogeneous nodes, so the paper's
+dynamic-workload scenarios — stragglers, congested fabrics, flapping
+racks, pod partitions, trainers joining and leaving — can be exercised
+and timed.  The division of labor:
+
+* a network model (``NetworkModel`` / ``Topology``) describes **where**
+  a collective runs — which fabric domains it crosses and what each
+  level's paths cost on the simulated clock;
+* an execution backend (``repro.cluster.backend``) supplies **how** it
+  executes — in-process arithmetic (``SimBackend``, the default) or
+  real multi-process ``jax.lax`` collectives over ``jax.distributed``
+  (``JaxProcessBackend``, one OS process per worker, launched by
+  ``repro.cluster.launch_mp``);
+* the scenario decides **what happens** while it runs.
+
+None of the three may change the numerics: the sync policy is
+bit-identical to the legacy host loop under every network model and
+backend (CI's ``multiprocess-smoke`` lane pins sim/real parity on every
+push).
 
 Quick start::
 
@@ -19,6 +34,36 @@ Quick start::
                                      network=topo, eval_fn=eval_fn,
                                      scenario="correlated_pod_failure")
     # hist.sim_time x hist.eval_loss -> time-to-target under the sim clock
+
+Execution backends
+------------------
+``SimBackend``
+    Prices every collective analytically (``comms.
+    hierarchical_allreduce_time`` under a ``Topology``, the flat ring
+    otherwise) and executes the outer reduction as the in-process
+    ``jnp.stack`` it always was.  The default when ``run_cluster`` gets
+    a ``network=``; bit-identical to the pre-backend runtime (the
+    golden-trace digests pin it).
+``JaxProcessBackend``
+    One process per worker via ``jax.distributed.initialize`` (gloo CPU
+    collectives locally; the same code path NCCL/ICI deployments use).
+    Every process runs the identical deterministic event loop, computes
+    only its own worker's inner steps, and the outer all-reduce executes
+    as a real ``jax.lax.pmean`` — with the pricing ``Topology``'s
+    participant-pruned ``FabricDomain`` tree mapped onto nested mesh
+    axes, so the reduction lowers to grouped collectives per fabric
+    level, exactly where the tree says the hierarchical schedule runs.
+    The simulated clock still comes from the network model (reports stay
+    comparable across backends); the wall-clock measured inside each
+    real collective lands in ``ClusterReport.real_comm_time`` and per
+    event in the comms log (``real_s``).  Scope: sync/async policies,
+    one trainer, ``adaptive=False`` — merging and elastic events need
+    the in-process pool and stay simulator-only for now.
+
+``python -m repro.cluster.launch_mp --procs 2 --rounds 1 --check`` is
+the zero-to-parity smoke: it spawns the processes, runs the canonical
+quadratic through the real backend, and asserts the final parameters
+match the simulator.
 
 Network models
 --------------
@@ -87,7 +132,12 @@ Which sync policy should I use?
     when outer syncs are expensive — congested or partitioned fabrics,
     slow cross-pod bottlenecks, large models, high heterogeneity.
     Expect a small loss-trajectory perturbation (one round of delay) in
-    exchange for hiding comm time entirely.
+    exchange for hiding comm time entirely.  Keep
+    ``outer_momentum <= 0.5``: high outer Nesterov momentum (0.9) is
+    underdamped under the one-round staleness, and the caveat binds
+    *harder* on real backends — a physical fabric's collective latency
+    is exactly the staleness window, and divergence there wastes real
+    machine hours, not simulated ones.
 ``elastic``
     ``async`` plus scripted :class:`ClusterEvent`\\ s — trainers leave
     (folded into the pool via ``mit.do_merge``) and join (cloned from
@@ -100,6 +150,8 @@ heterogeneity, across registered scenarios on a 2-pod topology, and
 across the co-scripted scenarios on a 3-level rack/pod/cluster fabric;
 ``examples/heterogeneous_cluster.py`` is the narrated tour.
 """
+from repro.cluster.backend import (CollectiveBackend, JaxProcessBackend,
+                                   SimBackend)
 from repro.cluster.network import (FABRIC_SCOPES, CommDomain, FabricDomain,
                                    FabricSchedule, FabricWindow,
                                    NetworkModel, Topology)
@@ -113,8 +165,9 @@ from repro.cluster.scenarios import (SCENARIOS, build_scenario,
 
 __all__ = [
     "FABRIC_SCOPES", "POLICIES", "SCENARIOS", "ClusterEvent",
-    "ClusterReport", "CommDomain", "FabricDomain", "FabricSchedule",
-    "FabricWindow", "NetworkModel", "NodeProfile", "Slowdown", "Topology",
+    "ClusterReport", "CollectiveBackend", "CommDomain", "FabricDomain",
+    "FabricSchedule", "FabricWindow", "JaxProcessBackend", "NetworkModel",
+    "NodeProfile", "SimBackend", "Slowdown", "Topology",
     "build_scenario", "interleave_pods", "list_scenarios",
     "make_heterogeneous_profiles", "make_pod_profiles",
     "make_rack_profiles", "register_scenario", "run_cluster",

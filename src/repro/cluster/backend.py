@@ -1,0 +1,386 @@
+"""Pluggable execution backends for the cluster runtime.
+
+``Topology`` describes *where* a hierarchical all-reduce runs — which
+fabric domains a collective crosses and what each level's paths cost.
+A :class:`CollectiveBackend` supplies *how*: the same runtime event loop
+drives either
+
+:class:`SimBackend`
+    The default.  Collectives are *priced* analytically (delegating to
+    the wrapped :class:`~repro.cluster.network.NetworkModel` /
+    :class:`~repro.cluster.network.Topology`) and *executed* locally —
+    the outer reduction is the in-process ``jnp.stack`` the runtime has
+    always done.  Behavior is bit-identical to the pre-backend runtime;
+    the golden-trace suite pins that.
+:class:`JaxProcessBackend`
+    One OS process per worker via ``jax.distributed.initialize`` (see
+    ``repro.cluster.launch_mp``): every process runs the *same*
+    deterministic event loop, computes only its own worker's inner
+    steps, and the outer reduction executes as a real ``jax.lax``
+    collective across processes.  The simulated clock still comes from
+    the analytic network model (so reports stay comparable), while the
+    wall-clock actually spent inside each collective is recorded
+    separately (``ClusterReport.real_comm_time`` and per-event
+    ``real_s``).  When the pricing network is a
+    ``Topology``, the participant-pruned :class:`~repro.cluster.network.
+    FabricDomain` tree is mapped onto nested mesh axes, so the reduction
+    lowers to grouped all-reduces per fabric level — intra-leaf process
+    groups first, then the cross-domain groups, exactly where the tree
+    says the hierarchical schedule runs (unbalanced participant trees
+    fall back to one flat group).
+
+Lockstep contract (distributed backends): every process must pop the
+same events in the same order, so collectives launch identically
+everywhere.  That holds because pricing is pure float arithmetic on
+state every process replicates (profiles, network, scenario).  It is
+also why :meth:`JaxProcessBackend.validate` rejects anything that would
+let processes diverge: adaptive batching (per-process batch stats would
+change compiled shapes), merging/elastic events (pool mutations keyed on
+in-process object identity), and multi-trainer pools.
+"""
+from __future__ import annotations
+
+import copy
+import time
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.cluster.network import NetworkModel
+from repro.cluster.node import NodeProfile
+
+
+class CollectiveBackend:
+    """Protocol: pricing (simulated clock) + execution (numerics).
+
+    Pricing methods mirror the network-model interface so the runtime
+    can stay network-agnostic; execution methods carry the actual
+    parameter movement.  ``outer_reduce`` must return a pytree whose
+    leaves have a leading *worker* axis ready for
+    ``repro.core.diloco.make_outer_step``'s mean — either the full
+    (M, ...) stack (sim) or an already-reduced (1, ...) mean (real
+    collectives).
+    """
+
+    name = "abstract"
+
+    # ------------------------------------------------------------ setup
+    def for_run(self) -> "CollectiveBackend":
+        """Per-run copy of the mutable pricing state (the runtime opens
+        fabric windows and the sim draws jitter); process-level handles
+        (meshes, distributed clients) are shared, not copied."""
+        raise NotImplementedError
+
+    def bind(self, profiles: Sequence[NodeProfile]) -> None:
+        """Associate the run's node profiles (index i = worker i)."""
+
+    def validate(self, acfg, *, policy: str, k: int, M: int,
+                 scenario: Sequence[Any] = ()) -> None:
+        """Reject configurations this backend cannot execute."""
+
+    # ---------------------------------------------------------- pricing
+    def allreduce_time(self, payload_bytes: float,
+                       nodes: Sequence[NodeProfile], *,
+                       now: float = 0.0) -> float:
+        raise NotImplementedError
+
+    def point_to_point_time(self, payload_bytes: float, src: NodeProfile,
+                            dst: NodeProfile, *, now: float = 0.0) -> float:
+        raise NotImplementedError
+
+    def add_fabric_window(self, start: float,
+                          duration: Optional[float] = None, *,
+                          bw_scale: float = 1.0, extra_latency: float = 0.0,
+                          scope: str = "all") -> None:
+        raise NotImplementedError
+
+    def fabric_change_points(self) -> List[float]:
+        return []
+
+    # -------------------------------------------------------- execution
+    def local_workers(self, M: int) -> Optional[List[int]]:
+        """Worker indices this process computes; None means all (the
+        single-process sim)."""
+        return None
+
+    def outer_reduce(self, worker_params: List[Any]) -> Any:
+        """List of per-worker pytrees (None for workers that live on
+        other processes) -> pytree with a leading worker axis."""
+        raise NotImplementedError
+
+    def mean_scalar(self, value: float) -> float:
+        """Mean of a per-process scalar over all processes (loss
+        logging); identity on single-process backends."""
+        return value
+
+    def broadcast_params(self, params: Any) -> Any:
+        """Coordinator's params on every process (init sync / joins)."""
+        return params
+
+    def pop_measured(self) -> Optional[float]:
+        """Wall-clock seconds the last ``outer_reduce`` actually spent
+        on the wire, or None for backends that only price."""
+        return None
+
+
+class SimBackend(CollectiveBackend):
+    """Analytic pricing + in-process execution — the classic runtime.
+
+    Wraps a :class:`NetworkModel` or :class:`Topology` for the clock and
+    stacks worker params locally for the numerics.  ``for_run`` deep-
+    copies the network so caller-owned fabric schedules stay reusable
+    (the same contract ``run_cluster`` has always had).
+    """
+
+    name = "sim"
+
+    def __init__(self, network: Optional[NetworkModel] = None):
+        self.network = network if network is not None else NetworkModel()
+
+    def for_run(self) -> "SimBackend":
+        return SimBackend(copy.deepcopy(self.network))
+
+    # ---------------------------------------------------------- pricing
+    def allreduce_time(self, payload_bytes, nodes, *, now=0.0):
+        return self.network.allreduce_time(payload_bytes, nodes, now=now)
+
+    def point_to_point_time(self, payload_bytes, src, dst, *, now=0.0):
+        return self.network.point_to_point_time(payload_bytes, src, dst,
+                                                now=now)
+
+    def add_fabric_window(self, start, duration=None, *, bw_scale=1.0,
+                          extra_latency=0.0, scope="all"):
+        if not hasattr(self.network, "add_fabric_window"):
+            raise ValueError(
+                f"network model {type(self.network).__name__} does not "
+                f"support fabric events")
+        self.network.add_fabric_window(start, duration, bw_scale=bw_scale,
+                                       extra_latency=extra_latency,
+                                       scope=scope)
+
+    def fabric_change_points(self):
+        if hasattr(self.network, "fabric_change_points"):
+            return self.network.fabric_change_points()
+        return []
+
+    # -------------------------------------------------------- execution
+    def outer_reduce(self, worker_params):
+        if any(wp is None for wp in worker_params):
+            raise ValueError("SimBackend executes every worker in-process;"
+                             " got a partial worker set")
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *worker_params)
+
+
+class JaxProcessBackend(CollectiveBackend):
+    """Real multi-process execution over ``jax.distributed``.
+
+    Construct *after* ``jax.distributed.initialize`` (see
+    ``repro.cluster.launch_mp``, which spawns one CPU process per worker
+    and elects process 0 as coordinator).  Worker m lives on process m;
+    the outer reduction is a jitted ``shard_map`` whose mesh axes follow
+    the pricing ``Topology``'s participant-pruned domain tree, so the
+    per-axis ``lax.pmean`` chain lowers to grouped all-reduces per
+    fabric level (leaf siblings first, bottleneck level last).  With a
+    flat :class:`NetworkModel` — or an unbalanced participant tree — the
+    mesh is one flat axis and the reduction a single all-reduce.
+
+    The analytic network still prices the simulated clock (reports stay
+    comparable across backends); the wall-clock each collective actually
+    took flows to ``ClusterReport.real_comm_time`` via
+    :meth:`pop_measured`.  Works single-process too
+    (``jax.process_count() == 1``): the mesh is this process's device
+    and every collective degenerates to the identity, which is what the
+    in-process smoke tests exercise.
+    """
+
+    name = "jax"
+
+    def __init__(self, network: Optional[NetworkModel] = None):
+        self.network = network if network is not None else NetworkModel()
+        self.num_processes = jax.process_count()
+        self.rank = jax.process_index()
+        self._last_measured: Optional[float] = None
+        self._profiles: Optional[List[NodeProfile]] = None
+        self._mesh = None
+        self._axes: Optional[tuple] = None
+        self._reduce_jit = None
+        self._warm: set = set()      # (shape, dtype) combos already compiled
+
+    def for_run(self) -> "JaxProcessBackend":
+        run = object.__new__(JaxProcessBackend)
+        run.__dict__.update(self.__dict__)
+        run.network = copy.deepcopy(self.network)
+        return run
+
+    def bind(self, profiles):
+        self._profiles = list(profiles)
+        self._mesh = None            # topology of the run may differ
+
+    def validate(self, acfg, *, policy, k, M, scenario=()):
+        P = self.num_processes
+        if policy not in ("sync", "async"):
+            raise ValueError(
+                f"JaxProcessBackend supports the sync/async policies, "
+                f"not {policy!r} (elastic pools mutate in-process state)")
+        if k != 1:
+            raise ValueError(
+                f"JaxProcessBackend runs one trainer across its "
+                f"processes; got k={k} trainers")
+        if M != P:
+            raise ValueError(
+                f"one worker per process: nodes_per_gpu={M} but "
+                f"{P} processes are initialized")
+        if acfg.adaptive:
+            raise ValueError(
+                "adaptive batching is per-process under the distributed "
+                "backend and would desynchronize compiled shapes across "
+                "ranks; run with adaptive=False (+ fixed_batch)")
+        if acfg.enable_merge:
+            raise ValueError("merging requires the in-process pool; "
+                             "run with enable_merge=False")
+        bad = {e.kind for e in scenario} & {"join", "leave"}
+        if bad:
+            raise ValueError(f"scenario events {sorted(bad)} need the "
+                             f"elastic in-process pool")
+
+    # ---------------------------------------------------------- pricing
+    def allreduce_time(self, payload_bytes, nodes, *, now=0.0):
+        return self.network.allreduce_time(payload_bytes, nodes, now=now)
+
+    def point_to_point_time(self, payload_bytes, src, dst, *, now=0.0):
+        return self.network.point_to_point_time(payload_bytes, src, dst,
+                                                now=now)
+
+    def add_fabric_window(self, start, duration=None, *, bw_scale=1.0,
+                          extra_latency=0.0, scope="all"):
+        self.network.add_fabric_window(start, duration, bw_scale=bw_scale,
+                                       extra_latency=extra_latency,
+                                       scope=scope)
+
+    def fabric_change_points(self):
+        return self.network.fabric_change_points()
+
+    # ------------------------------------------------------------- mesh
+    def _balanced_shape(self, ptree):
+        """(level shape, flat name order) of a participant tree if every
+        sibling subtree has the same shape, else None -> flat mesh."""
+        if ptree and all(isinstance(x, str) for x in ptree):
+            return (len(ptree),), list(ptree)
+        subs = [self._balanced_shape(c) for c in ptree]
+        if any(s is None for s in subs):
+            return None
+        shapes = {s for s, _ in subs}
+        if len(shapes) != 1:
+            return None
+        shape, _ = subs[0]
+        return ((len(ptree),) + shape,
+                [nm for _, order in subs for nm in order])
+
+    def _build_mesh(self):
+        import numpy as np
+        from jax.sharding import Mesh
+
+        if self._profiles is None:
+            raise RuntimeError("backend not bound to profiles yet")
+        P = self.num_processes
+        names = [p.name for p in self._profiles[:P]]
+        proc_of = {nm: i for i, nm in enumerate(names)}
+        shape, order = (len(names),), list(names)
+        if hasattr(self.network, "participant_tree"):
+            spec = self._balanced_shape(
+                self.network.participant_tree(names))
+            if spec is not None:
+                shape, order = spec
+        # device d belongs to process d.process_index; one device per
+        # process under the launch_mp contract
+        dev_of_proc = {}
+        for d in jax.devices():
+            dev_of_proc.setdefault(d.process_index, d)
+        devs = np.array([dev_of_proc[proc_of[nm]] for nm in order])
+        self._axes = tuple(f"l{i}" for i in range(len(shape)))
+        self._mesh = Mesh(devs.reshape(shape), self._axes)
+        self._reduce_jit = None
+
+    def _reducer(self):
+        """Jitted mean-over-workers: pmean per mesh axis, innermost
+        (leaf siblings) to outermost (top bottleneck) — the hierarchical
+        all-reduce schedule, for real."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        mesh, axes = self._mesh, self._axes
+
+        def mean_all(x):
+            for ax in reversed(axes):
+                x = jax.lax.pmean(x, ax)
+            return x
+
+        return jax.jit(shard_map(mean_all, mesh=mesh,
+                                 in_specs=P(axes), out_specs=P(axes)))
+
+    # -------------------------------------------------------- execution
+    def local_workers(self, M):
+        if self.num_processes == 1 and M == 1:
+            return [0]
+        return [self.rank]
+
+    def _execute(self, tree):
+        """Lift the local worker onto the global mesh (leading worker
+        axis sharded across every level axis), reduce, read back."""
+        from jax.experimental import multihost_utils
+        from jax.sharding import PartitionSpec as P
+
+        mesh, spec = self._mesh, P(self._axes)
+        glob = multihost_utils.host_local_array_to_global_array(
+            tree, mesh, spec)
+        out = jax.tree.map(self._reduce_jit, glob)
+        host = multihost_utils.global_array_to_host_local_array(
+            out, mesh, spec)
+        return jax.tree.map(jax.block_until_ready, host)
+
+    def outer_reduce(self, worker_params):
+        local = [wp for wp in worker_params if wp is not None]
+        if len(local) != 1:
+            raise ValueError(f"expected exactly the local worker's "
+                             f"params, got {len(local)} entries")
+        if self._mesh is None:
+            self._build_mesh()
+        if self._reduce_jit is None:
+            self._reduce_jit = self._reducer()
+        tree = jax.tree.map(lambda x: jnp.asarray(x)[None], local[0])
+        sig = tuple((l.shape, str(l.dtype)) for l in jax.tree.leaves(tree))
+        if sig not in self._warm:
+            # run once untimed so trace/compile never lands in the
+            # measured window (pmean is deterministic, and every rank
+            # reaches this point in lockstep, so the extra collective is
+            # identical everywhere); re-run below for the wire timing
+            self._execute(tree)
+            self._warm.add(sig)
+        t0 = time.perf_counter()
+        host = self._execute(tree)
+        self._last_measured = time.perf_counter() - t0
+        # every shard now holds the global mean: a (1, ...) worker axis
+        # that make_outer_step's mean passes through unchanged
+        return host
+
+    def mean_scalar(self, value):
+        if self.num_processes == 1:
+            return float(value)
+        from jax.experimental import multihost_utils
+        got = multihost_utils.process_allgather(
+            jnp.asarray(value, jnp.float32))
+        return float(jnp.mean(got))
+
+    def broadcast_params(self, params):
+        if self.num_processes == 1:
+            return params
+        from jax.experimental import multihost_utils
+        return multihost_utils.broadcast_one_to_all(params)
+
+    def pop_measured(self):
+        m, self._last_measured = self._last_measured, None
+        return m
+
+
+__all__ = ["CollectiveBackend", "JaxProcessBackend", "SimBackend"]

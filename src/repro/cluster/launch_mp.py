@@ -1,0 +1,299 @@
+"""Multi-process launcher: the cluster runtime on real ``jax.distributed``.
+
+Spawns one OS process per worker on this host, initializes the
+``jax.distributed`` coordination service (process 0 is the coordinator,
+and its results are the run's results), and drives the *same*
+``run_cluster`` event loop as the simulator — with a
+:class:`~repro.cluster.backend.JaxProcessBackend`, so every outer
+all-reduce executes as a real ``jax.lax`` collective across processes
+instead of being priced analytically.  Every process runs the identical
+deterministic event loop (pricing is pure float arithmetic on replicated
+state), computes only its own worker's inner steps, and meets the others
+inside the collectives; process 0 writes the report.
+
+The canonical workload is the same 16-dim quadratic the test-suite
+fixtures use (one trainer, M = nprocs workers, fixed batch), which is
+what makes the sim/real differential guarantee checkable:
+
+    # one sync outer round over 2 local CPU processes + parity check
+    PYTHONPATH=src python -m repro.cluster.launch_mp \\
+        --procs 2 --rounds 1 --check
+
+    # async policy on a 2-pod topology (hierarchical process groups)
+    PYTHONPATH=src python -m repro.cluster.launch_mp \\
+        --procs 2 --rounds 8 --policy async --pods
+
+``--check`` re-runs the identical fixture through the in-process
+:class:`~repro.cluster.backend.SimBackend` and asserts the final
+parameters match to float tolerance — the contract
+``tests/test_backend.py`` pins in CI.
+
+Scope: sync/async policies, one trainer, ``adaptive=False`` (per-process
+batch statistics would desynchronize compiled shapes across ranks — see
+``JaxProcessBackend.validate``).  Elastic pools and merging stay
+simulator-only for now.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from typing import List, Optional
+
+import numpy as np
+
+#: toy-scale hardware constants shared with the bench/test fixtures so
+#: compute and comm land in comparable (simulated) regimes
+TOY = dict(flops=1e6, hbm_bw=1e9, link_bw=2e5, link_latency=2e-3)
+
+DIM = 16
+
+
+class _QuadStream:
+    """Deterministic least-squares stream, numerically identical to the
+    test-suite/bench QuadStream (same SeedSequence scheme)."""
+
+    def __init__(self, prob, shard: int, seed: int = 0):
+        self.prob = prob
+        self.rng = np.random.default_rng(
+            np.random.SeedSequence([seed, shard]))
+
+    def next_batch(self, b):
+        A, y = self.prob.sample(b, self.rng)
+        return {"A": A, "y": y}
+
+
+def quad_loss(params, batch):
+    import jax.numpy as jnp
+    r = batch["A"] @ params["x"] - batch["y"]
+    return 0.5 * jnp.mean(jnp.square(r)), {}
+
+
+def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0):
+    """(acfg, inits, streams, profiles, network) for the canonical
+    single-trainer run: M = ``procs`` workers, fixed batch, merging off.
+    ``pods`` splits the workers across a 2-pod :class:`Topology` so the
+    hierarchical group mapping is exercised; otherwise the fabric is the
+    flat :class:`NetworkModel`."""
+    import jax
+    from repro.configs.base import AdLoCoConfig
+    from repro.data import QuadraticProblem
+    from repro.cluster.network import NetworkModel, Topology
+    from repro.cluster.node import (interleave_pods,
+                                    make_heterogeneous_profiles,
+                                    make_pod_profiles)
+
+    acfg = AdLoCoConfig(num_outer_steps=rounds, num_inner_steps=5,
+                        lr_inner=0.05, lr_outer=0.7, outer_momentum=0.5,
+                        nodes_per_gpu=procs, num_init_trainers=1,
+                        initial_batch_size=4, merge_frequency=3, eta=0.8,
+                        max_batch=16, inner_optimizer="sgd",
+                        stats_probe_size=32, enable_merge=False,
+                        adaptive=False)
+    prob = QuadraticProblem(dim=DIM, noise=2.0, seed=seed)
+    inits = [{"x": jax.random.normal(jax.random.PRNGKey(seed), (DIM,))}]
+    streams = [_QuadStream(prob, i, seed=seed) for i in range(procs)]
+    if pods and procs >= 2:
+        profiles = make_pod_profiles(
+            [procs - procs // 2, procs // 2], ratio=2.0, **TOY)
+        profiles = interleave_pods(profiles)
+        network = Topology.from_profiles(profiles, inter_bw=1e5,
+                                         inter_latency=4e-3)
+    else:
+        profiles = make_heterogeneous_profiles(procs, ratio=2.0, **TOY)
+        network = NetworkModel()
+    return acfg, inits, streams, profiles, network
+
+
+def run_sim(procs: int, *, rounds: int, policy: str = "sync",
+            pods: bool = False, seed: int = 0):
+    """The same fixture through the in-process SimBackend — the
+    reference arm of the parity check."""
+    from repro.cluster.backend import SimBackend
+    from repro.cluster.runtime import run_cluster
+
+    acfg, inits, streams, profiles, network = fixture(
+        procs, rounds=rounds, pods=pods, seed=seed)
+    pool, hist, rep = run_cluster(
+        quad_loss, inits, streams, acfg, policy=policy, profiles=profiles,
+        backend=SimBackend(network), fixed_batch=4)
+    return {"x": np.asarray(pool.global_params["x"], np.float64).tolist(),
+            "sim_time": rep.sim_time, "comm_time": rep.comm_time,
+            "num_syncs": rep.num_syncs, "policy": policy, "procs": procs,
+            "backend": "sim"}
+
+
+# --------------------------------------------------------------- worker
+
+def worker_main(args) -> int:
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax
+    try:
+        # cross-process CPU collectives need a real transport
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:                    # older jaxlibs: single transport
+        pass
+    jax.distributed.initialize(coordinator_address=args.coordinator,
+                               num_processes=args.procs,
+                               process_id=args.rank)
+    from jax.experimental import multihost_utils
+
+    from repro.cluster.backend import JaxProcessBackend
+    from repro.cluster.runtime import run_cluster
+
+    acfg, inits, streams, profiles, network = fixture(
+        args.procs, rounds=args.rounds, pods=args.pods, seed=args.seed)
+    backend = JaxProcessBackend(network)
+    # every rank builds the same seeded init; the broadcast makes the
+    # coordinator's copy authoritative (and exercises the transfer path)
+    inits = [backend.broadcast_params(inits[0])]
+
+    t0 = time.perf_counter()
+    pool, hist, rep = run_cluster(
+        quad_loss, inits, streams, acfg, policy=args.policy,
+        profiles=profiles, backend=backend, fixed_batch=4)
+    wall = time.perf_counter() - t0
+
+    # the collectives must have left every rank with identical params
+    x = np.asarray(pool.global_params["x"], np.float64)
+    gathered = np.asarray(multihost_utils.process_allgather(
+        pool.global_params["x"]))
+    if not np.allclose(gathered, gathered[0], rtol=0, atol=1e-6):
+        print(f"[rank {args.rank}] parameter divergence across ranks: "
+              f"{gathered}", file=sys.stderr)
+        return 3
+
+    if args.rank == 0 and args.out:
+        result = {"x": x.tolist(), "sim_time": rep.sim_time,
+                  "comm_time": rep.comm_time,
+                  "real_comm_time": rep.real_comm_time,
+                  "num_syncs": rep.num_syncs,
+                  "rounds": dict(rep.rounds), "loss": hist.loss,
+                  "policy": args.policy, "procs": args.procs,
+                  "pods": bool(args.pods), "wall_s": wall,
+                  "backend": "jax"}
+        with open(args.out, "w") as f:
+            json.dump(result, f)
+    jax.distributed.shutdown()
+    return 0
+
+
+# --------------------------------------------------------------- parent
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def run_mp(procs: int, *, rounds: int = 2, policy: str = "sync",
+           pods: bool = False, seed: int = 0,
+           timeout: float = 600.0) -> dict:
+    """Spawn ``procs`` local worker processes, run the fixture through
+    the real backend, and return process 0's result dict."""
+    coord = f"127.0.0.1:{_free_port()}"
+    out = tempfile.NamedTemporaryFile(suffix=".json", delete=False)
+    out.close()
+    src_root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    # one device per process — the JaxProcessBackend mesh contract
+    env.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+    children: List[subprocess.Popen] = []
+    try:
+        for rank in range(procs):
+            cmd = [sys.executable, "-m", "repro.cluster.launch_mp",
+                   "--worker", "--rank", str(rank), "--procs", str(procs),
+                   "--coordinator", coord, "--rounds", str(rounds),
+                   "--policy", policy, "--seed", str(seed),
+                   "--out", out.name]
+            if pods:
+                cmd.append("--pods")
+            children.append(subprocess.Popen(
+                cmd, env=env, stdout=subprocess.PIPE,
+                stderr=subprocess.STDOUT, text=True))
+        deadline = time.time() + timeout
+        tails = {}
+        for rank, ch in enumerate(children):
+            left = max(1.0, deadline - time.time())
+            try:
+                tails[rank], _ = ch.communicate(timeout=left)
+            except subprocess.TimeoutExpired:
+                for c in children:
+                    c.kill()
+                raise RuntimeError(
+                    f"launch_mp rank {rank} timed out after {timeout}s")
+        bad = [r for r, ch in enumerate(children) if ch.returncode != 0]
+        if bad:
+            detail = "\n".join(
+                f"--- rank {r} (exit {children[r].returncode}) ---\n"
+                f"{tails[r][-2000:]}" for r in bad)
+            raise RuntimeError(f"launch_mp workers failed:\n{detail}")
+        with open(out.name) as f:
+            return json.load(f)
+    finally:
+        try:
+            os.unlink(out.name)
+        except OSError:
+            pass
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--procs", type=int, default=2,
+                    help="local worker processes (= workers per trainer)")
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="outer rounds to run")
+    ap.add_argument("--policy", choices=("sync", "async"), default="sync")
+    ap.add_argument("--pods", action="store_true",
+                    help="2-pod Topology (hierarchical process groups) "
+                         "instead of the flat NetworkModel")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true",
+                    help="also run the SimBackend reference in-process "
+                         "and assert final-parameter parity")
+    ap.add_argument("--out", default=None, help="write rank-0 result JSON")
+    ap.add_argument("--timeout", type=float, default=600.0)
+    # internal: worker mode (spawned by run_mp)
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--rank", type=int, default=0, help=argparse.SUPPRESS)
+    ap.add_argument("--coordinator", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    if args.worker:
+        return worker_main(args)
+
+    res = run_mp(args.procs, rounds=args.rounds, policy=args.policy,
+                 pods=args.pods, seed=args.seed, timeout=args.timeout)
+    print(f"[launch_mp] procs={res['procs']} policy={res['policy']} "
+          f"pods={res['pods']} syncs={res['num_syncs']} "
+          f"sim_time={res['sim_time']:.4f}s "
+          f"real_comm={res['real_comm_time']:.4f}s "
+          f"wall={res['wall_s']:.2f}s")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f)
+    if args.check:
+        ref = run_sim(args.procs, rounds=args.rounds, policy=args.policy,
+                      pods=args.pods, seed=args.seed)
+        diff = float(np.max(np.abs(np.asarray(res["x"])
+                                   - np.asarray(ref["x"]))))
+        same_clock = (res["sim_time"] == ref["sim_time"]
+                      and res["num_syncs"] == ref["num_syncs"])
+        print(f"[launch_mp] parity vs SimBackend: max|dx|={diff:.3e} "
+              f"same_sim_clock={same_clock}")
+        if diff > 1e-5 or not same_clock:
+            print("[launch_mp] PARITY FAILURE", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -405,6 +405,30 @@ class Topology:
             pts |= set(f.change_points())
         return sorted(pts)
 
+    def participant_tree(self, names: Sequence[str]):
+        """Participant-pruned domain tree as nested lists of node names
+        (a leaf group is a flat name list, in caller order) — the same
+        pruning :meth:`allreduce_time` prices: empty domains drop,
+        single-child levels collapse.  Execution backends map this onto
+        nested process groups so a real hierarchical all-reduce runs
+        where the tree says it should."""
+        doms = {id(self._leaf(nm)) for nm in names}
+
+        def build(dom: FabricDomain):
+            if not dom.children:
+                if id(dom) not in doms:
+                    return None
+                return [nm for nm in names if self._leaf_of[nm] is dom]
+            kids = [k for k in (build(c) for c in dom.children)
+                    if k is not None]
+            if not kids:
+                return None
+            if len(kids) == 1:
+                return kids[0]
+            return kids
+
+        return build(self.tree)
+
     # ---------------------------------------------------------- pricing
     def allreduce_time(self, payload_bytes: float,
                        nodes: Sequence[NodeProfile], *,

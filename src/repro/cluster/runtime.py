@@ -59,6 +59,7 @@ from repro.core.adloco import History, RoundOutput, TrainerRound
 from repro.core.comms import TimedCommsMeter, param_bytes
 from repro.core.mit import (TrainerPoolState, check_merge, consolidate,
                             do_merge)
+from repro.cluster.backend import CollectiveBackend, SimBackend
 from repro.cluster.network import NetworkModel
 from repro.cluster.node import NodeProfile, make_heterogeneous_profiles
 
@@ -104,6 +105,10 @@ class ClusterReport:
     sim_time: float = 0.0           # simulated seconds to drain the run
     compute_time: float = 0.0       # sum of per-worker busy seconds
     comm_time: float = 0.0          # sum of collective durations
+    # measured wire seconds when an execution backend ran the
+    # collectives for real (0.0 under the sim backend); deliberately
+    # not part of summary() so golden digests stay backend-agnostic
+    real_comm_time: float = 0.0
     num_syncs: int = 0
     rounds: Dict[int, int] = field(default_factory=dict)   # tid -> rounds
     applied_events: List[dict] = field(default_factory=list)
@@ -136,13 +141,13 @@ class _TrainerRT:
 class _Sim:
     def __init__(self, loss_fn: Callable, acfg: AdLoCoConfig, *,
                  policy: str, profiles: List[NodeProfile],
-                 network: NetworkModel, eval_fn: Optional[Callable],
+                 backend: CollectiveBackend, eval_fn: Optional[Callable],
                  fixed_batch: Optional[int], verbose: bool):
         self.rnd = TrainerRound(loss_fn, acfg)
         self.acfg = acfg
         self.policy = policy
         self.profiles = profiles
-        self.network = network
+        self.backend = backend
         self.eval_fn = eval_fn
         self.fixed_batch = fixed_batch
         self.verbose = verbose
@@ -175,8 +180,12 @@ class _Sim:
         self.maybe_merge(ri, now, caller=rt)
         if not rt.alive or rt.round >= rt.target:
             return
-        out = self.rnd.inner(rt.tr, fixed_batch=self.fixed_batch,
-                             worker_starts=rt.worker_params)
+        out = self.rnd.inner(
+            rt.tr, fixed_batch=self.fixed_batch,
+            worker_starts=rt.worker_params,
+            workers=self.backend.local_workers(len(rt.tr.inner_opt_states)))
+        # distributed backends: every process logs the same global loss
+        out.mean_loss = self.backend.mean_scalar(out.mean_loss)
         dts = [node.compute_time(out.flops_per_worker, out.bytes_per_worker,
                                  now)
                for node in rt.nodes[:len(out.worker_params)]]
@@ -193,7 +202,7 @@ class _Sim:
         # top bottleneck -> all-gathers back up.
         snapshot = list(rt.worker_params)
         payload = param_bytes(rt.tr.params)
-        dur = self.network.allreduce_time(payload, rt.nodes, now=now)
+        dur = self.backend.allreduce_time(payload, rt.nodes, now=now)
         self.pool.comms.record_timed(
             "outer", participants=len(rt.tr.inner_opt_states),
             payload_bytes=payload, step=rt.round, duration=dur)
@@ -225,7 +234,7 @@ class _Sim:
             if ev["cur_total"] > 0.0:
                 done = min(1.0, done + (now - ev["t_last"])
                            / ev["cur_total"])
-            new_total = self.network.allreduce_time(
+            new_total = self.backend.allreduce_time(
                 ev["payload_bytes"], rt.nodes, now=now)
             new_end = now + (1.0 - done) * new_total
             ev.update(frac=done, t_last=now, cur_total=new_total)
@@ -246,7 +255,7 @@ class _Sim:
             if ev["cur_total"] > 0.0:
                 done = min(1.0, done + (now - ev["t_last"])
                            / ev["cur_total"])
-            new_total = self.network.point_to_point_time(
+            new_total = self.backend.point_to_point_time(
                 ev["payload_bytes"], ev["src"], ev["dst"], now=now)
             new_end = now + (1.0 - done) * new_total
             ev.update(frac=done, t_last=now, cur_total=new_total)
@@ -295,6 +304,7 @@ class _Sim:
         if rt.pending is not None:        # delayed outer arrived mid-round
             x_new, snap = rt.pending["x_new"], rt.pending["snapshot"]
             rt.worker_params = [
+                None if wp is None else
                 jax.tree.map(lambda xn, w, s: xn + (w - s), x_new, wp, sm)
                 for wp, sm in zip(rt.worker_params, snap)]
             rt.pending = None
@@ -320,7 +330,12 @@ class _Sim:
         self.report.sim_time = max(self.report.sim_time, now)
         rt.inflight = False
         rt.comm_ev = None
-        self.rnd.outer(rt.tr, ev["snapshot"], x_prev=ev["x_prev"])
+        self.rnd.outer(rt.tr, ev["snapshot"], x_prev=ev["x_prev"],
+                       reduce=self.backend.outer_reduce)
+        measured = self.backend.pop_measured()
+        if measured is not None:
+            self.report.real_comm_time += measured
+            self.pool.comms.add_real_time(ev["log"], measured)
         self.record(rt, now, ev["round"], ev["loss"], ev["mode"])
 
         if self.policy == "sync":
@@ -336,6 +351,7 @@ class _Sim:
             if rt.pending is not None and rt.worker_params is not None:
                 x_new, snap = rt.pending["x_new"], rt.pending["snapshot"]
                 rt.worker_params = [
+                    None if wp is None else
                     jax.tree.map(lambda xn, w, s: xn + (w - s),
                                  x_new, wp, sm)
                     for wp, sm in zip(rt.worker_params, snap)]
@@ -397,11 +413,7 @@ class _Sim:
             self.do_join(now)
             return
         if ev.kind == "fabric":
-            if not hasattr(self.network, "add_fabric_window"):
-                raise ValueError(
-                    f"network model {type(self.network).__name__} does not "
-                    f"support fabric events")
-            self.network.add_fabric_window(
+            self.backend.add_fabric_window(
                 now, ev.duration, bw_scale=ev.bw_scale,
                 extra_latency=ev.extra_latency, scope=ev.scope)
             self.report.applied_events.append(
@@ -469,7 +481,7 @@ class _Sim:
         # xfer, tracked in flight so fabric window edges re-price it
         # (fraction done credited) exactly like a collective
         payload = param_bytes(tr.params)
-        xfer = self.network.point_to_point_time(
+        xfer = self.backend.point_to_point_time(
             payload, src.nodes[0], nodes[0], now=now)
         log = {"time": now, "kind": "join", "tid": tr.tid,
                "cloned_from": src.tr.tid, "xfer_s": xfer}
@@ -496,6 +508,7 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
                 policy: str = "sync",
                 profiles: Optional[List[NodeProfile]] = None,
                 network: Optional[NetworkModel] = None,
+                backend: Optional[CollectiveBackend] = None,
                 num_outer_steps: Optional[int] = None,
                 eval_fn: Optional[Callable] = None,
                 fixed_batch: Optional[int] = None,
@@ -508,7 +521,14 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
     beyond k*M likewise.  ``network`` is a flat :class:`NetworkModel`
     (default) or an n-level :class:`~repro.cluster.network.Topology`
     (tree of fabric domains) — the choice changes the simulated clock,
-    never the numerics.
+    never the numerics.  ``backend`` picks *how* collectives execute
+    (see ``repro.cluster.backend``): the default
+    :class:`~repro.cluster.backend.SimBackend` wraps ``network`` and
+    prices them analytically; a
+    :class:`~repro.cluster.backend.JaxProcessBackend` (one process per
+    worker, launched via ``repro.cluster.launch_mp``) runs them as real
+    ``jax.lax`` collectives and carries its own pricing network —
+    passing both ``backend=`` and ``network=`` is an error.
     ``scenario`` is a sequence of :class:`ClusterEvent`\\ s or the name
     of a registered scenario (see ``repro.cluster.scenarios``).
     Returns (TrainerPoolState, History, ClusterReport) — the History
@@ -527,16 +547,22 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
     if len(profiles) < k * M:
         raise ValueError(f"need >= {k * M} node profiles, got "
                          f"{len(profiles)}")
+    if backend is not None and network is not None:
+        raise ValueError("pass the pricing network inside the backend, "
+                         "not both backend= and network=")
+    if backend is None:
+        backend = SimBackend(network)
     # the sim mutates node and fabric state (jitter RNG draws, scenario
     # slowdowns, congestion windows): work on copies so caller-owned
     # profiles/networks stay reusable and repeated runs are independent
-    # and reproducible
+    # and reproducible (``for_run`` copies the backend's pricing state)
     profiles = [copy.deepcopy(p) for p in profiles]
-    network = (copy.deepcopy(network) if network is not None
-               else NetworkModel())
+    backend = backend.for_run()
+    backend.bind(profiles)
+    backend.validate(acfg, policy=policy, k=k, M=M, scenario=scenario)
 
     sim = _Sim(loss_fn, acfg, policy=policy, profiles=list(profiles),
-               network=network, eval_fn=eval_fn, fixed_batch=fixed_batch,
+               backend=backend, eval_fn=eval_fn, fixed_batch=fixed_batch,
                verbose=verbose)
     sim.pool = sim.rnd.init_pool(init_params_list, streams[:k * M])
     sim.pool.comms = TimedCommsMeter()
@@ -555,9 +581,8 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
     # windows pre-installed on the caller's fabric schedules must also
     # re-price in-flight collectives at their edges (scenario-delivered
     # windows handle this when the fabric event is applied)
-    if hasattr(network, "fabric_change_points"):
-        for t in network.fabric_change_points():
-            sim.push(t, "reprice", {})
+    for t in backend.fabric_change_points():
+        sim.push(t, "reprice", {})
     for rt in sim.rts.values():
         sim.start_round(rt, 0.0)
 

@@ -147,19 +147,27 @@ class TrainerRound:
     # --------------------------------------------------------- inner
     def inner(self, tr: TrainerState, *,
               fixed_batch: Optional[int] = None,
-              worker_starts: Optional[List[Any]] = None) -> RoundOutput:
+              worker_starts: Optional[List[Any]] = None,
+              workers: Optional[List[int]] = None) -> RoundOutput:
         """Compute phase of one round.  Mutates ``tr.inner_opt_states``
         and (adaptive) ``tr.requested_batch``; never touches
-        ``tr.params``."""
+        ``tr.params``.  ``workers`` restricts which of the M workers this
+        process computes (distributed execution backends own one worker
+        per process); the returned ``worker_params`` list keeps length M
+        with ``None`` at the slots other processes own, and adaptive
+        batch statistics come from the local workers only — which is why
+        the distributed backend requires ``adaptive=False``."""
         acfg = self.acfg
         M = len(tr.inner_opt_states)
         H = acfg.num_inner_steps
+        idxs = list(range(M)) if workers is None else list(workers)
         plan = self.plan_for(tr, fixed_batch)
         step_fn = self.cache.get(plan)
 
         x_start = tr.params
-        worker_params, worker_grads, last_losses = [], [], []
-        for m in range(M):
+        worker_params: List[Any] = [None] * M
+        worker_grads, last_losses = [], []
+        for m in idxs:
             wp = worker_starts[m] if worker_starts is not None else x_start
             opt_m = tr.inner_opt_states[m]
             stream = tr.streams[m % len(tr.streams)]
@@ -167,14 +175,14 @@ class TrainerRound:
                 batch = stream.next_batch(plan.effective_batch)
                 batch = reshape_for_plan(batch, plan)
                 wp, opt_m, loss, grads = step_fn(wp, opt_m, batch)
-            worker_params.append(wp)
+            worker_params[m] = wp
             worker_grads.append(grads)
             tr.inner_opt_states[m] = opt_m
             last_losses.append(float(loss))
 
         # ---- requested batch for the next round (Alg 3 line 31) ------
         if acfg.adaptive:
-            if acfg.stats_estimator == "microbatch" and M >= 2:
+            if acfg.stats_estimator == "microbatch" and len(idxs) >= 2:
                 # free distributed estimator: the M workers' last
                 # microbatch-mean grads are already materialized;
                 # Var over workers * m estimates sigma^2 with zero
@@ -195,7 +203,7 @@ class TrainerRound:
                                      plan.effective_batch))
                 probe = tr.streams[0].next_batch(probe_b)
                 st = batching.per_sample_stats(
-                    self.loss_fn, worker_params[0], probe)
+                    self.loss_fn, worker_params[idxs[0]], probe)
             tr.requested_batch = batching.requested_batch(
                 st, acfg, tr.requested_batch)
 
@@ -211,12 +219,21 @@ class TrainerRound:
     # --------------------------------------------------------- outer
     def outer(self, tr: TrainerState, worker_params: List[Any], *,
               x_prev: Optional[Any] = None,
-              comms: Optional[CommsMeter] = None, step: int = 0) -> None:
+              comms: Optional[CommsMeter] = None, step: int = 0,
+              reduce: Optional[Callable] = None) -> None:
         """Apply the outer (pseudo-gradient) step: Alg 3 lines 40–44.
         ``x_prev`` defaults to the trainer's current synced params; the
         async cluster policy passes the anchor captured at launch time
-        (delayed application)."""
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *worker_params)
+        (delayed application).  ``reduce`` maps the per-worker params
+        list to the worker-stacked pytree ``make_outer_step`` averages —
+        the default is the in-process ``jnp.stack``; execution backends
+        substitute a real cross-process collective that returns the
+        already-reduced (1, ...) mean."""
+        if reduce is None:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *worker_params)
+        else:
+            stacked = reduce(worker_params)
         tr.params, tr.outer_opt_state = self.outer_step(
             x_prev if x_prev is not None else tr.params,
             stacked, tr.outer_opt_state)

@@ -224,9 +224,16 @@ def hierarchical_allreduce_time(payload_bytes: float,
 @dataclass
 class TimedCommsMeter(CommsMeter):
     """CommsMeter that also accounts simulated wall-clock spent in each
-    collective (the quantity async outer syncs hide behind compute)."""
+    collective (the quantity async outer syncs hide behind compute).
+
+    ``total_real_time`` separately accumulates *measured* seconds when
+    an execution backend ran the collective for real (``repro.cluster.
+    backend.JaxProcessBackend``); simulated and measured time live side
+    by side in the log so model error is inspectable per event.
+    """
 
     total_time: float = 0.0
+    total_real_time: float = 0.0
 
     def record_timed(self, kind: str, participants: int, payload_bytes: int,
                      step: int, duration: float) -> float:
@@ -234,3 +241,9 @@ class TimedCommsMeter(CommsMeter):
         self.log[-1]["time_s"] = duration
         self.total_time += duration
         return duration
+
+    def add_real_time(self, entry: dict, seconds: float) -> None:
+        """Attach measured wire seconds to a previously recorded event
+        (the runtime learns them only after the backend executes)."""
+        entry["real_s"] = entry.get("real_s", 0.0) + seconds
+        self.total_real_time += seconds

@@ -7,3 +7,12 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-goldens", action="store_true", default=False,
+        help="rewrite stored golden-trace digests (tests/goldens/) with "
+             "the values the current code produces, instead of failing "
+             "on drift; commit the resulting diff as the reviewable "
+             "record of the behavior change")

@@ -1,0 +1,216 @@
+"""Execution-backend tests: the SimBackend refactor must be invisible
+(bit-identical to the pre-backend runtime) and the JaxProcessBackend
+must reproduce the simulator's numerics over *real* multi-process
+``jax.distributed`` collectives — the sim/real parity contract CI's
+``multiprocess-smoke`` lane enforces.
+
+The two-process tests spawn real OS processes (gloo CPU collectives)
+via ``repro.cluster.launch_mp.run_mp``; everything else runs in-process
+(a single-process JaxProcessBackend degenerates every collective to the
+identity, which is exactly what makes it comparable bit-for-bit).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import AdLoCoConfig
+from repro.core import train_adloco
+from repro.cluster import (SimBackend, JaxProcessBackend, Topology,
+                           interleave_pods, make_pod_profiles,
+                           make_rack_profiles, run_cluster)
+from repro.cluster import launch_mp
+from repro.cluster.launch_mp import run_mp, run_sim
+
+from tests.test_adloco_integration import QuadStream, _quad_setup, quad_loss
+
+TOY = dict(flops=1e6, hbm_bw=1e9, link_bw=2e5, link_latency=2e-3)
+
+ACFG = AdLoCoConfig(num_outer_steps=8, num_inner_steps=5, lr_inner=0.05,
+                    lr_outer=0.7, outer_momentum=0.5, nodes_per_gpu=2,
+                    num_init_trainers=3, initial_batch_size=2,
+                    merge_frequency=3, eta=0.8, max_batch=16,
+                    inner_optimizer="sgd", stats_probe_size=32,
+                    enable_merge=False, adaptive=False)
+
+#: parity tolerance for the real backend: the hierarchical pmean chain
+#: may re-associate the mean, so "float tolerance", not bitwise — in
+#: practice the 2-process runs come out bit-identical
+PARITY_ATOL = 1e-6
+
+
+def _pod_cluster():
+    profiles = make_pod_profiles([5, 5], ratio=2.0, **TOY)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3)
+    return interleave_pods(profiles), topo
+
+
+# ------------------------------------------------- SimBackend identity
+
+def test_explicit_sim_backend_is_bit_identical_to_network_path():
+    """run_cluster(backend=SimBackend(topo)) must reproduce
+    run_cluster(network=topo) exactly — same params, same report — on
+    an elastic scenario run that exercises joins, leaves, fabric
+    windows and in-flight re-pricing."""
+    def go(use_backend):
+        interleaved, topo = _pod_cluster()
+        prob, inits, streams = _quad_setup(k=3, M=2)
+        streams = streams + [QuadStream(prob, 100 + i) for i in range(4)]
+        kw = ({"backend": SimBackend(topo)} if use_backend
+              else {"network": topo})
+        return run_cluster(quad_loss, inits, streams, ACFG,
+                           policy="elastic", profiles=interleaved,
+                           scenario="spot_churn", fixed_batch=4, **kw)
+
+    pool_a, _, rep_a = go(False)
+    pool_b, _, rep_b = go(True)
+    assert rep_a.summary() == rep_b.summary()
+    assert rep_a.applied_events == rep_b.applied_events
+    np.testing.assert_allclose(
+        np.asarray(pool_a.global_params["x"]),
+        np.asarray(pool_b.global_params["x"]), rtol=0, atol=0)
+    # the sim backend never claims measured wire time
+    assert rep_b.real_comm_time == 0.0
+
+
+def test_backend_and_network_are_mutually_exclusive():
+    _, inits, streams = _quad_setup()
+    with pytest.raises(ValueError, match="not both"):
+        run_cluster(quad_loss, inits, streams, ACFG,
+                    network=Topology(pods=[["a"], ["b"]], inter_bw=1e5),
+                    backend=SimBackend())
+
+
+def test_sim_backend_rejects_partial_worker_sets():
+    with pytest.raises(ValueError, match="partial worker set"):
+        SimBackend().outer_reduce([{"x": np.ones(2)}, None])
+
+
+# ------------------------------------------- participant-tree mapping
+
+def test_participant_tree_prunes_and_collapses():
+    profiles = make_rack_profiles([[2, 2], [2, 2]], **TOY)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5, pod_bw=1.5e5)
+    names = [p.name for p in profiles]
+    # full cluster: 2 pods x 2 racks x 2 nodes, fully nested
+    assert topo.participant_tree(names) == [
+        [["p0r0n0", "p0r0n1"], ["p0r1n0", "p0r1n1"]],
+        [["p1r0n0", "p1r0n1"], ["p1r1n0", "p1r1n1"]]]
+    # one rack: single-child levels collapse to a flat leaf group
+    assert topo.participant_tree(["p0r0n0", "p0r0n1"]) == \
+        ["p0r0n0", "p0r0n1"]
+    # one node per pod: each pod collapses to its single participating
+    # rack's leaf group; the cross-pod level survives
+    assert topo.participant_tree(["p0r0n0", "p1r0n1"]) == \
+        [["p0r0n0"], ["p1r0n1"]]
+    # caller order is preserved inside leaf groups (worker <-> process
+    # identification depends on it)
+    assert topo.participant_tree(["p0r0n1", "p0r0n0"]) == \
+        ["p0r0n1", "p0r0n0"]
+
+
+# -------------------------------------- JaxProcessBackend, in-process
+
+def test_jax_backend_single_process_matches_sim_bitwise():
+    """With one process the real backend's collectives degenerate to
+    the identity: the run must match the SimBackend bit-for-bit while
+    still exercising the full mesh/shard_map execution path."""
+    acfg, inits, streams, profiles, network = launch_mp.fixture(
+        1, rounds=3)
+    pool, hist, rep = run_cluster(
+        launch_mp.quad_loss, inits, streams, acfg, policy="sync",
+        profiles=profiles, backend=JaxProcessBackend(network),
+        fixed_batch=4)
+    ref = run_sim(1, rounds=3)
+    np.testing.assert_allclose(
+        np.asarray(pool.global_params["x"], np.float64),
+        np.asarray(ref["x"]), rtol=0, atol=0)
+    assert rep.sim_time == ref["sim_time"]
+    assert rep.num_syncs == ref["num_syncs"]
+    # measured wire time is recorded per event and in aggregate
+    assert rep.real_comm_time > 0.0
+    outer = [e for e in pool.comms.log if e["kind"] == "outer"]
+    assert outer and all("real_s" in e for e in outer)
+    assert pool.comms.total_real_time == pytest.approx(rep.real_comm_time)
+
+
+def test_jax_backend_validates_unsupported_configs():
+    from repro.cluster.runtime import ClusterEvent
+
+    from repro.cluster import make_heterogeneous_profiles
+
+    acfg, inits, streams, profiles, network = launch_mp.fixture(
+        1, rounds=2)
+    many = make_heterogeneous_profiles(4, **TOY)
+
+    def go(acfg=acfg, inits=inits, streams=streams, profiles=profiles,
+           **kw):
+        return run_cluster(launch_mp.quad_loss, inits, streams, acfg,
+                           profiles=profiles,
+                           backend=JaxProcessBackend(network),
+                           fixed_batch=4, **kw)
+
+    with pytest.raises(ValueError, match="sync/async"):
+        go(policy="elastic")
+    with pytest.raises(ValueError, match="adaptive"):
+        go(acfg=dataclasses.replace(acfg, adaptive=True))
+    with pytest.raises(ValueError, match="enable_merge"):
+        go(acfg=dataclasses.replace(acfg, enable_merge=True))
+    with pytest.raises(ValueError, match="one worker per process"):
+        go(acfg=dataclasses.replace(acfg, nodes_per_gpu=2),
+           streams=streams * 2, profiles=many)
+    with pytest.raises(ValueError, match="k=2"):
+        go(inits=inits * 2, streams=streams * 2, profiles=many,
+           acfg=dataclasses.replace(acfg, num_init_trainers=2))
+    with pytest.raises(ValueError, match="elastic in-process pool"):
+        go(scenario=[ClusterEvent(time=0.0, kind="join")])
+
+
+# ------------------------------------- real 2-process differential run
+
+@pytest.mark.mp
+def test_two_process_sync_run_matches_sim_and_host_loop():
+    """The headline differential guarantee: a 2-process
+    JaxProcessBackend sync run — real ``jax.distributed`` collectives —
+    must land on the same final parameters as the SimBackend event loop
+    AND the legacy ``train_adloco`` host loop, to float tolerance."""
+    res = run_mp(2, rounds=6, policy="sync")
+    assert res["num_syncs"] == 6 and res["real_comm_time"] > 0.0
+
+    ref = run_sim(2, rounds=6, policy="sync")
+    np.testing.assert_allclose(np.asarray(res["x"]), np.asarray(ref["x"]),
+                               rtol=0, atol=PARITY_ATOL)
+    assert res["sim_time"] == ref["sim_time"]
+
+    acfg, inits, streams, _, _ = launch_mp.fixture(2, rounds=6)
+    pool, _ = train_adloco(launch_mp.quad_loss, inits, streams, acfg,
+                           fixed_batch=4)
+    np.testing.assert_allclose(
+        np.asarray(res["x"]),
+        np.asarray(pool.global_params["x"], np.float64),
+        rtol=0, atol=PARITY_ATOL)
+
+
+@pytest.mark.mp
+def test_two_process_async_run_matches_sim():
+    """The async policy's delayed-apply/rebase schedule must survive
+    real collectives unchanged: same event order, same numerics."""
+    res = run_mp(2, rounds=5, policy="async")
+    ref = run_sim(2, rounds=5, policy="async")
+    np.testing.assert_allclose(np.asarray(res["x"]), np.asarray(ref["x"]),
+                               rtol=0, atol=PARITY_ATOL)
+    assert res["sim_time"] == ref["sim_time"]
+    assert res["num_syncs"] == ref["num_syncs"]
+
+
+@pytest.mark.mp
+def test_two_process_hierarchical_groups_match_sim():
+    """2-pod Topology: the FabricDomain tree maps onto nested mesh axes
+    (one process per pod) and the grouped-collective reduction must
+    still agree with the simulator."""
+    res = run_mp(2, rounds=4, policy="sync", pods=True)
+    ref = run_sim(2, rounds=4, policy="sync", pods=True)
+    np.testing.assert_allclose(np.asarray(res["x"]), np.asarray(ref["x"]),
+                               rtol=0, atol=PARITY_ATOL)
+    assert res["sim_time"] == ref["sim_time"]

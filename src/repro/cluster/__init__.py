@@ -57,13 +57,39 @@ Execution backends
     comparable across backends); the wall-clock measured inside each
     real collective lands in ``ClusterReport.real_comm_time`` and per
     event in the comms log (``real_s``).  Scope: sync/async policies,
-    one trainer, ``adaptive=False`` — merging and elastic events need
-    the in-process pool and stay simulator-only for now.
+    one trainer — merging and elastic events need the in-process pool
+    and stay simulator-only for now.
 
 ``python -m repro.cluster.launch_mp --procs 2 --rounds 1 --check`` is
 the zero-to-parity smoke: it spawns the processes, runs the canonical
 quadratic through the real backend, and asserts the final parameters
-match the simulator.
+match the simulator; add ``--adaptive`` for the batch-ramp variant
+(trajectory parity included).
+
+Distributed adaptive batching (the stats-reduction protocol)
+------------------------------------------------------------
+Adaptive batching + switch mode run end-to-end on both backends.  The
+coordination problem — per-rank batch statistics would desynchronize
+the compiled shapes — is solved by a shape-agreement protocol
+(``repro.core.adloco.BatchPlanProtocol`` over ``repro.core.batching.
+distributed_stats``): the five sufficient statistics of the batching
+tests are *additive* given the global mean gradient, so each rank's
+worker contributes its microbatch-mean gradient rows and two
+all-reduces — the gradient-sized ``[colsum, count]`` vector, then the
+five scalar moments — hand every rank bit-identical ``GradStats``.  The requested batch and the
+``ExecutionPlan`` are pure functions of those values and the shared
+config, so every rank compiles the same shapes each round without
+further coordination.  Under the ``SimBackend`` the reduction is
+in-process (bit-identical to the legacy host loop); under the
+``JaxProcessBackend`` both phases execute as real ``lax.pmean``\\ s
+over the fabric mesh (``stats_estimator="microbatch"`` required — the
+per-sample probe is rank-local and stays rejected).  The runtime
+prices every stats reduction as a collective over the trainer's nodes
+(``ClusterReport.num_stats_syncs``; duration inside ``comm_time``),
+re-priced at fabric window edges like any in-flight collective, and
+batch growth feeds the per-node roofline compute — so sync, async and
+elastic all experience the ramp on the clock, not just in the
+numerics.
 
 Network models
 --------------
@@ -111,9 +137,12 @@ that couple node dynamics with fabric windows:
 joining pods degrades, together), ``diurnal_congestion`` (piecewise-
 constant cosine bandwidth schedule), ``rack_flap`` (one named rack
 domain's level-0 fabric oscillates) and ``straggler_cascade``
-(staggered node slowdowns inside an open congestion window).  See the
-generator docstrings for knob semantics; register new ones with
-``scenarios.register_scenario``.
+(staggered node slowdowns inside an open congestion window).  The
+adaptive arms ``adaptive_ramp`` (clean fabric; the ramp lives in the
+config) and ``congested_adaptive`` (a deep congestion window colliding
+with the middle of the batch ramp) are meant to run with
+``acfg.adaptive=True``.  See the generator docstrings for knob
+semantics; register new ones with ``scenarios.register_scenario``.
 
 Which sync policy should I use?
 -------------------------------

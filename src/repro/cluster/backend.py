@@ -32,11 +32,20 @@ drives either
 Lockstep contract (distributed backends): every process must pop the
 same events in the same order, so collectives launch identically
 everywhere.  That holds because pricing is pure float arithmetic on
-state every process replicates (profiles, network, scenario).  It is
-also why :meth:`JaxProcessBackend.validate` rejects anything that would
-let processes diverge: adaptive batching (per-process batch stats would
-change compiled shapes), merging/elastic events (pool mutations keyed on
-in-process object identity), and multi-trainer pools.
+state every process replicates (profiles, network, scenario).
+Adaptive batching joins the contract through the batch-stats all-reduce
+(:meth:`CollectiveBackend.stats_reducer`): each rank contributes its
+worker's gradient rows to the exact two-phase composition of
+``repro.core.batching.distributed_stats`` — executed here as real
+``lax.pmean``\\ s over the fabric mesh — so every rank derives the
+identical requested batch and compiled shapes from the identical
+reduced statistics (``repro.core.adloco.BatchPlanProtocol``).
+:meth:`JaxProcessBackend.validate` still rejects what would let
+processes diverge: the rank-local per-sample probe estimator (its
+statistics live on one rank's params; use the composable
+``stats_estimator="microbatch"``), merging/elastic events (pool
+mutations keyed on in-process object identity), and multi-trainer
+pools.
 """
 from __future__ import annotations
 
@@ -114,6 +123,13 @@ class CollectiveBackend:
         logging); identity on single-process backends."""
         return value
 
+    def stats_reducer(self):
+        """SUM all-reduce of a small 1-D f32 vector over every
+        process, for the adaptive batch-stats composition — or None
+        when all workers live in this process (the in-process
+        estimators already see every shard)."""
+        return None
+
     def broadcast_params(self, params: Any) -> Any:
         """Coordinator's params on every process (init sync / joins)."""
         return params
@@ -121,6 +137,13 @@ class CollectiveBackend:
     def pop_measured(self) -> Optional[float]:
         """Wall-clock seconds the last ``outer_reduce`` actually spent
         on the wire, or None for backends that only price."""
+        return None
+
+    def pop_stats_measured(self) -> Optional[float]:
+        """Wall-clock seconds the last stats reduction spent on the
+        wire, or None for backends that only price.  A separate slot
+        from :meth:`pop_measured`: under async policies a stats
+        reduction and an outer collective can be in flight together."""
         return None
 
 
@@ -201,6 +224,7 @@ class JaxProcessBackend(CollectiveBackend):
         self.num_processes = jax.process_count()
         self.rank = jax.process_index()
         self._last_measured: Optional[float] = None
+        self._last_stats_measured: Optional[float] = None
         self._profiles: Optional[List[NodeProfile]] = None
         self._mesh = None
         self._axes: Optional[tuple] = None
@@ -227,15 +251,17 @@ class JaxProcessBackend(CollectiveBackend):
             raise ValueError(
                 f"JaxProcessBackend runs one trainer across its "
                 f"processes; got k={k} trainers")
+        if acfg.adaptive and P > 1 and acfg.stats_estimator != "microbatch":
+            raise ValueError(
+                "distributed adaptive batching composes each rank's "
+                "microbatch-mean gradients through the stats all-reduce; "
+                "the per-sample probe estimator is rank-local and would "
+                "desynchronize the batch decision — run with "
+                "stats_estimator='microbatch'")
         if M != P:
             raise ValueError(
                 f"one worker per process: nodes_per_gpu={M} but "
                 f"{P} processes are initialized")
-        if acfg.adaptive:
-            raise ValueError(
-                "adaptive batching is per-process under the distributed "
-                "backend and would desynchronize compiled shapes across "
-                "ranks; run with adaptive=False (+ fixed_batch)")
         if acfg.enable_merge:
             raise ValueError("merging requires the in-process pool; "
                              "run with enable_merge=False")
@@ -371,6 +397,44 @@ class JaxProcessBackend(CollectiveBackend):
         got = multihost_utils.process_allgather(
             jnp.asarray(value, jnp.float32))
         return float(jnp.mean(got))
+
+    def stats_reducer(self):
+        """Cross-process SUM of a small f32 vector, executed as the
+        same per-fabric-level ``lax.pmean`` chain as the outer
+        reduction (scaled back to a sum) — the batch-stats phases ride
+        the mesh the pricing ``Topology`` defines.  None on a single
+        process: the in-process estimator already sees every worker,
+        and must stay bit-identical to the SimBackend."""
+        if self.num_processes == 1:
+            return None
+
+        def reduce_sum(vec):
+            if self._mesh is None:
+                self._build_mesh()
+            if self._reduce_jit is None:
+                self._reduce_jit = self._reducer()
+            tree = jnp.asarray(vec, jnp.float32)[None]
+            sig = (tree.shape, str(tree.dtype), "stats")
+            if sig not in self._warm:
+                # compile outside the measured window (lockstep on
+                # every rank, same as the outer warm-up)
+                self._execute(tree)
+                self._warm.add(sig)
+            t0 = time.perf_counter()
+            host = self._execute(tree)
+            dt = time.perf_counter() - t0
+            self._last_stats_measured = (
+                (self._last_stats_measured or 0.0) + dt)
+            # the mesh reduction is a mean over the P workers; the
+            # composition protocol wants elementwise sums
+            return host[0] * jnp.float32(self.num_processes)
+
+        return reduce_sum
+
+    def pop_stats_measured(self):
+        m = self._last_stats_measured
+        self._last_stats_measured = None
+        return m
 
     def broadcast_params(self, params):
         if self.num_processes == 1:

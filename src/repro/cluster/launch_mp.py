@@ -28,10 +28,21 @@ what makes the sim/real differential guarantee checkable:
 parameters match to float tolerance — the contract
 ``tests/test_backend.py`` pins in CI.
 
-Scope: sync/async policies, one trainer, ``adaptive=False`` (per-process
-batch statistics would desynchronize compiled shapes across ranks — see
-``JaxProcessBackend.validate``).  Elastic pools and merging stay
-simulator-only for now.
+``--adaptive`` switches the fixture to adaptive batching + switch mode
+(``stats_estimator="microbatch"``): each rank contributes its worker's
+microbatch-mean gradient to the batch-stats all-reduce (real
+``lax.pmean`` phases over the mesh), every rank derives the identical
+requested-batch/plan sequence (divergence is a hard failure, checked by
+allgather), and ``--check`` pins the whole trajectory — params, batch
+sizes, modes — against the SimBackend reference::
+
+    PYTHONPATH=src python -m repro.cluster.launch_mp \\
+        --procs 2 --rounds 6 --adaptive --check
+
+Scope: sync/async policies, one trainer.  The per-sample probe
+estimator stays rejected under multi-process adaptive runs (its probe
+is rank-local — see ``JaxProcessBackend.validate``); elastic pools and
+merging stay simulator-only for now.
 """
 from __future__ import annotations
 
@@ -74,12 +85,18 @@ def quad_loss(params, batch):
     return 0.5 * jnp.mean(jnp.square(r)), {}
 
 
-def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0):
+def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0,
+            adaptive: bool = False):
     """(acfg, inits, streams, profiles, network) for the canonical
-    single-trainer run: M = ``procs`` workers, fixed batch, merging off.
-    ``pods`` splits the workers across a 2-pod :class:`Topology` so the
+    single-trainer run: M = ``procs`` workers, merging off.  ``pods``
+    splits the workers across a 2-pod :class:`Topology` so the
     hierarchical group mapping is exercised; otherwise the fabric is the
-    flat :class:`NetworkModel`."""
+    flat :class:`NetworkModel`.  ``adaptive`` swaps the fixed batch for
+    adaptive batching + switch mode with the composable microbatch
+    estimator (``max_batch`` small enough that the ramp crosses the
+    switch boundary within a handful of rounds)."""
+    import dataclasses
+
     import jax
     from repro.configs.base import AdLoCoConfig
     from repro.data import QuadraticProblem
@@ -95,6 +112,11 @@ def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0):
                         max_batch=16, inner_optimizer="sgd",
                         stats_probe_size=32, enable_merge=False,
                         adaptive=False)
+    if adaptive:
+        acfg = dataclasses.replace(
+            acfg, adaptive=True, stats_estimator="microbatch",
+            eta=0.25, max_batch=8, switch_multiplier=2,
+            max_global_batch=64)
     prob = QuadraticProblem(dim=DIM, noise=2.0, seed=seed)
     inits = [{"x": jax.random.normal(jax.random.PRNGKey(seed), (DIM,))}]
     streams = [_QuadStream(prob, i, seed=seed) for i in range(procs)]
@@ -111,21 +133,24 @@ def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0):
 
 
 def run_sim(procs: int, *, rounds: int, policy: str = "sync",
-            pods: bool = False, seed: int = 0):
+            pods: bool = False, seed: int = 0, adaptive: bool = False):
     """The same fixture through the in-process SimBackend — the
     reference arm of the parity check."""
     from repro.cluster.backend import SimBackend
     from repro.cluster.runtime import run_cluster
 
     acfg, inits, streams, profiles, network = fixture(
-        procs, rounds=rounds, pods=pods, seed=seed)
+        procs, rounds=rounds, pods=pods, seed=seed, adaptive=adaptive)
     pool, hist, rep = run_cluster(
         quad_loss, inits, streams, acfg, policy=policy, profiles=profiles,
-        backend=SimBackend(network), fixed_batch=4)
+        backend=SimBackend(network),
+        fixed_batch=None if adaptive else 4)
     return {"x": np.asarray(pool.global_params["x"], np.float64).tolist(),
             "sim_time": rep.sim_time, "comm_time": rep.comm_time,
-            "num_syncs": rep.num_syncs, "policy": policy, "procs": procs,
-            "backend": "sim"}
+            "num_syncs": rep.num_syncs,
+            "num_stats_syncs": rep.num_stats_syncs,
+            "batches": hist.requested_batches, "modes": hist.modes,
+            "policy": policy, "procs": procs, "backend": "sim"}
 
 
 # --------------------------------------------------------------- worker
@@ -147,7 +172,8 @@ def worker_main(args) -> int:
     from repro.cluster.runtime import run_cluster
 
     acfg, inits, streams, profiles, network = fixture(
-        args.procs, rounds=args.rounds, pods=args.pods, seed=args.seed)
+        args.procs, rounds=args.rounds, pods=args.pods, seed=args.seed,
+        adaptive=args.adaptive)
     backend = JaxProcessBackend(network)
     # every rank builds the same seeded init; the broadcast makes the
     # coordinator's copy authoritative (and exercises the transfer path)
@@ -156,7 +182,8 @@ def worker_main(args) -> int:
     t0 = time.perf_counter()
     pool, hist, rep = run_cluster(
         quad_loss, inits, streams, acfg, policy=args.policy,
-        profiles=profiles, backend=backend, fixed_batch=4)
+        profiles=profiles, backend=backend,
+        fixed_batch=None if args.adaptive else 4)
     wall = time.perf_counter() - t0
 
     # the collectives must have left every rank with identical params
@@ -168,14 +195,32 @@ def worker_main(args) -> int:
               f"{gathered}", file=sys.stderr)
         return 3
 
+    # shape agreement: every rank must have derived the identical
+    # batch/plan trajectory (the BatchPlanProtocol contract — a single
+    # diverged compiled shape would already have deadlocked the
+    # collectives, but check the decision sequence explicitly)
+    import jax.numpy as jnp
+    traj = np.asarray([[b[0], 0 if m[0] == "plain" else 1]
+                       for b, m in zip(hist.requested_batches, hist.modes)],
+                      np.int32)
+    all_traj = np.asarray(multihost_utils.process_allgather(
+        jnp.asarray(traj)))
+    if all_traj.size and not (all_traj == all_traj[0]).all():
+        print(f"[rank {args.rank}] batch/plan trajectory divergence "
+              f"across ranks: {all_traj.tolist()}", file=sys.stderr)
+        return 4
+
     if args.rank == 0 and args.out:
         result = {"x": x.tolist(), "sim_time": rep.sim_time,
                   "comm_time": rep.comm_time,
                   "real_comm_time": rep.real_comm_time,
                   "num_syncs": rep.num_syncs,
+                  "num_stats_syncs": rep.num_stats_syncs,
+                  "batches": hist.requested_batches, "modes": hist.modes,
                   "rounds": dict(rep.rounds), "loss": hist.loss,
                   "policy": args.policy, "procs": args.procs,
                   "pods": bool(args.pods), "wall_s": wall,
+                  "adaptive": bool(args.adaptive),
                   "backend": "jax"}
         with open(args.out, "w") as f:
             json.dump(result, f)
@@ -192,7 +237,7 @@ def _free_port() -> int:
 
 
 def run_mp(procs: int, *, rounds: int = 2, policy: str = "sync",
-           pods: bool = False, seed: int = 0,
+           pods: bool = False, seed: int = 0, adaptive: bool = False,
            timeout: float = 600.0) -> dict:
     """Spawn ``procs`` local worker processes, run the fixture through
     the real backend, and return process 0's result dict."""
@@ -216,6 +261,8 @@ def run_mp(procs: int, *, rounds: int = 2, policy: str = "sync",
                    "--out", out.name]
             if pods:
                 cmd.append("--pods")
+            if adaptive:
+                cmd.append("--adaptive")
             children.append(subprocess.Popen(
                 cmd, env=env, stdout=subprocess.PIPE,
                 stderr=subprocess.STDOUT, text=True))
@@ -255,6 +302,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--pods", action="store_true",
                     help="2-pod Topology (hierarchical process groups) "
                          "instead of the flat NetworkModel")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="adaptive batching + switch mode (microbatch "
+                         "estimator; batch-stats all-reduce over the "
+                         "mesh) instead of the fixed batch")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="also run the SimBackend reference in-process "
@@ -271,9 +322,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         return worker_main(args)
 
     res = run_mp(args.procs, rounds=args.rounds, policy=args.policy,
-                 pods=args.pods, seed=args.seed, timeout=args.timeout)
+                 pods=args.pods, seed=args.seed, adaptive=args.adaptive,
+                 timeout=args.timeout)
     print(f"[launch_mp] procs={res['procs']} policy={res['policy']} "
-          f"pods={res['pods']} syncs={res['num_syncs']} "
+          f"pods={res['pods']} adaptive={res['adaptive']} "
+          f"syncs={res['num_syncs']} stats={res['num_stats_syncs']} "
           f"sim_time={res['sim_time']:.4f}s "
           f"real_comm={res['real_comm_time']:.4f}s "
           f"wall={res['wall_s']:.2f}s")
@@ -282,14 +335,17 @@ def main(argv: Optional[List[str]] = None) -> int:
             json.dump(res, f)
     if args.check:
         ref = run_sim(args.procs, rounds=args.rounds, policy=args.policy,
-                      pods=args.pods, seed=args.seed)
+                      pods=args.pods, seed=args.seed,
+                      adaptive=args.adaptive)
         diff = float(np.max(np.abs(np.asarray(res["x"])
                                    - np.asarray(ref["x"]))))
         same_clock = (res["sim_time"] == ref["sim_time"]
                       and res["num_syncs"] == ref["num_syncs"])
+        same_plan = (res["batches"] == ref["batches"]
+                     and res["modes"] == ref["modes"])
         print(f"[launch_mp] parity vs SimBackend: max|dx|={diff:.3e} "
-              f"same_sim_clock={same_clock}")
-        if diff > 1e-5 or not same_clock:
+              f"same_sim_clock={same_clock} same_plan_seq={same_plan}")
+        if diff > 1e-5 or not same_clock or not same_plan:
             print("[launch_mp] PARITY FAILURE", file=sys.stderr)
             return 1
     return 0

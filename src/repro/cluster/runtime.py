@@ -38,10 +38,30 @@ launch time — under a :class:`~repro.cluster.network.Topology` that
 means reduce-scatter down the fabric levels, a shard ring across the
 top bottleneck, and all-gathers back up — and every ``fabric`` scenario
 event (congestion window opening or closing) re-prices what is in
-flight: both collectives and join-time point-to-point parameter
-transfers have the fraction already transferred credited and the
-remainder re-costed under the new fabric state (model-scale joins
-spanning a window edge would otherwise be silently mispriced).
+flight: collectives (outer syncs *and* adaptive batch-stats
+reductions) and join-time point-to-point parameter transfers all have
+the fraction already transferred credited and the remainder re-costed
+under the new fabric state (model-scale joins spanning a window edge
+would otherwise be silently mispriced).
+
+Adaptive batching: when ``acfg.adaptive`` is on, every round ends with
+a batch-stats reduction — a real collective on the wire (the two-phase
+composition of ``repro.core.batching``: a ``[colsum, count]`` phase-1
+vector of one f32 per parameter — the same order as a gradient
+all-reduce — plus five scalar moments) priced through the same network
+model, counted in ``ClusterReport.num_stats_syncs`` and re-priced at
+fabric window edges like any other in-flight collective.  The next
+round's plan depends on the reduced statistics, so the stats agreement
+gates the round boundary in every policy; under ``async`` the *outer*
+all-reduce still overlaps the next round's compute (ACCO-style), but
+the stats reduction itself — about one extra gradient-sized
+all-reduce per round — stays serial.  Piggybacking its phase-1 vector
+on the outer sync (the Lau et al. trick) would remove that serial
+cost and is the known next optimization (see ROADMAP).  Batch growth
+then feeds straight back into the clock: a bigger effective batch
+means more roofline FLOPs per node per round, which is how
+sync/async/elastic trade off under a growing batch (scenarios
+``adaptive_ramp`` / ``congested_adaptive``).
 """
 from __future__ import annotations
 
@@ -110,6 +130,11 @@ class ClusterReport:
     # not part of summary() so golden digests stay backend-agnostic
     real_comm_time: float = 0.0
     num_syncs: int = 0
+    # batch-stats reductions priced on the wire (adaptive rounds only;
+    # their duration is folded into comm_time).  Not part of summary()
+    # so pre-adaptive golden digests stay byte-identical; the adaptive
+    # golden traces pin it alongside the batch/plan trajectory.
+    num_stats_syncs: int = 0
     rounds: Dict[int, int] = field(default_factory=dict)   # tid -> rounds
     applied_events: List[dict] = field(default_factory=list)
 
@@ -136,6 +161,7 @@ class _TrainerRT:
     pending: Optional[dict] = None  # arrived comm awaiting worker rebase
     last_loss: float = 0.0          # mean loss of the last completed round
     comm_ev: Optional[dict] = None  # in-flight collective (for re-pricing)
+    stats_ev: Optional[dict] = None  # in-flight stats reduction (ditto)
 
 
 class _Sim:
@@ -183,7 +209,8 @@ class _Sim:
         out = self.rnd.inner(
             rt.tr, fixed_batch=self.fixed_batch,
             worker_starts=rt.worker_params,
-            workers=self.backend.local_workers(len(rt.tr.inner_opt_states)))
+            workers=self.backend.local_workers(len(rt.tr.inner_opt_states)),
+            stats_reduce=self.backend.stats_reducer())
         # distributed backends: every process logs the same global loss
         out.mean_loss = self.backend.mean_scalar(out.mean_loss)
         dts = [node.compute_time(out.flops_per_worker, out.bytes_per_worker,
@@ -226,26 +253,27 @@ class _Sim:
         collective and join transfer with the fraction already
         transferred and re-price the remainder under the new state."""
         for rt in self.rts.values():
-            ev = rt.comm_ev
-            if (ev is None or not rt.alive or not rt.inflight
-                    or ev["gen"] != rt.gen or ev["t_end"] <= now):
-                continue
-            done = ev["frac"]
-            if ev["cur_total"] > 0.0:
-                done = min(1.0, done + (now - ev["t_last"])
-                           / ev["cur_total"])
-            new_total = self.backend.allreduce_time(
-                ev["payload_bytes"], rt.nodes, now=now)
-            new_end = now + (1.0 - done) * new_total
-            ev.update(frac=done, t_last=now, cur_total=new_total)
-            if new_end == ev["t_end"]:
-                continue            # the queued completion is still valid
-            delta = new_end - ev["t_end"]
-            self.report.comm_time += delta
-            self.pool.comms.total_time += delta
-            ev["log"]["time_s"] = ev["log"].get("time_s", 0.0) + delta
-            ev["t_end"] = new_end
-            self.push(new_end, "comm", ev)
+            for ev, kind in ((rt.comm_ev, "comm"), (rt.stats_ev, "stats")):
+                if (ev is None or not rt.alive
+                        or (kind == "comm" and not rt.inflight)
+                        or ev["gen"] != rt.gen or ev["t_end"] <= now):
+                    continue
+                done = ev["frac"]
+                if ev["cur_total"] > 0.0:
+                    done = min(1.0, done + (now - ev["t_last"])
+                               / ev["cur_total"])
+                new_total = self.backend.allreduce_time(
+                    ev["payload_bytes"], rt.nodes, now=now)
+                new_end = now + (1.0 - done) * new_total
+                ev.update(frac=done, t_last=now, cur_total=new_total)
+                if new_end == ev["t_end"]:
+                    continue        # the queued completion is still valid
+                delta = new_end - ev["t_end"]
+                self.report.comm_time += delta
+                self.pool.comms.total_time += delta
+                ev["log"]["time_s"] = ev["log"].get("time_s", 0.0) + delta
+                ev["t_end"] = new_end
+                self.push(new_end, kind, ev)
         for ev in self.xfers:
             rt = ev["rt"]
             if (not rt.alive or ev["gen"] != rt.gen
@@ -290,6 +318,20 @@ class _Sim:
                   f"k={len(self.alive_rts())}")
 
     # -------------------------------------------------------- handlers
+    def fold_pending(self, rt: _TrainerRT) -> None:
+        """Rebase the workers onto a delayed outer update that arrived
+        since the last fold (``wp <- x_new + (wp - snapshot)``) — must
+        run before anything is launched from the workers, or the next
+        pseudo-gradient diffs against the wrong anchor."""
+        if rt.pending is None or rt.worker_params is None:
+            return
+        x_new, snap = rt.pending["x_new"], rt.pending["snapshot"]
+        rt.worker_params = [
+            None if wp is None else
+            jax.tree.map(lambda xn, w, s: xn + (w - s), x_new, wp, sm)
+            for wp, sm in zip(rt.worker_params, snap)]
+        rt.pending = None
+
     def on_round_done(self, now: float, ev: dict) -> None:
         rt: _TrainerRT = ev["rt"]
         if not rt.alive or ev["gen"] != rt.gen:
@@ -301,23 +343,63 @@ class _Sim:
         self.samples_total += out.samples
         rt.worker_params = out.worker_params
         rt.last_loss = out.mean_loss
-        if rt.pending is not None:        # delayed outer arrived mid-round
-            x_new, snap = rt.pending["x_new"], rt.pending["snapshot"]
-            rt.worker_params = [
-                None if wp is None else
-                jax.tree.map(lambda xn, w, s: xn + (w - s), x_new, wp, sm)
-                for wp, sm in zip(rt.worker_params, snap)]
-            rt.pending = None
+        self.fold_pending(rt)             # delayed outer arrived mid-round
 
+        if out.stats_bytes > 0.0:
+            # adaptive round: the batch-stats reduction is a collective
+            # on the wire — the next round's plan depends on its result,
+            # so it gates the round boundary (the outer sync may still
+            # overlap under async; only the *stats* agreement is serial)
+            self.launch_stats(rt, now, out.mean_loss, out.mode,
+                              out.stats_bytes)
+            return
+        self.after_stats(rt, now, out.mean_loss, out.mode)
+
+    def launch_stats(self, rt: _TrainerRT, now: float, loss: float,
+                     mode: str, payload: float) -> None:
+        dur = self.backend.allreduce_time(payload, rt.nodes, now=now)
+        self.pool.comms.record_timed(
+            "stats", participants=len(rt.tr.inner_opt_states),
+            payload_bytes=payload, step=rt.round, duration=dur)
+        self.report.comm_time += dur
+        self.report.num_stats_syncs += 1
+        ev = {"rt": rt, "gen": rt.gen, "loss": loss, "mode": mode,
+              "payload_bytes": payload, "t_last": now, "frac": 0.0,
+              "cur_total": dur, "t_end": now + dur,
+              "log": self.pool.comms.log[-1]}
+        rt.stats_ev = ev
+        self.push(ev["t_end"], "stats", ev)
+
+    def on_stats_done(self, now: float, ev: dict) -> None:
+        rt: _TrainerRT = ev["rt"]
+        if not rt.alive or ev["gen"] != rt.gen:
+            return
+        if ev is not rt.stats_ev or now != ev["t_end"]:
+            return                   # superseded by a fabric re-pricing
+        self.report.sim_time = max(self.report.sim_time, now)
+        rt.stats_ev = None
+        measured = self.backend.pop_stats_measured()
+        if measured is not None:
+            self.report.real_comm_time += measured
+            self.pool.comms.add_real_time(ev["log"], measured)
+        self.after_stats(rt, now, ev["loss"], ev["mode"])
+
+    def after_stats(self, rt: _TrainerRT, now: float, loss: float,
+                    mode: str) -> None:
+        """Round boundary proper (after any stats agreement arrived)."""
+        # a delayed outer can land while the stats reduction is in
+        # flight (async/elastic): fold it before launching, exactly as
+        # the un-gated round boundary would have
+        self.fold_pending(rt)
         if self.policy == "sync":
             # barrier: wait for the collective before the next round
-            self.launch_sync(rt, now, out.mean_loss, out.mode)
+            self.launch_sync(rt, now, loss, mode)
             return
 
         # async / elastic: overlap — launch if the wire is free, keep
         # computing either way
         if not rt.inflight:
-            self.launch_sync(rt, now, out.mean_loss, out.mode)
+            self.launch_sync(rt, now, loss, mode)
         if rt.round < rt.target:
             self.start_round(rt, now)
 
@@ -348,14 +430,7 @@ class _Sim:
         if rt.round >= rt.target:
             # workers idle: fold the rebase now and flush any unsynced
             # progress so the final anchor includes every round
-            if rt.pending is not None and rt.worker_params is not None:
-                x_new, snap = rt.pending["x_new"], rt.pending["snapshot"]
-                rt.worker_params = [
-                    None if wp is None else
-                    jax.tree.map(lambda xn, w, s: xn + (w - s),
-                                 x_new, wp, sm)
-                    for wp, sm in zip(rt.worker_params, snap)]
-                rt.pending = None
+            self.fold_pending(rt)
             if rt.synced < rt.round:
                 self.launch_sync(rt, now, rt.last_loss, "flush")
 
@@ -592,6 +667,8 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
             sim.on_round_done(when, payload)
         elif kind == "comm":
             sim.on_comm_done(when, payload)
+        elif kind == "stats":        # batch-stats reduction arrived
+            sim.on_stats_done(when, payload)
         elif kind == "xfer":         # join transfer finished shipping
             sim.on_xfer_done(when, payload)
         elif kind == "reprice":      # a fabric window closed

@@ -70,6 +70,28 @@ slow_for, stagger, scope)``
     after another (``stagger`` apart, each ``factor``x slower for
     ``slow_for`` seconds) — the compounded worst case where the wire
     and the workers degrade together.
+
+Adaptive-aware scenarios (run with ``acfg.adaptive=True``)
+----------------------------------------------------------
+These two are the adaptive-batching arms of the sweep: the *ramp* is
+driven by the config (requested batches grow via the paper's §3.3
+tests, so every round ends in a priced batch-stats reduction and the
+per-round roofline compute grows with the batch), and the scenario
+supplies the fabric the ramp runs on.
+
+``adaptive_ramp()``
+    No events: the undisturbed fabric — the control arm, isolating the
+    cost/benefit of batch growth itself (stats collectives + growing
+    compute vs fewer rounds to target).
+``congested_adaptive(start, duration, depth, extra_latency, scope)``
+    One deep congestion window timed to collide with the batch ramp —
+    the paper's motivating trade: exactly as rounds lengthen (growing
+    batches) and outer payloads matter most, the fabric degrades, and
+    the stats reductions in flight are re-priced along with the outer
+    syncs.  The default window opens early enough that a fixed-batch
+    control arm of the same length also runs through it (both arms of
+    the bench sweep see the same weather; see ``benchmarks/
+    cluster_bench.py``).
 """
 from __future__ import annotations
 
@@ -236,7 +258,26 @@ def straggler_cascade(*, start: float = 0.01, window: float = 0.04,
     return evs
 
 
+@register_scenario("adaptive_ramp")
+def adaptive_ramp() -> List[ClusterEvent]:
+    """Clean fabric for the batch ramp (see the module docstring): the
+    adaptivity lives in the config, not the event stream."""
+    return []
+
+
+@register_scenario("congested_adaptive")
+def congested_adaptive(*, start: float = 0.015, duration: float = 0.12,
+                       depth: float = 0.1, extra_latency: float = 8e-3,
+                       scope: str = "inter") -> List[ClusterEvent]:
+    if not 0.0 < depth:
+        raise ValueError(f"depth must be positive, got {depth}")
+    return [ClusterEvent(time=start, kind="fabric", scope=scope,
+                         bw_scale=depth, extra_latency=extra_latency,
+                         duration=duration)]
+
+
 __all__ = ["SCENARIOS", "register_scenario", "list_scenarios",
            "build_scenario", "baseline", "bursty_congestion", "spot_churn",
            "pod_partition", "flash_crowd_join", "correlated_pod_failure",
-           "diurnal_congestion", "rack_flap", "straggler_cascade"]
+           "diurnal_congestion", "rack_flap", "straggler_cascade",
+           "adaptive_ramp", "congested_adaptive"]

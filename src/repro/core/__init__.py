@@ -9,12 +9,12 @@
   comms      — communication metering (Theorem 2's C(N))
 """
 from repro.core import batching, comms, diloco, local_sgd, mit, switch
-from repro.core.adloco import (History, RoundOutput, TrainerRound,
-                               train_adloco)
+from repro.core.adloco import (BatchPlanProtocol, History, RoundOutput,
+                               TrainerRound, train_adloco)
 from repro.core.local_sgd import diloco_config, train_diloco, train_local_sgd
 
 __all__ = [
     "batching", "comms", "diloco", "local_sgd", "mit", "switch",
-    "History", "RoundOutput", "TrainerRound", "train_adloco",
-    "train_diloco", "train_local_sgd", "diloco_config",
+    "BatchPlanProtocol", "History", "RoundOutput", "TrainerRound",
+    "train_adloco", "train_diloco", "train_local_sgd", "diloco_config",
 ]

@@ -70,6 +70,53 @@ class RoundOutput:
     samples_per_worker: int
     flops_per_worker: float         # estimated compute cost (6*N*samples)
     bytes_per_worker: float         # estimated HBM traffic per worker
+    # wire payload of the round's batch-stats reduction (0.0 when the
+    # round ran fixed-batch); the cluster runtime prices it as a
+    # collective over the trainer's nodes
+    stats_bytes: float = 0.0
+
+
+class BatchPlanProtocol:
+    """Shape-agreement protocol: reduced statistics -> one batch
+    decision -> one deterministic :class:`ExecutionPlan`.
+
+    Distributed adaptive batching only works if every rank compiles the
+    same shapes each round.  The protocol guarantees that by
+    construction: the sufficient statistics are reduced with a
+    deterministic collective (``repro.core.batching.distributed_stats``
+    — every rank receives bit-identical values), and both
+    :meth:`decide` and :meth:`plan_for` are pure functions of those
+    values and the shared config, so the requested batch and the
+    compiled ``(micro_batch, accum_steps)`` shape agree everywhere
+    without any further coordination.
+    """
+
+    def __init__(self, acfg: AdLoCoConfig):
+        self.acfg = acfg
+
+    # ------------------------------------------------------- reduction
+    def reduce(self, G_local, sum_reduce, *,
+               micro_size: int) -> batching.GradStats:
+        """Compose this process's gradient rows with every other
+        process's via the backend's SUM all-reduce (exact two-phase
+        composition; see ``batching.distributed_stats``)."""
+        return batching.distributed_stats(G_local, sum_reduce,
+                                          micro_size=micro_size)
+
+    def payload_bytes(self, n_params: int) -> float:
+        """Wire payload the runtime prices the stats collective at."""
+        return batching.stats_payload_bytes(n_params)
+
+    # -------------------------------------------------------- decision
+    def decide(self, st: batching.GradStats, current_b: int) -> int:
+        """The configured batch test + monotone-growth/cap policy."""
+        return batching.requested_batch(st, self.acfg, current_b)
+
+    def plan_for(self, b_req: int) -> ExecutionPlan:
+        acfg = self.acfg
+        mult = (acfg.switch_multiplier if acfg.enable_switch
+                else 10 ** 9)  # switch off => never accumulate
+        return plan_execution(b_req, acfg.max_batch, mult)
 
 
 class TrainerRound:
@@ -86,6 +133,7 @@ class TrainerRound:
     def __init__(self, loss_fn: Callable, acfg: AdLoCoConfig):
         self.loss_fn = loss_fn
         self.acfg = acfg
+        self.protocol = BatchPlanProtocol(acfg)
         self.inner_opt = optim.get_optimizer(
             acfg.inner_optimizer, acfg.lr_inner,
             **({"weight_decay": acfg.weight_decay}
@@ -134,9 +182,7 @@ class TrainerRound:
         b_req = (fixed_batch if (fixed_batch is not None
                                  and not acfg.adaptive)
                  else tr.requested_batch)
-        mult = (acfg.switch_multiplier if acfg.enable_switch
-                else 10 ** 9)  # switch off => never accumulate
-        return plan_execution(b_req, acfg.max_batch, mult)
+        return self.protocol.plan_for(b_req)
 
     def _count_params(self, params) -> int:
         if self._n_params is None:
@@ -148,15 +194,20 @@ class TrainerRound:
     def inner(self, tr: TrainerState, *,
               fixed_batch: Optional[int] = None,
               worker_starts: Optional[List[Any]] = None,
-              workers: Optional[List[int]] = None) -> RoundOutput:
+              workers: Optional[List[int]] = None,
+              stats_reduce: Optional[Callable] = None) -> RoundOutput:
         """Compute phase of one round.  Mutates ``tr.inner_opt_states``
         and (adaptive) ``tr.requested_batch``; never touches
         ``tr.params``.  ``workers`` restricts which of the M workers this
         process computes (distributed execution backends own one worker
         per process); the returned ``worker_params`` list keeps length M
-        with ``None`` at the slots other processes own, and adaptive
-        batch statistics come from the local workers only — which is why
-        the distributed backend requires ``adaptive=False``."""
+        with ``None`` at the slots other processes own.  ``stats_reduce``
+        is a cross-process SUM all-reduce of a small f32 vector (see
+        ``CollectiveBackend.stats_reducer``): when provided, adaptive
+        batch statistics run the exact two-phase composition over every
+        process's workers — each worker's microbatch-mean grad is one
+        shard — so all ranks derive the identical requested batch and
+        compiled shapes (the :class:`BatchPlanProtocol` contract)."""
         acfg = self.acfg
         M = len(tr.inner_opt_states)
         H = acfg.num_inner_steps
@@ -181,8 +232,21 @@ class TrainerRound:
             last_losses.append(float(loss))
 
         # ---- requested batch for the next round (Alg 3 line 31) ------
+        stats_bytes = 0.0
         if acfg.adaptive:
-            if acfg.stats_estimator == "microbatch" and len(idxs) >= 2:
+            n = self._count_params(x_start)
+            if stats_reduce is not None:
+                # distributed backends: each process contributes its
+                # workers' microbatch-mean grads as shards of the exact
+                # two-phase composition; every rank receives identical
+                # reduced statistics, so the decision below agrees by
+                # construction (shape-agreement protocol)
+                G_local = batching.flatten_grads(
+                    jax.tree.map(lambda *g: jnp.stack(g), *worker_grads))
+                st = self.protocol.reduce(
+                    G_local, stats_reduce,
+                    micro_size=plan.effective_batch)
+            elif acfg.stats_estimator == "microbatch" and len(idxs) >= 2:
                 # free distributed estimator: the M workers' last
                 # microbatch-mean grads are already materialized;
                 # Var over workers * m estimates sigma^2 with zero
@@ -192,7 +256,8 @@ class TrainerRound:
                 stack = jax.tree.map(lambda *g: jnp.stack(g),
                                      *worker_grads)
                 st = batching.stats_from_microbatch_grads(
-                    stack, plan.effective_batch)
+                    stack, plan.effective_batch,
+                    use_kernel=acfg.stats_use_kernel)
             else:
                 # the paper computes sigma_Bk / grad_Bk on the
                 # CURRENT batch; stats_probe_size is only a memory
@@ -203,9 +268,11 @@ class TrainerRound:
                                      plan.effective_batch))
                 probe = tr.streams[0].next_batch(probe_b)
                 st = batching.per_sample_stats(
-                    self.loss_fn, worker_params[idxs[0]], probe)
-            tr.requested_batch = batching.requested_batch(
-                st, acfg, tr.requested_batch)
+                    self.loss_fn, worker_params[idxs[0]], probe,
+                    use_kernel=acfg.stats_use_kernel)
+            tr.requested_batch = self.protocol.decide(
+                st, tr.requested_batch)
+            stats_bytes = self.protocol.payload_bytes(n)
 
         spw = plan.effective_batch * H
         n = self._count_params(x_start)
@@ -214,7 +281,8 @@ class TrainerRound:
             mean_loss=sum(last_losses) / len(last_losses),
             mode=plan.mode, samples=spw * M, samples_per_worker=spw,
             flops_per_worker=6.0 * n * spw,
-            bytes_per_worker=3.0 * param_bytes(x_start) * H)
+            bytes_per_worker=3.0 * param_bytes(x_start) * H,
+            stats_bytes=stats_bytes)
 
     # --------------------------------------------------------- outer
     def outer(self, tr: TrainerState, worker_params: List[Any], *,

@@ -153,8 +153,6 @@ def test_jax_backend_validates_unsupported_configs():
 
     with pytest.raises(ValueError, match="sync/async"):
         go(policy="elastic")
-    with pytest.raises(ValueError, match="adaptive"):
-        go(acfg=dataclasses.replace(acfg, adaptive=True))
     with pytest.raises(ValueError, match="enable_merge"):
         go(acfg=dataclasses.replace(acfg, enable_merge=True))
     with pytest.raises(ValueError, match="one worker per process"):
@@ -165,6 +163,50 @@ def test_jax_backend_validates_unsupported_configs():
            acfg=dataclasses.replace(acfg, num_init_trainers=2))
     with pytest.raises(ValueError, match="elastic in-process pool"):
         go(scenario=[ClusterEvent(time=0.0, kind="join")])
+
+
+def test_jax_backend_adaptive_validation():
+    """Adaptive batching is supported now — but only through the
+    composable microbatch estimator when the statistics actually span
+    processes (a rank-local per-sample probe would desynchronize the
+    batch decision)."""
+    acfg, _, _, _, network = launch_mp.fixture(1, rounds=2)
+    backend = JaxProcessBackend(network)
+
+    # multi-process + per-sample probe: rejected with a pointed message
+    backend.num_processes = 2
+    bad = dataclasses.replace(acfg, adaptive=True,
+                              stats_estimator="per_sample")
+    with pytest.raises(ValueError, match="microbatch"):
+        backend.validate(bad, policy="sync", k=1, M=2)
+    # multi-process + microbatch estimator: accepted
+    ok = dataclasses.replace(acfg, adaptive=True,
+                             stats_estimator="microbatch")
+    backend.validate(ok, policy="sync", k=1, M=2)
+    # single process: every worker is local, both estimators fine
+    backend.num_processes = 1
+    backend.validate(bad, policy="sync", k=1, M=1)
+
+
+def test_jax_backend_single_process_adaptive_matches_sim_bitwise():
+    """Adaptive + switch through the JaxProcessBackend on one process
+    must reproduce the SimBackend bit-for-bit: the stats reducer is
+    None (all workers local), so the in-process estimator path — and
+    therefore the whole batch/plan trajectory — is shared."""
+    acfg, inits, streams, profiles, network = launch_mp.fixture(
+        1, rounds=4, adaptive=True)
+    pool, hist, rep = run_cluster(
+        launch_mp.quad_loss, inits, streams, acfg, policy="sync",
+        profiles=profiles, backend=JaxProcessBackend(network))
+    ref = run_sim(1, rounds=4, adaptive=True)
+    np.testing.assert_allclose(
+        np.asarray(pool.global_params["x"], np.float64),
+        np.asarray(ref["x"]), rtol=0, atol=0)
+    assert rep.sim_time == ref["sim_time"]
+    assert hist.requested_batches == ref["batches"]
+    assert hist.modes == ref["modes"]
+    # every adaptive round priced a stats reduction
+    assert rep.num_stats_syncs == ref["num_stats_syncs"] > 0
 
 
 # ------------------------------------- real 2-process differential run
@@ -214,3 +256,29 @@ def test_two_process_hierarchical_groups_match_sim():
     np.testing.assert_allclose(np.asarray(res["x"]), np.asarray(ref["x"]),
                                rtol=0, atol=PARITY_ATOL)
     assert res["sim_time"] == ref["sim_time"]
+
+
+@pytest.mark.mp
+def test_two_process_adaptive_switch_run_agrees():
+    """The distributed adaptive headline: a 2-process adaptive + switch
+    run — batch stats composed by a real ``lax.pmean`` all-reduce each
+    round — must (a) keep every rank on the identical ExecutionPlan
+    sequence (the worker asserts cross-rank agreement via allgather and
+    exits nonzero on divergence), and (b) land on the SimBackend's
+    batch/plan trajectory and final params to the pinned tolerance."""
+    res = run_mp(2, rounds=6, policy="sync", adaptive=True)
+    ref = run_sim(2, rounds=6, policy="sync", adaptive=True)
+    # trajectory identity: same requested batches, same modes -> same
+    # plan_execution outputs (a pure function of batch and config)
+    assert res["batches"] == ref["batches"]
+    assert res["modes"] == ref["modes"]
+    assert res["num_stats_syncs"] == ref["num_stats_syncs"] > 0
+    # the ramp is real: batches grew and switch mode engaged
+    firsts = [b[0] for b in res["batches"]]
+    assert firsts[-1] > firsts[0]
+    assert any(m == "accum" for ms in res["modes"] for m in ms)
+    np.testing.assert_allclose(np.asarray(res["x"]), np.asarray(ref["x"]),
+                               rtol=0, atol=PARITY_ATOL)
+    # identical batch ints feed identical pure-float pricing
+    assert res["sim_time"] == ref["sim_time"]
+    assert res["real_comm_time"] > 0.0

@@ -151,3 +151,69 @@ def test_property_norm_test_monotone_in_eta(eta, seed):
     b1 = float(batching.norm_test(s, eta))
     b2 = float(batching.norm_test(s, eta / 2))
     assert b2 >= b1
+
+
+# ------------------------------------------------------------------
+# distributed composition (the stats all-reduce law) — randomized
+# properties; the deterministic fixtures (which must run even without
+# hypothesis) live in tests/test_batching_dist.py along with the
+# shared helpers
+# ------------------------------------------------------------------
+
+from tests.test_batching_dist import (_assert_stats_close,  # noqa: E402
+                                      _split_shards)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 40), st.integers(1, 96),
+       st.lists(st.integers(0, 10 ** 6), min_size=1, max_size=6),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_sharded_stats_compose_exactly(b, dim, cuts, seed):
+    """The composition law behind the distributed protocol: GradStats
+    all-reduced across k disjoint shards == stats_from_matrix on the
+    row-concatenation (to f32 tolerance), for every shard split —
+    the five sufficient statistics are additive."""
+    rng = np.random.default_rng(seed)
+    G = jnp.asarray(rng.standard_normal((b, dim)) * 3 + 0.7, jnp.float32)
+    full = batching.stats_from_matrix(G)
+    comp = batching.compose_shards(_split_shards(G, cuts))
+    _assert_stats_close(full, comp)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 24), st.integers(1, 64),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_one_row_per_shard_composes(b, dim, seed):
+    """The b=1-per-shard edge (each worker contributes exactly its
+    microbatch-mean grad — the distributed microbatch estimator): the
+    per-shard statistics are degenerate but the additive moments still
+    compose to the full-matrix GradStats."""
+    rng = np.random.default_rng(seed)
+    G = jnp.asarray(rng.standard_normal((b, dim)) * 2 - 0.5, jnp.float32)
+    full = batching.stats_from_matrix(G)
+    comp = batching.compose_shards([G[i:i + 1] for i in range(b)])
+    _assert_stats_close(full, comp)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 32), st.integers(2, 48),
+       st.lists(st.integers(0, 10 ** 6), min_size=1, max_size=4),
+       st.floats(0.2, 1.5), st.integers(0, 2 ** 31 - 1))
+def test_property_all_three_tests_agree_on_composed_stats(
+        b, dim, cuts, eta, seed):
+    """All three batch tests (norm / inner-product / augmented) must
+    request the same batch from the composed statistics as from the
+    concatenated matrix — the decision, not just the moments, is what
+    every rank must agree on."""
+    rng = np.random.default_rng(seed)
+    G = jnp.asarray(rng.standard_normal((b, dim)) * 3 + 1.0, jnp.float32)
+    full = batching.stats_from_matrix(G)
+    comp = batching.compose_shards(_split_shards(G, cuts))
+    for test in (lambda s: batching.norm_test(s, eta),
+                 lambda s: batching.inner_product_test(s, eta),
+                 lambda s: batching.augmented_test(s, eta, eta)):
+        bf, bc = float(test(full)), float(test(comp))
+        # ceil() can disagree by one count right at an integer boundary
+        assert abs(bf - bc) <= 1.0 + 1e-2 * max(bf, bc), (bf, bc)
+
+

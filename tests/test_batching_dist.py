@@ -1,0 +1,90 @@
+"""Deterministic (no-hypothesis) tests for the distributed stats
+composition protocol — kept out of test_batching.py so its module-level
+``pytest.importorskip("hypothesis")`` cannot silently skip the core
+composition-law coverage on environments without hypothesis.  The
+randomized property tests over the same law live in test_batching.py
+and ride along wherever hypothesis is installed (CI pins it)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batching
+
+
+def _split_shards(G, cuts):
+    """Split the row axis at the (sorted, deduped) cut points."""
+    edges = sorted({c % (G.shape[0] - 1) + 1 for c in cuts})
+    return jnp.split(G, edges, axis=0)
+
+
+def _assert_stats_close(a, b, rel=5e-3):
+    # per-field relative tolerance plus an absolute floor scaled to the
+    # largest statistic: the variance fields subtract near-equal f32
+    # sums (catastrophic cancellation), so a near-zero orth_var carries
+    # error proportional to Σ‖g‖², not to itself
+    scale = max(abs(float(v)) for v in a)
+    for name, x, y in zip(batching.GradStats._fields, a, b):
+        tol = rel * max(abs(float(x)), abs(float(y))) + 1e-5 * scale
+        assert abs(float(x) - float(y)) <= tol, (name, float(x), float(y))
+
+
+def test_sharded_stats_compose_to_concatenated_matrix():
+    """The composition law on fixed fixtures: uneven shards and the
+    one-row-per-shard (microbatch) edge both reproduce
+    stats_from_matrix on the row concatenation."""
+    rng = np.random.default_rng(0)
+    G = jnp.asarray(rng.standard_normal((13, 23)) * 3 + 1, jnp.float32)
+    full = batching.stats_from_matrix(G)
+    _assert_stats_close(full, batching.compose_shards(
+        [G[:4], G[4:5], G[5:]]))
+    _assert_stats_close(full, batching.compose_shards(
+        [G[i:i + 1] for i in range(G.shape[0])]))
+
+
+def test_distributed_stats_identity_reduce_is_single_shard():
+    """With the identity SUM reduce (single process) the protocol must
+    reproduce stats_from_matrix on the local shard."""
+    rng = np.random.default_rng(7)
+    G = jnp.asarray(rng.standard_normal((12, 20)), jnp.float32)
+    st_ = batching.distributed_stats(G, lambda v: v)
+    _assert_stats_close(batching.stats_from_matrix(G), st_, rel=1e-4)
+
+
+def test_distributed_stats_microbatch_rescale_matches_estimator():
+    """micro_size rescale through the protocol == the in-process
+    microbatch estimator on the stacked rows."""
+    rng = np.random.default_rng(8)
+    rows = [jnp.asarray(rng.standard_normal(24), jnp.float32)
+            for _ in range(4)]
+    stack = {"g": jnp.stack(rows)}
+    st_in = batching.stats_from_microbatch_grads(stack, micro_size=8)
+    # emulate 4 processes: each contributes one row, reduce = in-process
+    # sums over the shard list
+    shards = [r[None] for r in rows]
+    st_comp = batching.compose_shards(shards, micro_size=8)
+    _assert_stats_close(st_in, st_comp, rel=1e-4)
+
+
+def test_stats_payload_bytes_prices_both_phases():
+    """The priced payload is the phase-1 [colsum, count] vector plus
+    the five phase-2 scalars: one f32 per parameter plus six — the
+    same order as a gradient all-reduce (the runtime must not price
+    the stats agreement as free)."""
+    assert batching.stats_payload_bytes(16) == 4.0 * (16 + 6)
+    assert batching.stats_payload_bytes(0) == 24.0
+
+
+def test_batch_tests_stable_at_integer_ratios():
+    """The epsilon-guarded ceil: statistics whose test ratio lands
+    exactly on an integer must request exactly that integer, and a
+    sub-ulp perturbation (the in-process vs two-phase route noise)
+    must not flip the decision."""
+    st_ = batching.GradStats(
+        mean_norm2=jnp.float32(4.0), sigma2=jnp.float32(9.0),
+        ip_var=jnp.float32(0.0), orth_var=jnp.float32(0.0),
+        b=jnp.float32(8))
+    # eq 10 with eta=0.5: the exact ratio is 9.0
+    assert int(batching.norm_test(st_, 0.5)) == 9
+    bumped = st_._replace(sigma2=jnp.float32(np.nextafter(
+        np.float32(9.0), np.float32(10.0))))
+    assert int(batching.norm_test(bumped, 0.5)) == 9

@@ -187,3 +187,58 @@ def test_property_gradstats_matches_ref(B, D, seed):
     np.testing.assert_allclose(np.asarray(d), np.asarray(dr),
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(float(n2), float(n2r), rtol=1e-4, atol=1e-5)
+
+
+#: the shapes the distributed estimator actually feeds the kernel:
+#: B = worker/probe counts (rarely a power of two, B=1 when a single
+#: microbatch-mean row is the local shard), D = flattened param dims
+#: (never a multiple of the 512-lane tile for toy models)
+GRADSTATS_EDGE_CASES = [
+    (1, 16, jnp.float32),     # single-row shard (microbatch estimator)
+    (1, 513, jnp.float32),
+    (2, 16, jnp.float32),     # the 2-worker fixture, tiny D
+    (5, 193, jnp.float32),
+    (9, 515, jnp.float32),
+    (13, 1027, jnp.float32),
+    (3, 130, jnp.bfloat16),   # bf16 on non-pow2 both axes
+    (5, 193, jnp.bfloat16),
+    (17, 700, jnp.bfloat16),
+    (31, 1000, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,D,dtype", GRADSTATS_EDGE_CASES)
+def test_gradstats_kernel_nonpow2_and_dtypes(B, D, dtype):
+    """Kernel == oracle on exactly the ragged shapes and dtypes the
+    distributed estimator produces (zero-padding must stay exact)."""
+    G = jax.random.normal(jax.random.PRNGKey(B * 1000 + D), (B, D),
+                          dtype) * 2 + jnp.asarray(0.3, dtype)
+    s, d, n2, b = gradstats_reduce(G)
+    sr, dr, n2r, br = gradstats_reduce_ref(G)
+    tol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), **tol)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr), **tol)
+    np.testing.assert_allclose(float(n2), float(n2r), **tol)
+    assert float(b) == float(br) == B
+    assert s.shape == d.shape == (B,)
+    # outputs are f32 accumulators regardless of the input dtype
+    assert s.dtype == d.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("B,D,dtype", GRADSTATS_EDGE_CASES)
+def test_stats_from_matrix_kernel_path_matches_ref_path(B, D, dtype):
+    """use_kernel=True must be a drop-in for the derived GradStats —
+    the contract that lets TrainerRound route the adaptive estimators
+    through the fused kernel (acfg.stats_use_kernel)."""
+    from repro.core import batching
+
+    G = jax.random.normal(jax.random.PRNGKey(B + 7 * D), (B, D),
+                          dtype) * 3
+    a = batching.stats_from_matrix(G, use_kernel=False)
+    k = batching.stats_from_matrix(G, use_kernel=True)
+    scale = max(abs(float(v)) for v in a) + 1e-6
+    rel = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    for name, x, y in zip(batching.GradStats._fields, a, k):
+        assert abs(float(x) - float(y)) <= \
+            rel * max(abs(float(x)), abs(float(y))) + rel * scale, \
+            (name, float(x), float(y))

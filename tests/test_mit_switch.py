@@ -151,6 +151,51 @@ def test_property_switch_effective_batch_covers_request(b_req, mx, n):
         assert p.micro_batch == min(b_req, mx)
 
 
+@settings(max_examples=80, deadline=None)
+@given(st.integers(1, 100_000), st.integers(1, 300), st.integers(1, 8),
+       st.booleans())
+def test_property_effective_batch_at_most_double_request(b_req, mx, n,
+                                                         bucket):
+    """Regression: the plan must never consume more than twice the
+    requested batch, bucketing included.  Right at the switch boundary
+    (b_req = n·max + 1) the power-of-two rounding of the accum count
+    lands just under 2x; the clamp in plan_execution makes the bound
+    structural, so a future change to the rounding (e.g. bucketing the
+    micro batch in accum mode too — the factors would compound) trips
+    this test instead of silently inflating data consumption."""
+    p = plan_execution(b_req, mx, n, bucket=bucket)
+    assert p.effective_batch <= 2 * b_req
+    if p.mode == "accum":
+        # the plan still covers the request after the clamp
+        assert p.effective_batch >= b_req
+
+
+def test_switch_boundary_overshoot_is_bounded():
+    """The worst cases: one past the switch threshold, where the exact
+    accum count (n+1) rounds up to the next power of two."""
+    for mx in (3, 16, 24, 64):
+        for n in (1, 2, 3, 4, 5):
+            b_req = n * mx + 1
+            p = plan_execution(b_req, mx, n, bucket=True)
+            assert p.mode == "accum"
+            assert b_req <= p.effective_batch <= 2 * b_req, \
+                (b_req, mx, n, p)
+
+
+def test_bucketed_accum_dense_sweep_holds_both_bounds():
+    """Dense sweep over the accum region: bucketed plans always cover
+    the request and never exceed twice it (the structural invariant the
+    plan_execution clamp guards; its fallback is provably unreachable
+    under the current pow2 rounding, so what this pins is the bound
+    itself, boundary cases included)."""
+    for b_req in range(1, 2000):
+        for mx in (4, 7, 16):
+            p = plan_execution(b_req, mx, 2, bucket=True)
+            assert p.effective_batch <= 2 * b_req, (b_req, mx, p)
+            if p.mode == "accum":
+                assert p.effective_batch >= b_req, (b_req, mx, p)
+
+
 # ------------------------------------------------------------------
 # DiLoCo primitives
 # ------------------------------------------------------------------

@@ -47,24 +47,41 @@ ACFG = AdLoCoConfig(num_outer_steps=8, num_inner_steps=5, lr_inner=0.05,
                     inner_optimizer="sgd", stats_probe_size=32,
                     enable_merge=False, adaptive=False)
 
+#: adaptive arms of the golden suite: run with adaptive batching +
+#: switch mode on (microbatch estimator — deterministic jax numerics
+#: feed the batch decisions, and batch ints feed the clock), and their
+#: digests additionally pin the per-round batch/plan trajectory and the
+#: priced stats-reduction count
+ACFG_ADAPTIVE = dataclasses.replace(ACFG, adaptive=True,
+                                    stats_estimator="microbatch",
+                                    max_global_batch=256)
+
 #: stored digests: GOLDEN = the PR 2 fixture (2-pod topology), pinned
 #: across both the n-level fabric refactor and the execution-backend
 #: split (neither may silently re-price them); GOLDEN3 = the co-scripted
-#: scenarios on the 3-level rack/pod/cluster fixture.  The values live
-#: in tests/goldens/scenarios.json so ``--update-goldens`` can rewrite
+#: scenarios on the 3-level rack/pod/cluster fixture; GOLDENA = the
+#: adaptive-batching scenarios (2-pod fixture, async policy, batch ramp
+#: + stats collectives in the clock).  The values live in
+#: tests/goldens/scenarios.json so ``--update-goldens`` can rewrite
 #: them mechanically.
 GOLDENS_PATH = pathlib.Path(__file__).parent / "goldens" / "scenarios.json"
 _STORED = json.loads(GOLDENS_PATH.read_text())
 GOLDEN = _STORED["GOLDEN"]
 GOLDEN3 = _STORED["GOLDEN3"]
+GOLDENA = _STORED["GOLDENA"]
 
 UPDATE_CMD = ("PYTHONPATH=src python -m pytest tests/test_scenarios.py "
               "--update-goldens")
 
 
+def _group_of(name: str) -> str:
+    return ("GOLDENA" if name in GOLDENA
+            else "GOLDEN3" if name in GOLDEN3 else "GOLDEN")
+
+
 def _write_golden(name: str, digest: str) -> None:
     stored = json.loads(GOLDENS_PATH.read_text())
-    stored["GOLDEN3" if name in GOLDEN3 else "GOLDEN"][name] = digest
+    stored[_group_of(name)][name] = digest
     GOLDENS_PATH.write_text(json.dumps(stored, indent=2, sort_keys=True)
                             + "\n")
 
@@ -106,29 +123,60 @@ def _run3(name):
                        fixed_batch=4)
 
 
-def _trace(rep):
-    return {"summary": rep.summary(), "events": rep.applied_events}
+def _run_adaptive(name):
+    """Adaptive harness: the PR 2 2-pod fixture under the async policy
+    with the batch ramp on — every round prices a stats reduction and
+    batch growth stretches the roofline compute, so the digest pins the
+    whole adaptive scheduling surface (trajectory included)."""
+    profiles = make_pod_profiles([5, 5], ratio=2.0, **TOY)
+    interleaved = interleave_pods(profiles)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3)
+    prob, inits, streams = _quad_setup(k=3, M=2)
+    return run_cluster(quad_loss, inits, streams, ACFG_ADAPTIVE,
+                       policy="async", profiles=interleaved, network=topo,
+                       scenario=name)
 
 
-def _digest(rep) -> str:
-    blob = json.dumps(_trace(rep), sort_keys=True, default=float)
+def _trace(rep, hist=None):
+    t = {"summary": rep.summary(), "events": rep.applied_events}
+    if hist is not None:
+        # adaptive arms: the per-round batch/plan trajectory and the
+        # stats-reduction count are part of the pinned behavior
+        t["stats_syncs"] = rep.num_stats_syncs
+        t["batches"] = hist.requested_batches
+        t["modes"] = hist.modes
+    return t
+
+
+def _digest(rep, hist=None) -> str:
+    blob = json.dumps(_trace(rep, hist), sort_keys=True, default=float)
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
 _MEMO = {}
 
 
+def _run_by_group(name):
+    if name in GOLDENA:
+        return _run_adaptive(name)
+    return _run3(name) if name in GOLDEN3 else _run(name)
+
+
 def _memo_run(name):
     if name not in _MEMO:
-        _MEMO[name] = _run3(name) if name in GOLDEN3 else _run(name)
+        _MEMO[name] = _run_by_group(name)
     return _MEMO[name]
 
 
-@pytest.mark.parametrize("name", sorted(GOLDEN) + sorted(GOLDEN3))
+ALL_NAMES = sorted(GOLDEN) + sorted(GOLDEN3) + sorted(GOLDENA)
+
+
+@pytest.mark.parametrize("name", ALL_NAMES)
 def test_scenario_matches_golden_trace(name, request):
-    _, _, rep = _memo_run(name)
-    golden = GOLDEN3[name] if name in GOLDEN3 else GOLDEN[name]
-    digest = _digest(rep)
+    _, hist, rep = _memo_run(name)
+    golden = _STORED[_group_of(name)][name]
+    digest = _digest(rep, hist if name in GOLDENA else None)
     if digest == golden:
         return
     if request.config.getoption("--update-goldens"):
@@ -142,23 +190,29 @@ def test_scenario_matches_golden_trace(name, request):
         f"If this behavior change is intended, regenerate the stored "
         f"digests with:\n  {UPDATE_CMD}\n"
         f"and commit the tests/goldens/scenarios.json diff.\n"
-        f"Trace: {_trace(rep)}")
+        f"Trace: {_trace(rep, hist if name in GOLDENA else None)}")
 
 
 def test_every_registered_scenario_has_a_golden():
     """Registering a scenario without pinning its trace defeats the
     regression net — add a digest here when adding a generator."""
-    assert sorted(list_scenarios()) == sorted({**GOLDEN, **GOLDEN3})
+    assert sorted(list_scenarios()) == sorted({**GOLDEN, **GOLDEN3,
+                                               **GOLDENA})
 
 
-@pytest.mark.parametrize("name", sorted(GOLDEN) + sorted(GOLDEN3))
+@pytest.mark.parametrize("name", ALL_NAMES)
 def test_scenario_is_deterministic(name):
     """Same seed + scenario => identical ClusterReport, field by field
     (the acceptance criterion behind the golden digests)."""
-    _, _, rep1 = _memo_run(name)
-    _, _, rep2 = _run3(name) if name in GOLDEN3 else _run(name)
+    _, hist1, rep1 = _memo_run(name)
+    _, hist2, rep2 = _run_by_group(name)
     assert rep1.summary() == rep2.summary()
     assert rep1.applied_events == rep2.applied_events
+    if name in GOLDENA:
+        # the adaptive trajectory is part of the pinned behavior
+        assert hist1.requested_batches == hist2.requested_batches
+        assert hist1.modes == hist2.modes
+        assert rep1.num_stats_syncs == rep2.num_stats_syncs
 
 
 def test_scenarios_exercise_their_event_kinds():
@@ -171,11 +225,34 @@ def test_scenarios_exercise_their_event_kinds():
                 "correlated_pod_failure": {"slowdown", "fabric"},
                 "diurnal_congestion": {"fabric"},
                 "rack_flap": {"fabric"},
-                "straggler_cascade": {"slowdown", "fabric"}}
-    assert set(expected) == (set(GOLDEN) | set(GOLDEN3)) - {"baseline"}
+                "straggler_cascade": {"slowdown", "fabric"},
+                "adaptive_ramp": set(),
+                "congested_adaptive": {"fabric"}}
+    assert set(expected) == \
+        (set(GOLDEN) | set(GOLDEN3) | set(GOLDENA)) - {"baseline"}
     for name, kinds in expected.items():
         _, _, rep = _memo_run(name)
         assert kinds <= {e["kind"] for e in rep.applied_events}
+
+
+def test_adaptive_scenarios_actually_ramp_and_price_stats():
+    """The adaptive arms must exercise what they claim: batches grow,
+    switch mode engages, every round prices a stats reduction, and the
+    congestion window lands while the ramp is still in flight."""
+    pool, hist, rep = _memo_run("adaptive_ramp")
+    firsts = [bs[0] for bs in hist.requested_batches]
+    assert firsts[-1] > firsts[0]
+    assert any(m == "accum" for ms in hist.modes for m in ms)
+    assert rep.num_stats_syncs > 0
+    stats_log = [e for e in pool.comms.log if e["kind"] == "stats"]
+    assert len(stats_log) == rep.num_stats_syncs
+    assert all(e["time_s"] > 0.0 for e in stats_log)
+    _, hist_c, rep_c = _memo_run("congested_adaptive")
+    window = next(e for e in rep_c.applied_events if e["kind"] == "fabric")
+    assert window["time"] < rep_c.sim_time
+    # congestion + re-priced collectives make the congested ramp
+    # strictly slower than the clean one on the simulated clock
+    assert rep_c.sim_time > rep.sim_time
 
 
 def test_build_scenario_rejects_unknown_name():

@@ -40,12 +40,28 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from repro.configs.base import AdLoCoConfig
-from repro.cluster import (ClusterEvent, Topology, interleave_pods,
+from repro.cluster import (ClusterEvent, Topology, Trace, interleave_pods,
                            make_heterogeneous_profiles, make_pod_profiles,
                            make_rack_profiles, run_cluster)
 from repro.cluster.scenarios import build_scenario, list_scenarios
 
 from benchmarks.common import quad_setup, quad_loss, row
+
+#: set by --trace: directory where every bench run drops its Perfetto
+#: JSON (CI uploads these as artifacts and schema-checks them)
+_TRACE_DIR = None
+
+
+def _finish_trace(tr: Trace, tag: str) -> dict:
+    """Derive the per-row observability columns from a finished trace
+    and, when ``--trace DIR`` is set, export the Perfetto JSON."""
+    if _TRACE_DIR is not None:
+        import json
+        path = os.path.join(_TRACE_DIR, f"{tag}.perfetto.json")
+        with open(path, "w") as f:
+            json.dump(tr.to_perfetto(), f)
+    return {"utilization": tr.utilization_summary()["utilization"],
+            "overlap_frac": tr.overlap_fraction()}
 
 HET_RATIOS = (1.0, 2.0, 4.0)
 
@@ -98,9 +114,10 @@ def bench_policy(policy: str, ratio: float, T: int, *, seed: int = 0,
                              for i in range(spare * 2)]
     n_nodes = 6 + spare * 2
     profiles = make_heterogeneous_profiles(n_nodes, ratio=ratio, **TOY)
+    tr = Trace()
     pool, hist, rep = run_cluster(
         quad_loss, inits, streams, acfg, policy=policy, profiles=profiles,
-        eval_fn=eval_fn, scenario=list(scenario))
+        eval_fn=eval_fn, scenario=list(scenario), trace=tr)
     target = 0.5 * prob.noise ** 2 * 1.25
     return {
         "sim_time": rep.sim_time,
@@ -111,6 +128,7 @@ def bench_policy(policy: str, ratio: float, T: int, *, seed: int = 0,
         "syncs": rep.num_syncs,
         "k_final": pool.k,
         "events": [e["kind"] for e in rep.applied_events],
+        **_finish_trace(tr, f"{policy}_het{ratio:g}x"),
     }
 
 
@@ -160,9 +178,11 @@ def bench_scenario(name: str, policy: str, T: int, *, seed: int = 0,
     acfg = dataclasses.replace(BASE, num_outer_steps=T)
     cluster = scenario_cluster3 if levels == 3 else scenario_cluster
     prob, inits, streams, eval_fn, profiles, topo = cluster(seed=seed)
+    tr = Trace()
     pool, hist, rep = run_cluster(
         quad_loss, inits, streams, acfg, policy=policy, profiles=profiles,
-        network=topo, eval_fn=eval_fn, scenario=build_scenario(name))
+        network=topo, eval_fn=eval_fn, scenario=build_scenario(name),
+        trace=tr)
     target = 0.5 * prob.noise ** 2 * 1.25
     return {
         "sim_time": rep.sim_time,
@@ -172,6 +192,7 @@ def bench_scenario(name: str, policy: str, T: int, *, seed: int = 0,
         "syncs": rep.num_syncs,
         "k_final": pool.k,
         "events": [e["kind"] for e in rep.applied_events],
+        **_finish_trace(tr, f"scenario_{name}_{policy}"),
     }
 
 
@@ -189,10 +210,11 @@ def bench_adaptive_scenario(name: str, arm: str, T: int, *,
                                adaptive=(arm == "adaptive"))
     cluster = scenario_cluster3 if levels == 3 else scenario_cluster
     prob, inits, streams, eval_fn, profiles, topo = cluster(seed=seed)
+    tr = Trace()
     pool, hist, rep = run_cluster(
         quad_loss, inits, streams, acfg, policy="async",
         profiles=profiles, network=topo, eval_fn=eval_fn,
-        scenario=build_scenario(name),
+        scenario=build_scenario(name), trace=tr,
         fixed_batch=None if arm == "adaptive" else BASE.initial_batch_size)
     # within 5% of the noise floor — strict enough that the fixed
     # starting batch's gradient-variance plateau cannot reach it, which
@@ -211,6 +233,7 @@ def bench_adaptive_scenario(name: str, arm: str, T: int, *,
         "b_final": b_final,
         "accum": any(m == "accum" for ms in hist.modes for m in ms),
         "events": [e["kind"] for e in rep.applied_events],
+        **_finish_trace(tr, f"adaptive_{name}_{arm}"),
     }
 
 
@@ -230,6 +253,8 @@ def run_adaptive_scenarios(T: int, names, levels=None):
                 f"t2t_s={t2t};final={r['final_eval']:.4f};"
                 f"syncs={r['syncs']};stats={r['stats_syncs']};"
                 f"b_final={r['b_final']};accum={r['accum']};"
+                f"utilization={r['utilization']:.4f};"
+                f"overlap_frac={r['overlap_frac']:.4f};"
                 f"events={'+'.join(r['events']) or 'none'}"))
     # adaptive wins when it reaches the near-noise-floor target and the
     # fixed batch is either slower or (typically) never gets there at
@@ -258,13 +283,14 @@ def run_scenarios(T: int, names, levels=None):
                              f"{list_scenarios()}")
     regular = [n for n in names if n not in ADAPTIVE_SCENARIOS]
     adaptive = [n for n in names if n in ADAPTIVE_SCENARIOS]
-    rows, t2ts = [], {}
+    rows, t2ts, overlaps = [], {}, {}
     for name in regular:
         lv = levels if levels is not None else (
             3 if name in SCENARIO_NAMES3 else 2)
         for policy in ("sync", "async"):
             r = bench_scenario(name, policy, T, levels=lv)
             t2ts[(name, policy)] = r["t2t"]
+            overlaps[(name, policy)] = r["overlap_frac"]
             t2t = f"{r['t2t']:.4f}" if r["t2t"] is not None else "none"
             rows.append(row(
                 f"cluster/scenario/{name}/{policy}", r["sim_time"] * 1e6,
@@ -272,15 +298,24 @@ def run_scenarios(T: int, names, levels=None):
                 f"comm_s={r['comm_time']:.4f};"
                 f"t2t_s={t2t};final={r['final_eval']:.4f};"
                 f"syncs={r['syncs']};k_final={r['k_final']};"
+                f"utilization={r['utilization']:.4f};"
+                f"overlap_frac={r['overlap_frac']:.4f};"
                 f"events={'+'.join(r['events']) or 'none'}"))
     if regular:
         wins = {name: (t2ts[(name, "async")] is not None
                        and t2ts[(name, "sync")] is not None
                        and t2ts[(name, "async")] < t2ts[(name, "sync")])
                 for name in regular}
+        # the traced counterpart of the wins: async must actually hide
+        # collectives behind compute (sync is 0.0 by construction)
+        olap = {name: overlaps[(name, "async")] > overlaps[(name, "sync")]
+                for name in regular}
         rows.append(row(
             "cluster/scenario-summary", 0.0,
-            ";".join(f"async_faster_{n}={wins[n]}" for n in regular)))
+            ";".join(f"async_faster_{n}={wins[n]}" for n in regular)
+            + ";"
+            + ";".join(f"async_overlap_gt_sync_{n}={olap[n]}"
+                       for n in regular)))
     if adaptive:
         rows.extend(run_adaptive_scenarios(T, adaptive, levels))
     return rows
@@ -292,16 +327,20 @@ def run(quick: bool = False, scenarios=None, levels=None):
         return run_scenarios(T, scenarios, levels)
     rows = []
     t2ts = {}
+    overlaps = {}
     for ratio in HET_RATIOS:
         for policy in ("sync", "async"):
             r = bench_policy(policy, ratio, T)
             t2ts[(policy, ratio)] = r["t2t"]
+            overlaps[(policy, ratio)] = r["overlap_frac"]
             t2t = f"{r['t2t']:.4f}" if r["t2t"] is not None else "none"
             rows.append(row(
                 f"cluster/{policy}/het{ratio:g}x", r["sim_time"] * 1e6,
                 f"sim_s={r['sim_time']:.4f};comm_s={r['comm_time']:.4f};"
                 f"t2t_s={t2t};final={r['final_eval']:.4f};"
-                f"syncs={r['syncs']}"))
+                f"syncs={r['syncs']};"
+                f"utilization={r['utilization']:.4f};"
+                f"overlap_frac={r['overlap_frac']:.4f}"))
 
     # elastic scenario at 2x heterogeneity: a straggler burst, one
     # trainer leaves, a fresh one joins on spare nodes
@@ -314,19 +353,28 @@ def run(quick: bool = False, scenarios=None, levels=None):
         "cluster/elastic/het2x", r["sim_time"] * 1e6,
         f"sim_s={r['sim_time']:.4f};comm_s={r['comm_time']:.4f};"
         f"final={r['final_eval']:.4f};k_final={r['k_final']};"
+        f"utilization={r['utilization']:.4f};"
+        f"overlap_frac={r['overlap_frac']:.4f};"
         f"events={'+'.join(r['events'])}"))
 
     # the acceptance headline: async strictly faster to target once node
-    # speeds differ by >= 2x
+    # speeds differ by >= 2x — and, on the traced schedule, async must
+    # show strictly higher collective/compute overlap at every ratio
+    # (sync is a barrier: its overlap fraction is exactly 0)
     wins = {ratio: (t2ts[("async", ratio)] is not None
                     and t2ts[("sync", ratio)] is not None
                     and t2ts[("async", ratio)] < t2ts[("sync", ratio)])
+            for ratio in HET_RATIOS}
+    olap = {ratio: overlaps[("async", ratio)] > overlaps[("sync", ratio)]
             for ratio in HET_RATIOS}
     rows.append(row(
         "cluster/summary", 0.0,
         f"async_faster_to_target_1x={wins[1.0]};"
         f"async_faster_to_target_2x={wins[2.0]};"
-        f"async_faster_to_target_4x={wins[4.0]}"))
+        f"async_faster_to_target_4x={wins[4.0]};"
+        f"async_overlap_gt_sync_1x={olap[1.0]};"
+        f"async_overlap_gt_sync_2x={olap[2.0]};"
+        f"async_overlap_gt_sync_4x={olap[4.0]}"))
 
     # adaptive vs fixed-batch time-to-target: part of the smoke run so
     # the committed BENCH_cluster.json baseline gates it on every push
@@ -361,7 +409,16 @@ def main(argv=None) -> int:
                     help="compare the sweep rows against a stored "
                          "baseline JSON and fail on any drift (the perf "
                          "trajectory gate)")
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="write every bench run's Perfetto trace JSON "
+                         "into DIR (CI uploads these as artifacts and "
+                         "schema-checks them with trace_report "
+                         "--validate)")
     args = ap.parse_args(argv)
+    if args.trace:
+        os.makedirs(args.trace, exist_ok=True)
+        global _TRACE_DIR
+        _TRACE_DIR = args.trace
     print("name,us_per_call,derived")
     ok = True
     rows = run(quick=args.smoke, scenarios=args.scenario,
@@ -379,6 +436,13 @@ def main(argv=None) -> int:
             if "async_faster_bursty_congestion" in r["derived"]:
                 ok = ok and ("async_faster_bursty_congestion=True"
                              in r["derived"])
+        if r["name"] in ("cluster/summary", "cluster/scenario-summary"):
+            # observability gate: async must show strictly higher
+            # collective/compute overlap than sync on every sweep run
+            ok = ok and all(
+                kv.split("=")[1] == "True"
+                for kv in r["derived"].split(";")
+                if kv.startswith("async_overlap_gt_sync_"))
     # read the baseline BEFORE writing --json: if both flags resolve to
     # the same file (case-insensitive filesystems!), writing first would
     # clobber the baseline and the gate would compare it to itself

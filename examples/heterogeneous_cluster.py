@@ -2,9 +2,12 @@
 heterogeneous hardware with stragglers, a trainer leaving, a fresh one
 joining, a 2-pod topology whose cross-pod bottleneck gets congested,
 and a 3-level rack/pod/cluster fabric where a whole pod fails at once —
-comparing sync vs async outer-sync policies on the simulated clock.
+comparing sync vs async outer-sync policies on the simulated clock,
+then tracing a run to see *where* the time goes (per-trainer
+busy/blocked/idle ledger, overlap fraction, Perfetto export).
 
   PYTHONPATH=src python examples/heterogeneous_cluster.py
+  # then load the written trace.json in https://ui.perfetto.dev
 """
 import dataclasses
 import os
@@ -13,7 +16,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from repro.configs.base import AdLoCoConfig
-from repro.cluster import (ClusterEvent, Topology, interleave_pods,
+from repro.cluster import (ClusterEvent, Topology, Trace, interleave_pods,
                            make_heterogeneous_profiles, make_pod_profiles,
                            make_rack_profiles, run_cluster)
 
@@ -139,6 +142,42 @@ def main():
               f"({rep.comm_time * 1e3:6.1f}ms in collectives), "
               f"events={'+'.join(kinds)}, "
               f"E[f]={eval_fn(pool.global_params):.4f}")
+
+    print("\n=== 7. tracing: where does the async run's time actually "
+          "go?")
+    # re-run the 2-pod congested sweep with a trace attached: the event
+    # loop records one span per compute block / collective / stats
+    # reduction, and the ledger partitions every trainer's lifetime
+    profiles = make_pod_profiles([3, 3], ratio=2.0, **TOY)
+    interleaved = interleave_pods(profiles)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3)
+    prob, inits, streams, eval_fn = quad_setup(k=3, M=2, seed=0)
+    tr = Trace()
+    pool, hist, rep = run_cluster(
+        quad_loss, inits, streams, ACFG, policy="async",
+        profiles=interleaved, network=topo, eval_fn=eval_fn,
+        scenario="bursty_congestion", trace=tr)
+    print("    tid   alive      busy         blocked      idle")
+    for tid, led in tr.utilization().items():
+        print(f"    {tid:3d} {led['alive'] * 1e3:6.1f}ms "
+              + " ".join(f"{led[k] * 1e3:6.1f}ms ({led[k] / led['alive']:4.0%})"
+                         for k in ("busy", "blocked", "idle")))
+    summ = tr.utilization_summary()
+    print(f"    fleet utilization={summ['utilization']:.3f} "
+          f"(blocked={summ['blocked_frac']:.3f}, "
+          f"idle={summ['idle_frac']:.3f})")
+    print(f"    overlap fraction={tr.overlap_fraction():.3f} — the share "
+          f"of collective\n    in-flight time hidden behind compute "
+          f"(sync would score exactly 0)")
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "trace.json")
+    import json
+    with open(out, "w") as f:
+        json.dump(tr.to_perfetto(), f)
+    print(f"    wrote {out} — load it in https://ui.perfetto.dev, or:\n"
+          f"      PYTHONPATH=src python -m repro.cluster.trace_report "
+          f"{os.path.relpath(out)}")
 
 
 if __name__ == "__main__":

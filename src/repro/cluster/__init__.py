@@ -53,12 +53,13 @@ Execution backends
     participant-pruned ``FabricDomain`` tree mapped onto nested mesh
     axes, so the reduction lowers to grouped collectives per fabric
     level, exactly where the tree says the hierarchical schedule runs.
-    The simulated clock still comes from the network model (reports stay
-    comparable across backends); the wall-clock measured inside each
-    real collective lands in ``ClusterReport.real_comm_time`` and per
-    event in the comms log (``real_s``).  Scope: sync/async policies,
-    one trainer — merging and elastic events need the in-process pool
-    and stay simulator-only for now.
+    The simulated clock still comes from the network model (reports
+    stay comparable across backends); wall-clock measured inside each
+    real collective lands in ``ClusterReport.real_comm_time``, per
+    event in the comms log (``real_s``), and — when tracing — as
+    ``real``-clock spans laid alongside the sim spans.  Scope:
+    sync/async policies, one trainer — merging and elastic events need
+    the in-process pool and stay simulator-only for now.
 
 ``python -m repro.cluster.launch_mp --procs 2 --rounds 1 --check`` is
 the zero-to-parity smoke: it spawns the processes, runs the canonical
@@ -90,6 +91,43 @@ re-priced at fabric window edges like any in-flight collective, and
 batch growth feeds the per-node roofline compute — so sync, async and
 elastic all experience the ramp on the clock, not just in the
 numerics.
+
+Reporting & tracing
+-------------------
+Three tiers, cheapest first:
+
+``ClusterReport``
+    Aggregate scalars, always on: ``sim_time``, ``comm_time``,
+    ``num_syncs``, per-round logs, ``applied_events``.
+    ``report.summary()`` is the golden-digest surface — byte-stable
+    across PRs; ``report.summary(extended=True)`` adds the opt-in
+    fields (``real_comm_time``, ``num_stats_syncs``, and — when the
+    run was traced — ``utilization``, ``blocked_frac``, ``idle_frac``,
+    ``overlap_frac``) without perturbing the default dict.
+``Trace`` (``repro.cluster.trace``)
+    The structured tier: ``run_cluster(..., trace=Trace())`` makes the
+    event loop record one typed span per inner-compute block, outer
+    collective, stats reduction, join transfer and fabric window, plus
+    instant annotations (re-pricings, joins, leaves, merges,
+    slowdowns).  Strictly opt-in — with the default ``trace=None``
+    nothing is allocated and scheduling is untouched (the golden
+    digests pin that).  Derived metrics: ``trace.utilization()`` — a
+    per-trainer busy / comm-blocked / idle ledger asserted to
+    partition each trainer's alive window exactly — and
+    ``trace.overlap_fraction()`` — collective in-flight time
+    coincident with the same trainer's compute over total collective
+    time, the ROADMAP item-1 gate (sync scores exactly 0.0; async > 0
+    wherever an outer all-reduce hides behind compute).  On the real
+    backend, wall-clock spans measured inside each executed collective
+    land in the same trace on a second clock (``launch_mp --trace``).
+``trace.to_perfetto()`` / ``repro.cluster.trace_report``
+    The export tier: Chrome-trace/Perfetto JSON (load in
+    https://ui.perfetto.dev), with exact-seconds endpoints embedded so
+    ``Trace.from_perfetto`` round-trips digest-identically.  ``python
+    -m repro.cluster.trace_report trace.json`` prints the ledger,
+    overlap breakdown and longest spans; ``--validate`` is the CI
+    schema gate.  ``cluster_bench`` rows carry ``utilization`` and
+    ``overlap_frac`` columns derived the same way.
 
 Network models
 --------------
@@ -191,13 +229,16 @@ from repro.cluster.runtime import (POLICIES, ClusterEvent, ClusterReport,
                                    run_cluster)
 from repro.cluster.scenarios import (SCENARIOS, build_scenario,
                                      list_scenarios, register_scenario)
+from repro.cluster.trace import (Span, Trace, TraceEvent,
+                                 validate_perfetto)
 
 __all__ = [
     "FABRIC_SCOPES", "POLICIES", "SCENARIOS", "ClusterEvent",
     "ClusterReport", "CollectiveBackend", "CommDomain", "FabricDomain",
     "FabricSchedule", "FabricWindow", "JaxProcessBackend", "NetworkModel",
-    "NodeProfile", "SimBackend", "Slowdown", "Topology",
-    "build_scenario", "interleave_pods", "list_scenarios",
+    "NodeProfile", "SimBackend", "Slowdown", "Span", "Topology", "Trace",
+    "TraceEvent", "build_scenario", "interleave_pods", "list_scenarios",
     "make_heterogeneous_profiles", "make_pod_profiles",
     "make_rack_profiles", "register_scenario", "run_cluster",
+    "validate_perfetto",
 ]

@@ -88,6 +88,11 @@ class CollectiveBackend:
                  scenario: Sequence[Any] = ()) -> None:
         """Reject configurations this backend cannot execute."""
 
+    def attach_trace(self, trace) -> None:
+        """Record *wall-clock* spans for executed collectives into
+        ``trace`` (see ``repro.cluster.trace``).  Pricing-only backends
+        ignore it — the runtime records the simulated spans itself."""
+
     # ---------------------------------------------------------- pricing
     def allreduce_time(self, payload_bytes: float,
                        nodes: Sequence[NodeProfile], *,
@@ -230,6 +235,8 @@ class JaxProcessBackend(CollectiveBackend):
         self._axes: Optional[tuple] = None
         self._reduce_jit = None
         self._warm: set = set()      # (shape, dtype) combos already compiled
+        self._trace = None           # wall-clock span sink (attach_trace)
+        self._trace_origin = 0.0     # perf_counter at attach -> span t=0
 
     def for_run(self) -> "JaxProcessBackend":
         run = object.__new__(JaxProcessBackend)
@@ -240,6 +247,22 @@ class JaxProcessBackend(CollectiveBackend):
     def bind(self, profiles):
         self._profiles = list(profiles)
         self._mesh = None            # topology of the run may differ
+
+    def attach_trace(self, trace):
+        """Wall-clock spans for every executed collective land in
+        ``trace`` on the ``real`` clock, timestamped relative to the
+        attach point (run start) — laid alongside the runtime's sim
+        spans so simulated and measured wire time are comparable per
+        collective."""
+        self._trace = trace
+        self._trace_origin = time.perf_counter()
+
+    def _record_real(self, kind: str, t0: float, dt: float) -> None:
+        if self._trace is not None:
+            rel = t0 - self._trace_origin
+            # tid 0: validate() pins this backend to a single trainer
+            self._trace.begin(0, kind, rel, rel + dt, clock="real",
+                              rank=self.rank)
 
     def validate(self, acfg, *, policy, k, M, scenario=()):
         P = self.num_processes
@@ -386,6 +409,7 @@ class JaxProcessBackend(CollectiveBackend):
         t0 = time.perf_counter()
         host = self._execute(tree)
         self._last_measured = time.perf_counter() - t0
+        self._record_real("outer", t0, self._last_measured)
         # every shard now holds the global mean: a (1, ...) worker axis
         # that make_outer_step's mean passes through unchanged
         return host
@@ -425,6 +449,7 @@ class JaxProcessBackend(CollectiveBackend):
             dt = time.perf_counter() - t0
             self._last_stats_measured = (
                 (self._last_stats_measured or 0.0) + dt)
+            self._record_real("stats", t0, dt)
             # the mesh reduction is a mean over the P workers; the
             # composition protocol wants elementwise sums
             return host[0] * jnp.float32(self.num_processes)

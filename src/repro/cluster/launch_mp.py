@@ -133,9 +133,12 @@ def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0,
 
 
 def run_sim(procs: int, *, rounds: int, policy: str = "sync",
-            pods: bool = False, seed: int = 0, adaptive: bool = False):
+            pods: bool = False, seed: int = 0, adaptive: bool = False,
+            trace: bool = False):
     """The same fixture through the in-process SimBackend — the
-    reference arm of the parity check."""
+    reference arm of the parity check.  ``trace`` records the span
+    trace and adds its backend-invariant ``trace_digest`` (the
+    sim-span digest the real run must reproduce)."""
     from repro.cluster.backend import SimBackend
     from repro.cluster.runtime import run_cluster
 
@@ -143,14 +146,19 @@ def run_sim(procs: int, *, rounds: int, policy: str = "sync",
         procs, rounds=rounds, pods=pods, seed=seed, adaptive=adaptive)
     pool, hist, rep = run_cluster(
         quad_loss, inits, streams, acfg, policy=policy, profiles=profiles,
-        backend=SimBackend(network),
+        backend=SimBackend(network), trace=trace or None,
         fixed_batch=None if adaptive else 4)
-    return {"x": np.asarray(pool.global_params["x"], np.float64).tolist(),
-            "sim_time": rep.sim_time, "comm_time": rep.comm_time,
-            "num_syncs": rep.num_syncs,
-            "num_stats_syncs": rep.num_stats_syncs,
-            "batches": hist.requested_batches, "modes": hist.modes,
-            "policy": policy, "procs": procs, "backend": "sim"}
+    res = {"x": np.asarray(pool.global_params["x"], np.float64).tolist(),
+           "sim_time": rep.sim_time, "comm_time": rep.comm_time,
+           "num_syncs": rep.num_syncs,
+           "num_stats_syncs": rep.num_stats_syncs,
+           "batches": hist.requested_batches, "modes": hist.modes,
+           "policy": policy, "procs": procs, "backend": "sim"}
+    if rep.trace is not None:
+        res["trace_digest"] = rep.trace.sim_digest()
+        res["overlap_frac"] = rep.trace.overlap_fraction()
+        res["utilization"] = rep.trace.utilization_summary()["utilization"]
+    return res
 
 
 # --------------------------------------------------------------- worker
@@ -179,10 +187,14 @@ def worker_main(args) -> int:
     # coordinator's copy authoritative (and exercises the transfer path)
     inits = [backend.broadcast_params(inits[0])]
 
+    # every rank records (the event loop is lockstep, so the sim spans
+    # are identical everywhere); only rank 0 exports
+    record = bool(args.trace) or args.record_trace
+
     t0 = time.perf_counter()
     pool, hist, rep = run_cluster(
         quad_loss, inits, streams, acfg, policy=args.policy,
-        profiles=profiles, backend=backend,
+        profiles=profiles, backend=backend, trace=record or None,
         fixed_batch=None if args.adaptive else 4)
     wall = time.perf_counter() - t0
 
@@ -222,6 +234,17 @@ def worker_main(args) -> int:
                   "pods": bool(args.pods), "wall_s": wall,
                   "adaptive": bool(args.adaptive),
                   "backend": "jax"}
+        if rep.trace is not None:
+            reals = rep.trace.real_spans()
+            result["trace_digest"] = rep.trace.sim_digest()
+            result["overlap_frac"] = rep.trace.overlap_fraction()
+            result["utilization"] = (
+                rep.trace.utilization_summary()["utilization"])
+            result["num_real_spans"] = len(reals)
+            result["real_span_time"] = sum(s.duration for s in reals)
+            if args.trace:
+                with open(args.trace, "w") as f:
+                    json.dump(rep.trace.to_perfetto(), f)
         with open(args.out, "w") as f:
             json.dump(result, f)
     jax.distributed.shutdown()
@@ -238,9 +261,13 @@ def _free_port() -> int:
 
 def run_mp(procs: int, *, rounds: int = 2, policy: str = "sync",
            pods: bool = False, seed: int = 0, adaptive: bool = False,
+           trace: Optional[str] = None, record_trace: bool = False,
            timeout: float = 600.0) -> dict:
     """Spawn ``procs`` local worker processes, run the fixture through
-    the real backend, and return process 0's result dict."""
+    the real backend, and return process 0's result dict.  ``trace``
+    names a Perfetto JSON path for rank 0 to export; ``record_trace``
+    records spans (digest + real wall-time stats in the result dict)
+    without writing a file."""
     coord = f"127.0.0.1:{_free_port()}"
     out = tempfile.NamedTemporaryFile(suffix=".json", delete=False)
     out.close()
@@ -263,6 +290,10 @@ def run_mp(procs: int, *, rounds: int = 2, policy: str = "sync",
                 cmd.append("--pods")
             if adaptive:
                 cmd.append("--adaptive")
+            if trace and rank == 0:
+                cmd.extend(["--trace", trace])
+            elif trace or record_trace:
+                cmd.append("--record-trace")
             children.append(subprocess.Popen(
                 cmd, env=env, stdout=subprocess.PIPE,
                 stderr=subprocess.STDOUT, text=True))
@@ -309,13 +340,20 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="also run the SimBackend reference in-process "
-                         "and assert final-parameter parity")
+                         "and assert final-parameter parity (plus "
+                         "sim-span trace-digest parity when tracing)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the span trace and write rank 0's "
+                         "Perfetto JSON here (wall-clock collective "
+                         "spans alongside the sim spans)")
     ap.add_argument("--out", default=None, help="write rank-0 result JSON")
     ap.add_argument("--timeout", type=float, default=600.0)
     # internal: worker mode (spawned by run_mp)
     ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
     ap.add_argument("--rank", type=int, default=0, help=argparse.SUPPRESS)
     ap.add_argument("--coordinator", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--record-trace", action="store_true",
+                    help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
 
     if args.worker:
@@ -323,6 +361,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     res = run_mp(args.procs, rounds=args.rounds, policy=args.policy,
                  pods=args.pods, seed=args.seed, adaptive=args.adaptive,
+                 trace=args.trace, record_trace=args.check,
                  timeout=args.timeout)
     print(f"[launch_mp] procs={res['procs']} policy={res['policy']} "
           f"pods={res['pods']} adaptive={res['adaptive']} "
@@ -330,22 +369,37 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"sim_time={res['sim_time']:.4f}s "
           f"real_comm={res['real_comm_time']:.4f}s "
           f"wall={res['wall_s']:.2f}s")
+    if "trace_digest" in res:
+        print(f"[launch_mp] trace: digest={res['trace_digest']} "
+              f"overlap_frac={res['overlap_frac']:.4f} "
+              f"utilization={res['utilization']:.4f} "
+              f"real_spans={res['num_real_spans']} "
+              f"({res['real_span_time']:.6f}s wall)"
+              + (f" -> {args.trace}" if args.trace else ""))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(res, f)
     if args.check:
+        traced = "trace_digest" in res
         ref = run_sim(args.procs, rounds=args.rounds, policy=args.policy,
                       pods=args.pods, seed=args.seed,
-                      adaptive=args.adaptive)
+                      adaptive=args.adaptive, trace=traced)
         diff = float(np.max(np.abs(np.asarray(res["x"])
                                    - np.asarray(ref["x"]))))
         same_clock = (res["sim_time"] == ref["sim_time"]
                       and res["num_syncs"] == ref["num_syncs"])
         same_plan = (res["batches"] == ref["batches"]
                      and res["modes"] == ref["modes"])
+        # the sim-span digest must be backend-invariant, and the real
+        # backend must have measured actual wall time on the wire
+        same_trace = (not traced
+                      or res["trace_digest"] == ref["trace_digest"])
+        real_ok = not traced or res["real_span_time"] > 0.0
         print(f"[launch_mp] parity vs SimBackend: max|dx|={diff:.3e} "
-              f"same_sim_clock={same_clock} same_plan_seq={same_plan}")
-        if diff > 1e-5 or not same_clock or not same_plan:
+              f"same_sim_clock={same_clock} same_plan_seq={same_plan} "
+              f"same_trace_digest={same_trace} real_spans_ok={real_ok}")
+        if (diff > 1e-5 or not same_clock or not same_plan
+                or not same_trace or not real_ok):
             print("[launch_mp] PARITY FAILURE", file=sys.stderr)
             return 1
     return 0

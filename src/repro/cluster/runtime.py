@@ -82,6 +82,7 @@ from repro.core.mit import (TrainerPoolState, check_merge, consolidate,
 from repro.cluster.backend import CollectiveBackend, SimBackend
 from repro.cluster.network import NetworkModel
 from repro.cluster.node import NodeProfile, make_heterogeneous_profiles
+from repro.cluster.trace import FABRIC_TID, Trace
 
 POLICIES = ("sync", "async", "elastic")
 
@@ -137,12 +138,32 @@ class ClusterReport:
     num_stats_syncs: int = 0
     rounds: Dict[int, int] = field(default_factory=dict)   # tid -> rounds
     applied_events: List[dict] = field(default_factory=list)
+    # the span/event trace the run recorded into, when one was passed to
+    # ``run_cluster(trace=)``; excluded from comparisons so report
+    # equality (and the golden digests built on it) stays trace-agnostic
+    trace: Optional[Trace] = field(default=None, repr=False, compare=False)
 
-    def summary(self) -> dict:
-        return {"policy": self.policy, "sim_time": self.sim_time,
-                "compute_time": self.compute_time,
-                "comm_time": self.comm_time, "num_syncs": self.num_syncs,
-                "rounds": dict(self.rounds)}
+    def summary(self, extended: bool = False) -> dict:
+        """Aggregate scalars.  The default call is byte-identical to the
+        pre-trace runtime (the golden digests in
+        ``tests/goldens/scenarios.json`` pin it); ``extended=True``
+        additionally exposes the measured wire time, the stats-reduction
+        count and — when the run recorded a trace — the utilization
+        ledger aggregate and the overlap fraction (ROADMAP item 1)."""
+        s = {"policy": self.policy, "sim_time": self.sim_time,
+             "compute_time": self.compute_time,
+             "comm_time": self.comm_time, "num_syncs": self.num_syncs,
+             "rounds": dict(self.rounds)}
+        if extended:
+            s["real_comm_time"] = self.real_comm_time
+            s["num_stats_syncs"] = self.num_stats_syncs
+            if self.trace is not None:
+                util = self.trace.utilization_summary()
+                s["utilization"] = util["utilization"]
+                s["blocked_frac"] = util["blocked_frac"]
+                s["idle_frac"] = util["idle_frac"]
+                s["overlap_frac"] = self.trace.overlap_fraction()
+        return s
 
 
 @dataclass
@@ -162,14 +183,17 @@ class _TrainerRT:
     last_loss: float = 0.0          # mean loss of the last completed round
     comm_ev: Optional[dict] = None  # in-flight collective (for re-pricing)
     stats_ev: Optional[dict] = None  # in-flight stats reduction (ditto)
+    cspan: Optional[Any] = None     # open compute span (tracing only)
 
 
 class _Sim:
     def __init__(self, loss_fn: Callable, acfg: AdLoCoConfig, *,
                  policy: str, profiles: List[NodeProfile],
                  backend: CollectiveBackend, eval_fn: Optional[Callable],
-                 fixed_batch: Optional[int], verbose: bool):
+                 fixed_batch: Optional[int], verbose: bool,
+                 trace: Optional[Trace] = None):
         self.rnd = TrainerRound(loss_fn, acfg)
+        self.trace = trace
         self.acfg = acfg
         self.policy = policy
         self.profiles = profiles
@@ -217,6 +241,13 @@ class _Sim:
                                  now)
                for node in rt.nodes[:len(out.worker_params)]]
         self.report.compute_time += sum(dts)
+        if self.trace is not None:
+            # one span per inner-compute block; the planned end is final
+            # unless a merge/leave preempts the round (truncated then)
+            rt.cspan = self.trace.begin(
+                rt.tr.tid, "compute", now, now + max(dts), round=ri,
+                mode=out.mode, samples=out.samples,
+                flops=out.flops_per_worker)
         self.push(now + max(dts), "round",
                   {"rt": rt, "out": out, "gen": rt.gen})
 
@@ -245,6 +276,10 @@ class _Sim:
               "payload_bytes": payload, "t_last": now, "frac": 0.0,
               "cur_total": dur, "t_end": now + dur,
               "log": self.pool.comms.log[-1]}
+        if self.trace is not None:
+            ev["span"] = self.trace.begin(
+                rt.tr.tid, "outer", now, now + dur, round=rt.round,
+                mode=mode, payload_bytes=payload)
         rt.comm_ev = ev
         self.push(ev["t_end"], "comm", ev)
 
@@ -272,6 +307,12 @@ class _Sim:
                 self.report.comm_time += delta
                 self.pool.comms.total_time += delta
                 ev["log"]["time_s"] = ev["log"].get("time_s", 0.0) + delta
+                if self.trace is not None:
+                    self.trace.end(ev.get("span"), new_end)
+                    self.trace.instant(
+                        rt.tr.tid, "reprice", now, target=kind,
+                        frac_done=done, new_total=new_total,
+                        delta=delta)
                 ev["t_end"] = new_end
                 self.push(new_end, kind, ev)
         for ev in self.xfers:
@@ -289,7 +330,22 @@ class _Sim:
             ev.update(frac=done, t_last=now, cur_total=new_total)
             if new_end == ev["t_end"]:
                 continue
-            ev["log"]["xfer_s"] += new_end - ev["t_end"]
+            # the join record appended at launch is a snapshot (its
+            # ``xfer_s`` is the launch-time price); a window edge that
+            # moves the transfer emits an explicit annotation instead of
+            # mutating the already-published event in place, so a
+            # consumer that copied ``applied_events`` isn't silently
+            # stale.  ``xfer_s`` here is the new effective total —
+            # launch to (re-priced) arrival.
+            self.report.applied_events.append(
+                {"time": now, "kind": "xfer_reprice", "tid": rt.tr.tid,
+                 "xfer_s": new_end - ev["log"]["time"]})
+            if self.trace is not None:
+                self.trace.end(ev.get("span"), new_end)
+                self.trace.instant(
+                    rt.tr.tid, "reprice", now, target="xfer",
+                    frac_done=done, new_total=new_total,
+                    delta=new_end - ev["t_end"])
             ev["t_end"] = new_end
             self.push(new_end, "xfer", ev)
 
@@ -317,6 +373,24 @@ class _Sim:
                   f"tid={rt.tr.tid} round={round_i} loss={loss:.4f} "
                   f"k={len(self.alive_rts())}")
 
+    # ---------------------------------------------------------- tracing
+    def truncate_spans(self, rt: _TrainerRT, now: float,
+                       reason: str) -> None:
+        """A gen bump (merge/leave) just preempted this trainer's
+        in-flight work: close any open compute/collective spans at the
+        preemption time so the trace reflects what actually ran."""
+        if self.trace is None:
+            return
+        open_spans = [rt.cspan,
+                      rt.comm_ev.get("span") if rt.comm_ev else None,
+                      rt.stats_ev.get("span") if rt.stats_ev else None]
+        for span in open_spans:
+            if span is not None and span.t1 is not None and span.t1 > now:
+                self.trace.end(span, now, **{reason: True})
+                self.trace.instant(rt.tr.tid, "preempt", now,
+                                   target=span.kind, reason=reason)
+        rt.cspan = None
+
     # -------------------------------------------------------- handlers
     def fold_pending(self, rt: _TrainerRT) -> None:
         """Rebase the workers onto a delayed outer update that arrived
@@ -338,6 +412,7 @@ class _Sim:
             return
         out: RoundOutput = ev["out"]
         self.report.sim_time = max(self.report.sim_time, now)
+        rt.cspan = None                   # compute span closed on time
         rt.round += 1
         self.report.rounds[rt.tr.tid] = rt.round
         self.samples_total += out.samples
@@ -367,6 +442,10 @@ class _Sim:
               "payload_bytes": payload, "t_last": now, "frac": 0.0,
               "cur_total": dur, "t_end": now + dur,
               "log": self.pool.comms.log[-1]}
+        if self.trace is not None:
+            ev["span"] = self.trace.begin(
+                rt.tr.tid, "stats", now, now + dur, round=rt.round,
+                payload_bytes=payload)
         rt.stats_ev = ev
         self.push(ev["t_end"], "stats", ev)
 
@@ -454,6 +533,7 @@ class _Sim:
         survivors = set(id(t) for t in self.pool.trainers)
         for t in involved:
             rt = self.rts[t.tid]
+            self.truncate_spans(rt, now, "merged")
             if id(t) in survivors:
                 # representative: a merge preempts its in-flight round
                 # and supersedes any in-flight sync
@@ -466,10 +546,15 @@ class _Sim:
             else:
                 rt.alive = False
                 self.free_nodes.extend(rt.nodes)
+                if self.trace is not None:
+                    self.trace.trainer_dead(t.tid, now)
+        merged_away = [t.tid for t in involved if id(t) not in survivors]
+        if self.trace is not None:
+            for tid in merged_away:
+                self.trace.instant(tid, "merge", now, round=round_i)
         self.report.applied_events.append(
             {"time": now, "kind": "merge", "round": round_i,
-             "merged": [t.tid for t in involved
-                        if id(t) not in survivors]})
+             "merged": merged_away})
 
     # -------------------------------------------------------- scenario
     def on_scenario(self, now: float, ev: ClusterEvent) -> None:
@@ -480,6 +565,10 @@ class _Sim:
                 self.report.applied_events.append(
                     {"time": now, "kind": "slowdown", "node": idx,
                      "factor": ev.factor, "duration": ev.duration})
+                if self.trace is not None:
+                    self.trace.instant(FABRIC_TID, "slowdown", now,
+                                       node=idx, factor=ev.factor,
+                                       duration=ev.duration)
             return
         if ev.kind == "leave":
             self.do_leave(now, ev.tid)
@@ -495,6 +584,14 @@ class _Sim:
                 {"time": now, "kind": "fabric", "scope": ev.scope,
                  "bw_scale": ev.bw_scale, "extra_latency": ev.extra_latency,
                  "duration": ev.duration})
+            if self.trace is not None:
+                # permanent windows (duration <= 0) stay open until
+                # Trace.finalize clamps them to the end of the run
+                self.trace.begin(
+                    FABRIC_TID, "fabric", now,
+                    now + ev.duration if ev.duration > 0 else None,
+                    scope=ev.scope, bw_scale=ev.bw_scale,
+                    extra_latency=ev.extra_latency)
             self.reprice_inflight(now)
             if ev.duration > 0:      # re-price again when the window closes
                 self.push(now + ev.duration, "reprice", {})
@@ -520,18 +617,23 @@ class _Sim:
                self.pool.trainers.index(best)]
         self.pool = do_merge(self.pool, ids, step=self.rts[leaver.tid].round)
         lrt = self.rts[leaver.tid]
+        self.truncate_spans(lrt, now, "left")
         lrt.alive = False
         # nodes go back to the spare pool; the leaver's data shards were
         # re-homed to the survivor by do_merge, so later joins draw on
         # the originally-provisioned spare streams only
         self.free_nodes.extend(lrt.nodes)
         brt = self.rts[best.tid]
+        self.truncate_spans(brt, now, "absorbed_leave")
         brt.gen += 1
         brt.inflight = False
         brt.pending = None
         brt.worker_params = None
         if brt.round < brt.target:
             self.start_round(brt, now)
+        if self.trace is not None:
+            self.trace.trainer_dead(leaver.tid, now)
+            self.trace.instant(leaver.tid, "leave", now, into=best.tid)
         self.report.applied_events.append(
             {"time": now, "kind": "leave", "tid": leaver.tid,
              "into": best.tid})
@@ -565,6 +667,16 @@ class _Sim:
               "src": src.nodes[0], "dst": nodes[0],
               "t_last": now, "frac": 0.0, "cur_total": xfer,
               "t_end": now + xfer, "log": log}
+        if self.trace is not None:
+            # the joiner is alive (and comm-blocked) from the moment its
+            # parameters start shipping
+            self.trace.trainer_alive(tr.tid, now)
+            self.trace.instant(tr.tid, "join", now,
+                               cloned_from=src.tr.tid)
+            ev["span"] = self.trace.begin(
+                tr.tid, "xfer", now, now + xfer, payload_bytes=payload,
+                src=src.nodes[0].name, dst=nodes[0].name,
+                cloned_from=src.tr.tid)
         self.xfers.append(ev)
         self.push(ev["t_end"], "xfer", ev)
 
@@ -588,6 +700,7 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
                 eval_fn: Optional[Callable] = None,
                 fixed_batch: Optional[int] = None,
                 scenario=(),
+                trace: Optional[Trace] = None,
                 verbose: bool = False):
     """Train AdLoCo on a simulated heterogeneous cluster.
 
@@ -606,6 +719,16 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
     passing both ``backend=`` and ``network=`` is an error.
     ``scenario`` is a sequence of :class:`ClusterEvent`\\ s or the name
     of a registered scenario (see ``repro.cluster.scenarios``).
+    ``trace`` is an optional :class:`~repro.cluster.trace.Trace` (or
+    ``True`` to allocate one) the event loop records typed spans into —
+    inner-compute blocks, outer collectives, stats reductions, join
+    transfers, fabric windows — plus instant annotations for
+    re-pricings, merges, joins, leaves and slowdowns; real backends add
+    measured wall-clock spans.  Recording never changes the schedule,
+    and with the default ``None`` the instrumentation is a no-op.  The
+    populated trace is also attached to ``ClusterReport.trace`` so
+    ``report.summary(extended=True)`` can expose the utilization ledger
+    and the overlap fraction.
     Returns (TrainerPoolState, History, ClusterReport) — the History
     carries ``sim_time`` so convergence can be plotted against the
     simulated clock.
@@ -635,10 +758,14 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
     backend = backend.for_run()
     backend.bind(profiles)
     backend.validate(acfg, policy=policy, k=k, M=M, scenario=scenario)
+    if trace is True:
+        trace = Trace()
+    if trace is not None:
+        backend.attach_trace(trace)
 
     sim = _Sim(loss_fn, acfg, policy=policy, profiles=list(profiles),
                backend=backend, eval_fn=eval_fn, fixed_batch=fixed_batch,
-               verbose=verbose)
+               verbose=verbose, trace=trace)
     sim.pool = sim.rnd.init_pool(init_params_list, streams[:k * M])
     sim.pool.comms = TimedCommsMeter()
     if fixed_batch is not None and not acfg.adaptive:
@@ -650,6 +777,8 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
     for i, t in enumerate(sim.pool.trainers):
         sim.rts[t.tid] = _TrainerRT(
             tr=t, nodes=list(profiles[i * M:(i + 1) * M]), target=T)
+        if trace is not None:
+            trace.trainer_alive(t.tid, 0.0)
 
     for ev in sorted(scenario, key=lambda e: e.time):
         sim.push(ev.time, "scenario", {"ev": ev})
@@ -676,5 +805,8 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
         else:
             sim.on_scenario(when, payload["ev"])
 
+    if trace is not None:
+        trace.finalize(sim.report.sim_time)
+        sim.report.trace = trace
     pool = consolidate(sim.pool, step=T)
     return pool, sim.hist, sim.report

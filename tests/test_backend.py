@@ -10,6 +10,7 @@ via ``repro.cluster.launch_mp.run_mp``; everything else runs in-process
 identity, which is exactly what makes it comparable bit-for-bit).
 """
 import dataclasses
+import json
 
 import numpy as np
 import pytest
@@ -282,3 +283,35 @@ def test_two_process_adaptive_switch_run_agrees():
     # identical batch ints feed identical pure-float pricing
     assert res["sim_time"] == ref["sim_time"]
     assert res["real_comm_time"] > 0.0
+
+
+@pytest.mark.mp
+def test_two_process_trace_digest_matches_sim(tmp_path):
+    """The trace layer's lockstep contract: the sim-span trace recorded
+    inside a real 2-process run must be digest-identical to the
+    SimBackend reference (both backends drive the same deterministic
+    event loop with analytic span payloads), while the real backend
+    additionally lays measured wall-clock spans on the second clock —
+    one per executed collective, each with nonzero duration."""
+    from repro.cluster import Trace, validate_perfetto
+    out = tmp_path / "mp.perfetto.json"
+    res = run_mp(2, rounds=4, policy="async", adaptive=True,
+                 trace=str(out))
+    ref = run_sim(2, rounds=4, policy="async", adaptive=True, trace=True)
+    assert res["trace_digest"] == ref["trace_digest"]
+    assert res["overlap_frac"] == ref["overlap_frac"] > 0.0
+    assert res["utilization"] == ref["utilization"]
+    # real wall-clock spans: one per executed outer collective, two per
+    # stats reduction (the composition's vector + scalar-moment phases)
+    assert res["num_real_spans"] == (res["num_syncs"]
+                                     + 2 * res["num_stats_syncs"])
+    assert res["real_span_time"] > 0.0
+    # the exported Perfetto file carries both clocks and validates
+    data = json.loads(out.read_text())
+    assert validate_perfetto(data) == []
+    tr = Trace.from_perfetto(data)
+    assert tr.sim_digest() == ref["trace_digest"]
+    reals = tr.real_spans()
+    assert len(reals) == res["num_real_spans"]
+    assert sum(s.kind == "outer" for s in reals) == res["num_syncs"]
+    assert all(s.duration > 0.0 for s in reals)

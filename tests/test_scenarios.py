@@ -372,8 +372,10 @@ def test_sync_policy_matches_legacy_loop_under_tree_fabric():
 def test_join_transfer_spanning_window_edge_is_repriced():
     """A flash_crowd_join parameter transfer in flight when a congestion
     window opens must be re-priced — fraction done credited, remainder
-    re-costed — not left at its launch-time price.  The old
-    single-pricing answer is pinned below as the *wrong* value."""
+    re-costed.  The join record in ``applied_events`` keeps its
+    launch-time price (records are immutable once appended); the
+    re-pricing lands as an explicit ``xfer_reprice`` annotation whose
+    ``xfer_s`` is the effective launch-to-arrival total."""
     join_t, window_t = 0.02, 0.025
     # duration <= 0: the window never closes, so the transfer crosses
     # exactly one edge and the expected value below has a closed form
@@ -408,6 +410,12 @@ def test_join_transfer_spanning_window_edge_is_repriced():
     new_total = net.point_to_point_time(payload, profiles[0], profiles[6],
                                         now=window_t)
     expected = (window_t - join_t) + (1.0 - frac_done) * new_total
-    assert join["xfer_s"] == pytest.approx(expected, rel=1e-12)
-    # the bug this fixes: pricing once at launch undershoots badly
-    assert join["xfer_s"] > 3.0 * old_single_price
+    # the join record is a snapshot of the launch-time decision...
+    assert join["xfer_s"] == pytest.approx(old_single_price, rel=1e-12)
+    # ...and the re-price is its own annotation with the effective total
+    rp = next(e for e in rep.applied_events
+              if e["kind"] == "xfer_reprice")
+    assert rp["time"] == window_t and rp["tid"] == join["tid"]
+    assert rp["xfer_s"] == pytest.approx(expected, rel=1e-12)
+    # the bug the re-pricing fixes: pricing once at launch undershoots
+    assert rp["xfer_s"] > 3.0 * old_single_price

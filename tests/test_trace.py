@@ -1,0 +1,325 @@
+"""Tests for the structured trace layer (``repro.cluster.trace``).
+
+Three tiers of pinning:
+
+* **Golden trace digests** — the full sim-span schema (every compute /
+  collective / stats / transfer / fabric span plus instant annotations)
+  for ``adaptive_ramp`` and ``correlated_pod_failure`` is digest-pinned
+  in ``tests/goldens/traces.json``, and a complete Perfetto export of
+  the ``adaptive_ramp`` trace is committed at
+  ``tests/goldens/adaptive_ramp.perfetto.json`` — it must validate and
+  round-trip digest-identically.  Regenerate both with
+  ``--update-goldens`` (same switch as the scenario goldens).
+* **Ledger partition property** — for randomized scenarios (scripted
+  slowdowns, leaves, joins, fabric windows at fuzzed times),
+  ``busy + blocked + idle == alive`` holds exactly for every trainer;
+  runs under hypothesis when installed, over a fixed seed sweep
+  otherwise.
+* **Invariants** — sync's overlap fraction is exactly 0.0 and async's
+  strictly positive on the same fixture; tracing never perturbs
+  scheduling (summary with and without a trace attached is identical);
+  the default ``ClusterReport.summary()`` is byte-identical with the
+  extended fields opt-in only.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.cluster import ClusterEvent, Trace, run_cluster, validate_perfetto
+from repro.cluster.trace import (_clip, _overlap_total, _subtract, _total,
+                                 _union)
+
+from tests.test_adloco_integration import QuadStream, _quad_setup, quad_loss
+from tests.test_scenarios import (ACFG, ACFG_ADAPTIVE, TOY, UPDATE_CMD,
+                                  _tree_cluster)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                  # bare jax image: seed sweep instead
+    HAVE_HYPOTHESIS = False
+
+GOLDENS_PATH = pathlib.Path(__file__).parent / "goldens" / "traces.json"
+PERFETTO_GOLDEN = (pathlib.Path(__file__).parent / "goldens"
+                   / "adaptive_ramp.perfetto.json")
+
+
+# ------------------------------------------------------------ harnesses
+
+def _run_adaptive_traced(name):
+    """The test_scenarios adaptive harness with a trace attached."""
+    from repro.cluster import (Topology, interleave_pods,
+                               make_pod_profiles)
+    profiles = make_pod_profiles([5, 5], ratio=2.0, **TOY)
+    interleaved = interleave_pods(profiles)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3)
+    prob, inits, streams = _quad_setup(k=3, M=2)
+    tr = Trace()
+    out = run_cluster(quad_loss, inits, streams, ACFG_ADAPTIVE,
+                      policy="async", profiles=interleaved, network=topo,
+                      scenario=name, trace=tr)
+    return tr, out
+
+
+def _run3_traced(name):
+    """The test_scenarios 3-level elastic harness with a trace."""
+    interleaved, topo = _tree_cluster()
+    prob, inits, streams = _quad_setup(k=3, M=2)
+    streams = streams + [QuadStream(prob, 100 + i) for i in range(2)]
+    tr = Trace()
+    out = run_cluster(quad_loss, inits, streams, ACFG, policy="elastic",
+                      profiles=interleaved, network=topo, scenario=name,
+                      fixed_batch=4, trace=tr)
+    return tr, out
+
+
+_TRACED = {"adaptive_ramp": _run_adaptive_traced,
+           "correlated_pod_failure": _run3_traced}
+
+_MEMO = {}
+
+
+def _memo(name):
+    if name not in _MEMO:
+        _MEMO[name] = _TRACED[name](name)
+    return _MEMO[name]
+
+
+# ------------------------------------------------------- golden digests
+
+@pytest.mark.parametrize("name", sorted(_TRACED))
+def test_trace_digest_matches_golden(name, request):
+    tr, _ = _memo(name)
+    digest = tr.sim_digest()
+    stored = json.loads(GOLDENS_PATH.read_text())
+    golden = stored.get(name)
+    if digest == golden:
+        return
+    if request.config.getoption("--update-goldens"):
+        stored[name] = digest
+        GOLDENS_PATH.write_text(json.dumps(stored, indent=2,
+                                           sort_keys=True) + "\n")
+        pytest.skip(f"trace golden for {name!r} updated: "
+                    f"{golden} -> {digest}; commit "
+                    f"tests/goldens/traces.json")
+    pytest.fail(
+        f"scenario {name!r} produced a different span trace\n"
+        f"  stored digest:   {golden}\n"
+        f"  current digest:  {digest}\n"
+        f"If the schedule/span-schema change is intended, regenerate "
+        f"with:\n  {UPDATE_CMD.replace('test_scenarios', 'test_trace')}\n"
+        f"and commit the tests/goldens/traces.json diff.")
+
+
+def test_committed_perfetto_golden_validates_and_round_trips(request):
+    """The committed Perfetto export is the schema's integration test:
+    it must pass ``trace_report --validate`` and rebuild into a Trace
+    whose sim digest matches the live ``adaptive_ramp`` run."""
+    tr, _ = _memo("adaptive_ramp")
+    if request.config.getoption("--update-goldens"):
+        PERFETTO_GOLDEN.write_text(
+            json.dumps(tr.to_perfetto(), indent=1, sort_keys=True) + "\n")
+    data = json.loads(PERFETTO_GOLDEN.read_text())
+    assert validate_perfetto(data) == []
+    rebuilt = Trace.from_perfetto(data)
+    assert rebuilt.sim_digest() == tr.sim_digest()
+    # and the rebuild is lossless: exporting again reproduces the file
+    assert json.loads(json.dumps(rebuilt.to_perfetto(),
+                                 sort_keys=True)) == data
+
+
+def test_trace_report_cli_on_committed_golden(tmp_path, capsys):
+    from repro.cluster.trace_report import main
+    assert main(["--validate", str(PERFETTO_GOLDEN)]) == 0
+    assert "schema OK" in capsys.readouterr().out
+    assert main([str(PERFETTO_GOLDEN)]) == 0
+    out = capsys.readouterr().out
+    assert "overlap_frac=" in out and "utilization=" in out
+    # corrupted file -> nonzero exit
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"traceEvents": [{"ph": "X"}]}')
+    assert main(["--validate", str(bad)]) == 1
+
+
+# ------------------------------------------- ledger partition property
+
+def _random_scenario(rng, n_nodes):
+    """Scripted chaos at fuzzed times: slowdowns, a leave, a join, and
+    fabric windows (some of which re-price in-flight collectives)."""
+    events = []
+    for _ in range(rng.integers(0, 4)):
+        events.append(ClusterEvent(
+            time=float(rng.uniform(0.0, 0.2)), kind="slowdown",
+            node=int(rng.integers(0, n_nodes)),
+            factor=float(rng.uniform(1.5, 6.0)),
+            duration=float(rng.uniform(0.01, 0.2))))
+    for _ in range(rng.integers(0, 3)):
+        events.append(ClusterEvent(
+            time=float(rng.uniform(0.0, 0.2)), kind="fabric",
+            bw_scale=float(rng.uniform(0.05, 0.8)),
+            extra_latency=float(rng.uniform(0.0, 0.01)),
+            duration=float(rng.uniform(0.02, 0.15))))
+    if rng.random() < 0.5:
+        events.append(ClusterEvent(time=float(rng.uniform(0.02, 0.1)),
+                                   kind="leave"))
+    if rng.random() < 0.5:
+        events.append(ClusterEvent(time=float(rng.uniform(0.05, 0.2)),
+                                   kind="join"))
+    return sorted(events, key=lambda e: e.time)
+
+
+def _check_partition(seed):
+    import dataclasses
+
+    import numpy as np
+
+    from repro.cluster import make_heterogeneous_profiles
+    rng = np.random.default_rng(seed)
+    spare = 2
+    prob, inits, streams = _quad_setup(k=3, M=2)
+    streams = streams + [QuadStream(prob, 100 + i)
+                         for i in range(spare * 2)]
+    n_nodes = 6 + spare * 2
+    profiles = make_heterogeneous_profiles(
+        n_nodes, ratio=float(rng.uniform(1.0, 4.0)), **TOY)
+    acfg = dataclasses.replace(ACFG, num_outer_steps=6)
+    tr = Trace()
+    _, _, rep = run_cluster(
+        quad_loss, inits, streams, acfg,
+        policy=str(rng.choice(["sync", "async", "elastic"])),
+        profiles=profiles, scenario=_random_scenario(rng, n_nodes),
+        fixed_batch=4, trace=tr)
+    ledger = tr.utilization()        # raises AssertionError on violation
+    assert set(ledger) == set(tr.alive)
+    for tid, led in ledger.items():
+        assert led["alive"] >= 0.0
+        assert led["busy"] >= 0.0 and led["blocked"] >= 0.0 \
+            and led["idle"] >= 0.0
+        assert (led["busy"] + led["blocked"] + led["idle"]
+                == pytest.approx(led["alive"], rel=1e-9, abs=1e-12))
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2 ** 32 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_ledger_partitions_every_alive_span(seed):
+        _check_partition(seed)
+else:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_ledger_partitions_every_alive_span(seed):
+        _check_partition(seed)
+
+
+# ------------------------------------------------------------ invariants
+
+def test_sync_overlap_is_zero_async_positive():
+    """The ROADMAP item-1 metric's calibration: sync is a barrier, so
+    no collective can coincide with compute on the same trainer; async
+    launches the collective and immediately starts the next round."""
+    from repro.cluster import make_heterogeneous_profiles
+    fracs = {}
+    for policy in ("sync", "async"):
+        prob, inits, streams = _quad_setup(k=3, M=2)
+        profiles = make_heterogeneous_profiles(6, ratio=2.0, **TOY)
+        tr = Trace()
+        run_cluster(quad_loss, inits, streams, ACFG, policy=policy,
+                    profiles=profiles, fixed_batch=4, trace=tr)
+        fracs[policy] = tr.overlap_fraction()
+    assert fracs["sync"] == 0.0
+    assert fracs["async"] > 0.0
+
+
+def test_tracing_does_not_perturb_scheduling():
+    """trace=None and trace=Trace() must produce identical reports —
+    recording is observation, never participation."""
+    from repro.cluster import make_heterogeneous_profiles
+    reps = []
+    for trace in (None, Trace()):
+        prob, inits, streams = _quad_setup(k=3, M=2)
+        profiles = make_heterogeneous_profiles(6, ratio=2.0, **TOY)
+        _, _, rep = run_cluster(quad_loss, inits, streams, ACFG,
+                                policy="async", profiles=profiles,
+                                fixed_batch=4, trace=trace)
+        reps.append(rep)
+    assert reps[0].summary() == reps[1].summary()
+    assert reps[0].applied_events == reps[1].applied_events
+    assert reps[0].trace is None and reps[1].trace is not None
+
+
+def test_extended_summary_is_opt_in():
+    """satellite 1: the default summary dict is untouched (the golden
+    digests depend on it); extended=True adds the new fields."""
+    tr, (_, _, rep) = _memo("adaptive_ramp")
+    default = rep.summary()
+    assert set(default) == {"policy", "sim_time", "compute_time",
+                            "comm_time", "num_syncs", "rounds"}
+    ext = rep.summary(extended=True)
+    # the shared keys are byte-identical...
+    assert {k: ext[k] for k in default} == default
+    # ...and the opt-in tier carries the wire/stats/trace metrics
+    assert ext["num_stats_syncs"] == rep.num_stats_syncs
+    assert ext["real_comm_time"] == rep.real_comm_time
+    assert ext["overlap_frac"] == tr.overlap_fraction()
+    assert 0.0 <= ext["utilization"] <= 1.0
+    assert ext["utilization"] + ext["blocked_frac"] + ext["idle_frac"] \
+        == pytest.approx(1.0)
+
+
+def test_run_cluster_accepts_trace_true():
+    """``trace=True`` is sugar for a fresh Trace (the launch_mp path)."""
+    from repro.cluster import make_heterogeneous_profiles
+    prob, inits, streams = _quad_setup(k=3, M=2)
+    profiles = make_heterogeneous_profiles(6, ratio=2.0, **TOY)
+    _, _, rep = run_cluster(quad_loss, inits, streams, ACFG,
+                            policy="sync", profiles=profiles,
+                            fixed_batch=4, trace=True)
+    assert isinstance(rep.trace, Trace)
+    assert rep.trace.sim_spans(("compute",))
+
+
+def test_xfer_reprice_annotation_in_trace():
+    """The satellite-2 fix end-to-end: a join transfer crossing a
+    fabric window edge leaves the join record at its launch price and
+    lands the re-price as an instant + an extended xfer span."""
+    import dataclasses
+
+    from repro.cluster import (NetworkModel, make_heterogeneous_profiles)
+    from repro.cluster.scenarios import build_scenario
+    join_t, window_t = 0.02, 0.025
+    scen = (build_scenario("flash_crowd_join", start=join_t, joins=1)
+            + [ClusterEvent(time=window_t, kind="fabric", bw_scale=1e-3,
+                            extra_latency=0.05, duration=0.0)])
+    acfg = dataclasses.replace(ACFG, num_outer_steps=12)
+    toy = dict(TOY, link_bw=6e3)
+    prob, inits, streams = _quad_setup(k=3, M=2)
+    streams = streams + [QuadStream(prob, 100 + i) for i in range(2)]
+    profiles = make_heterogeneous_profiles(8, **toy)
+    tr = Trace()
+    _, _, rep = run_cluster(quad_loss, inits, streams, acfg,
+                            policy="elastic", profiles=profiles,
+                            network=NetworkModel(), scenario=scen,
+                            fixed_batch=4, trace=tr)
+    rp = next(e for e in rep.applied_events if e["kind"] == "xfer_reprice")
+    xfer = next(s for s in tr.sim_spans(("xfer",)))
+    assert xfer.t0 == join_t
+    assert xfer.t1 - xfer.t0 == pytest.approx(rp["xfer_s"], rel=1e-12)
+    inst = next(e for e in tr.events
+                if e.kind == "reprice" and e.payload["target"] == "xfer")
+    assert inst.t == window_t
+
+
+# --------------------------------------------------- interval arithmetic
+
+def test_interval_helpers():
+    assert _union([(3, 4), (0, 1), (0.5, 2)]) == [(0, 2), (3, 4)]
+    assert _union([(0, 0), (1, 1)]) == []     # empty intervals dropped
+    assert _clip([(0, 2), (3, 4)], 1, 3.5) == [(1, 2), (3, 3.5)]
+    assert _total([(0, 2), (3, 4)]) == 3
+    assert _subtract([(0, 10)], [(2, 3), (5, 7)]) \
+        == [(0, 2), (3, 5), (7, 10)]
+    assert _subtract([(0, 5)], [(0, 5)]) == []
+    assert _subtract([(0, 5)], []) == [(0, 5)]
+    assert _overlap_total((1, 4), [(0, 2), (3, 10)]) == 2
+    assert _overlap_total((5, 6), [(0, 2)]) == 0

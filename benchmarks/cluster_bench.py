@@ -15,9 +15,13 @@ swept as *adaptive vs fixed-batch* arms instead (async policy, 2-pod
 topology): the adaptive arm pays a priced batch-stats reduction every
 round and its rounds lengthen as the batch ramps, the fixed arm keeps
 the starting batch — the reported time-to-target difference is the
-paper's adaptive-batching claim on the simulated clock.  Both arms are
-part of the default ``--smoke`` run, so the committed
-``BENCH_cluster.json`` baseline gates them on every push.
+paper's adaptive-batching claim on the simulated clock.  Under the
+async policy the stats phase rides the outer sync as one fused
+``piggyback`` collective, so the adaptive rows also report
+``stats_comm_s``/``piggyback_comm_s`` and the summary gates that the
+standalone stats share is exactly zero.  Both arms are part of the
+default ``--smoke`` run, so the committed ``BENCH_cluster.json``
+baseline gates them on every push.
 
   PYTHONPATH=src python benchmarks/cluster_bench.py           # full
   PYTHONPATH=src python benchmarks/cluster_bench.py --smoke   # CI job
@@ -80,10 +84,12 @@ SCENARIO_NAMES3 = ("correlated_pod_failure", "diurnal_congestion",
 #: and longer rounds with a better time-to-target
 ADAPTIVE_SCENARIOS = ("adaptive_ramp", "congested_adaptive")
 
-# outer_momentum=0.5: high Nesterov momentum (0.9) is underdamped under
-# the async policy's one-round staleness (see repro.cluster docstring);
-# 0.5 keeps sync and async per-round trajectories comparable so the
-# remaining difference is purely clock overlap.
+# outer_momentum=0.5 keeps sync and async per-round trajectories
+# comparable so the remaining difference is purely clock overlap.  (0.9
+# is underdamped under the async one-round staleness unless
+# acfg.delay_compensation=True rescales it by the measured delay — the
+# regression is pinned in tests/test_cluster.py; the bench keeps 0.5 so
+# both policies run the identical outer optimizer.)
 BASE = AdLoCoConfig(num_outer_steps=16, num_inner_steps=5, lr_inner=0.05,
                     lr_outer=0.7, outer_momentum=0.5, nodes_per_gpu=2,
                     num_init_trainers=3, initial_batch_size=2,
@@ -223,6 +229,9 @@ def bench_adaptive_scenario(name: str, arm: str, T: int, *,
     target = 0.5 * prob.noise ** 2 * 1.05
     b_final = max(hist.requested_batches[-1]) if hist.requested_batches \
         else 0
+    # per-kind comm totals: under the async+adaptive piggyback the
+    # standalone "stats" share collapses into fused "piggyback" spans
+    byk = tr.overlap_by_kind()
     return {
         "sim_time": rep.sim_time,
         "comm_time": rep.comm_time,
@@ -232,6 +241,8 @@ def bench_adaptive_scenario(name: str, arm: str, T: int, *,
         "stats_syncs": rep.num_stats_syncs,
         "b_final": b_final,
         "accum": any(m == "accum" for ms in hist.modes for m in ms),
+        "stats_comm_s": byk["stats"]["total"],
+        "piggyback_comm_s": byk["piggyback"]["total"],
         "events": [e["kind"] for e in rep.applied_events],
         **_finish_trace(tr, f"adaptive_{name}_{arm}"),
     }
@@ -239,12 +250,14 @@ def bench_adaptive_scenario(name: str, arm: str, T: int, *,
 
 def run_adaptive_scenarios(T: int, names, levels=None):
     """Adaptive vs fixed-batch time-to-target per adaptive scenario."""
-    rows, t2ts = [], {}
+    rows, t2ts, piggy = [], {}, {}
     lv = levels if levels is not None else 2
     for name in names:
         for arm in ("adaptive", "fixed"):
             r = bench_adaptive_scenario(name, arm, T, levels=lv)
             t2ts[(name, arm)] = r["t2t"]
+            piggy[(name, arm)] = (r["piggyback_comm_s"],
+                                  r["stats_comm_s"])
             t2t = f"{r['t2t']:.4f}" if r["t2t"] is not None else "none"
             rows.append(row(
                 f"cluster/scenario/{name}/{arm}", r["sim_time"] * 1e6,
@@ -255,18 +268,30 @@ def run_adaptive_scenarios(T: int, names, levels=None):
                 f"b_final={r['b_final']};accum={r['accum']};"
                 f"utilization={r['utilization']:.4f};"
                 f"overlap_frac={r['overlap_frac']:.4f};"
+                f"stats_comm_s={r['stats_comm_s']:.4f};"
+                f"piggyback_comm_s={r['piggyback_comm_s']:.4f};"
                 f"events={'+'.join(r['events']) or 'none'}"))
-    # adaptive wins when it reaches the near-noise-floor target and the
-    # fixed batch is either slower or (typically) never gets there at
-    # all — a None fixed-arm t2t IS the adaptive-batching headline
+    # adaptive wins when it reaches the near-noise-floor target on the
+    # (simulated) wall clock and the fixed batch is either slower or
+    # (typically) never gets there at all — a None fixed-arm t2t IS the
+    # adaptive-batching headline
     wins = {name: (t2ts[(name, "adaptive")] is not None
                    and (t2ts[(name, "fixed")] is None
                         or t2ts[(name, "adaptive")]
                         < t2ts[(name, "fixed")]))
             for name in names}
+    # the piggyback claim: every async+adaptive stats phase rides a
+    # fused outer collective — the standalone stats share of comm time
+    # must be exactly zero while piggyback spans carry the payload
+    absorbed = {name: (piggy[(name, "adaptive")][0] > 0.0
+                       and piggy[(name, "adaptive")][1] == 0.0)
+                for name in names}
     rows.append(row(
         "cluster/adaptive-summary", 0.0,
-        ";".join(f"adaptive_faster_{n}={wins[n]}" for n in names)))
+        ";".join(f"adaptive_faster_{n}={wins[n]}" for n in names)
+        + ";"
+        + ";".join(f"piggyback_absorbs_stats_{n}={absorbed[n]}"
+                   for n in names)))
     return rows
 
 
@@ -317,7 +342,11 @@ def run_scenarios(T: int, names, levels=None):
             + ";".join(f"async_overlap_gt_sync_{n}={olap[n]}"
                        for n in regular)))
     if adaptive:
-        rows.extend(run_adaptive_scenarios(T, adaptive, levels))
+        # the async piggyback makes every batch plan one round stale,
+        # so the ramp needs ~3x the rounds of the fixed-policy sweeps
+        # to cross the switch boundary, reach the noise-floor target
+        # and show the adaptive-vs-fixed win the summary row gates
+        rows.extend(run_adaptive_scenarios(3 * T, adaptive, levels))
     return rows
 
 
@@ -443,6 +472,15 @@ def main(argv=None) -> int:
                 kv.split("=")[1] == "True"
                 for kv in r["derived"].split(";")
                 if kv.startswith("async_overlap_gt_sync_"))
+        if r["name"] == "cluster/adaptive-summary":
+            # adaptive batching must win the (simulated) wall clock to
+            # target on every adaptive scenario, and piggybacking must
+            # have absorbed every standalone stats collective
+            ok = ok and all(
+                kv.split("=")[1] == "True"
+                for kv in r["derived"].split(";")
+                if kv.startswith(("adaptive_faster_",
+                                  "piggyback_absorbs_stats_")))
     # read the baseline BEFORE writing --json: if both flags resolve to
     # the same file (case-insensitive filesystems!), writing first would
     # clobber the baseline and the gate would compare it to itself

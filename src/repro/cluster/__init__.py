@@ -61,6 +61,53 @@ Execution backends
     sync/async policies, one trainer — merging and elastic events need
     the in-process pool and stay simulator-only for now.
 
+The dispatch/handle contract (nonblocking collectives)
+------------------------------------------------------
+Backends expose the outer sync as a split pair, and the runtime drives
+it at two different simulated instants:
+
+* ``dispatch_outer(worker_params, stats_vec=None) -> handle`` is called
+  at the collective's *launch* point.  It must start the reduction and
+  return without waiting for the result: ``JaxProcessBackend`` enqueues
+  the jitted ``pmean`` chain via JAX async dispatch (no
+  ``block_until_ready``), so the wire works while the caller keeps
+  computing; ``SimBackend`` evaluates eagerly (pure in-process
+  arithmetic — the handle just carries the finished result).
+* ``wait_outer(handle) -> (stacked, stats_total_or_None)`` is called at
+  the collective's *arrival* (the priced completion event).  It blocks
+  until the result is ready, records the true in-flight window
+  (dispatch -> ready) as a ``real``-clock span, and hands back the
+  reduced params plus the SUM-reduced phase-1 stats vector when one was
+  fused in.
+
+Dispatch order is part of the lockstep contract: every process reaches
+every ``dispatch_outer`` in the same order with the same shapes
+(first-time shapes warm up with a blocking lockstep execution).  Under
+``policy="async"`` the runtime dispatches round ``r``'s outer sync and
+immediately starts round ``r+1``'s inner steps — the overlap is now a
+measured wall-clock fact (``Trace.overlap_fraction(clock="real")``),
+not just the simulated schedule's claim.  Handles may be abandoned
+without ``wait_outer`` only where preemption can cancel a trainer
+mid-flight, which the simulator-only policies are the only ones to
+allow — sim handles are plain data and safe to drop.
+
+Piggybacked stats (payload layout)
+---------------------------------
+Under ``policy="async"`` with ``acfg.adaptive=True`` the runtime does
+not pay a standalone gradient-order stats collective: the phase-1
+``[colsum, count]`` vector (``n + 1`` floats for an ``n``-param model)
+rides the next outer dispatch as ONE fused collective — traced and
+priced as kind ``"piggyback"`` with ``payload_bytes = params_bytes +
+stats_payload_bytes``, counted in ``num_stats_syncs``.  On
+``JaxProcessBackend`` the fused tree is ``{"params": <stacked pytree>,
+"stats": <(1, n+1) float32>}`` reduced by the same ``pmean`` chain; the
+phase-2 five scalar moments stay a small standalone ``stats`` reduction
+at fold time (``stats_reducer``).  The batch decision folds at the
+fused collective's arrival — one round stale, exactly the
+``BatchPlanProtocol`` semantics every rank already agrees on.
+Sync/elastic policies keep the inline gated stats path, preserving
+bit-parity with the legacy host loop.
+
 ``python -m repro.cluster.launch_mp --procs 2 --rounds 1 --check`` is
 the zero-to-parity smoke: it spawns the processes, runs the canonical
 quadratic through the real backend, and asserts the final parameters
@@ -90,7 +137,9 @@ prices every stats reduction as a collective over the trainer's nodes
 re-priced at fabric window edges like any in-flight collective, and
 batch growth feeds the per-node roofline compute — so sync, async and
 elastic all experience the ramp on the clock, not just in the
-numerics.
+numerics.  Async runs fuse phase 1 onto the outer sync (see
+*Piggybacked stats* above), so adaptive rounds there pay one
+gradient-order collective, not two.
 
 Reporting & tracing
 -------------------
@@ -153,9 +202,12 @@ Every domain carries its own time-varying ``FabricSchedule``: scenarios
 open ``FabricWindow``\\ s — bandwidth scaled by ``bw_scale``, hops
 paying ``extra_latency`` — scoped to ``"all"``, the leaf level
 (``"intra"``), every internal level (``"inter"``), one level
-(``"level:<k>"``, 0 = leaves), or one named domain
-(``"domain:<name>"``), so a window can hit one rack's links without
-touching the rest of the fabric.  The runtime re-prices in-flight
+(``"level:<k>"``, 0 = leaves), one named domain
+(``"domain:<name>"``), or one named domain's *uplink edge* into its
+parent (``"edge:<name>"`` — per-path fabric asymmetry: only
+collectives and transfers whose routes cross that edge pay, the
+siblings' paths stay nominal), so a window can hit one rack's links
+without touching the rest of the fabric.  The runtime re-prices in-flight
 collectives *and* join-time parameter transfers at every window edge
 (fraction done credited, remainder re-costed).
 
@@ -175,7 +227,9 @@ that couple node dynamics with fabric windows:
 joining pods degrades, together), ``diurnal_congestion`` (piecewise-
 constant cosine bandwidth schedule), ``rack_flap`` (one named rack
 domain's level-0 fabric oscillates) and ``straggler_cascade``
-(staggered node slowdowns inside an open congestion window).  The
+(staggered node slowdowns inside an open congestion window), plus
+``drifted_merge`` (one trainer slowed until it drifts past the merge
+window, pinning the skip-the-laggard merge semantics).  The
 adaptive arms ``adaptive_ramp`` (clean fabric; the ramp lives in the
 config) and ``congested_adaptive`` (a deep congestion window colliding
 with the middle of the batch ramp) are meant to run with
@@ -199,18 +253,25 @@ Which sync policy should I use?
     when outer syncs are expensive — congested or partitioned fabrics,
     slow cross-pod bottlenecks, large models, high heterogeneity.
     Expect a small loss-trajectory perturbation (one round of delay) in
-    exchange for hiding comm time entirely.  Keep
-    ``outer_momentum <= 0.5``: high outer Nesterov momentum (0.9) is
-    underdamped under the one-round staleness, and the caveat binds
-    *harder* on real backends — a physical fabric's collective latency
-    is exactly the staleness window, and divergence there wastes real
-    machine hours, not simulated ones.
+    exchange for hiding comm time entirely.  High outer Nesterov
+    momentum (0.9) is underdamped under the one-round staleness; set
+    ``acfg.delay_compensation=True`` and the outer step scales the
+    momentum by the *measured* staleness of each applied
+    pseudo-gradient (``mu / (1 + delay)`` — 0.9 behaves like 0.45 at
+    the async steady-state delay of one round, and sync runs, at delay
+    0, are untouched), so the previously diverging configs converge
+    (``tests/test_cluster.py`` pins the regression).
 ``elastic``
     ``async`` plus scripted :class:`ClusterEvent`\\ s — trainers leave
     (folded into the pool via ``mit.do_merge``) and join (cloned from
     the most-advanced trainer onto spare nodes/streams).  Pick it to
     study preemptible/spot capacity and pool-size dynamics; pass extra
     streams and profiles beyond k*M to give joiners somewhere to land.
+    Merges are round-tagged and fire on time: a trainer whose round
+    counter has drifted behind the merge round by
+    ``acfg.merge_drift_window`` or more is *skipped* (recorded in the
+    applied event's ``skipped`` list) rather than stalling the merge
+    and folding rounds-stale params into the pool.
 
 ``benchmarks/cluster_bench.py`` compares sync/async under 1x/2x/4x node
 heterogeneity, across registered scenarios on a 2-pod topology, and

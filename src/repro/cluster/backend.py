@@ -123,6 +123,41 @@ class CollectiveBackend:
         other processes) -> pytree with a leading worker axis."""
         raise NotImplementedError
 
+    # ------------------------------------------- dispatch/handle split
+    #
+    # The nonblocking contract: ``dispatch_outer`` *starts* the outer
+    # collective (optionally fused with the phase-1 batch-stats vector —
+    # Lau-style piggybacking) and returns an opaque handle immediately;
+    # ``wait_outer`` blocks until the wire work is done, records the
+    # *true in-flight window* (dispatch -> ready) as the measured
+    # wall-clock span, and returns the results.  The runtime dispatches
+    # at the sim's launch point and waits at the rebase/fold point, so
+    # the next round's inner steps run while the collective is in
+    # flight.  Every rank reaches both calls in the same (lockstep)
+    # event order, so dispatch order is identical everywhere.  A handle
+    # must be waited before the next dispatch on the same backend;
+    # handles abandoned by sim-side preemption only occur on backends
+    # whose ``validate`` admits preemption sources (i.e. the sim).
+
+    def dispatch_outer(self, worker_params: List[Any], *,
+                       stats_vec: Optional[Any] = None) -> Any:
+        """Start the outer reduction; with ``stats_vec`` (the phase-1
+        ``[colsum, b]`` f32 vector) the collective is fused: one wire
+        operation reduces both payloads.  Returns an opaque handle."""
+        raise NotImplementedError
+
+    def wait_outer(self, handle) -> tuple:
+        """Block on a :meth:`dispatch_outer` handle.  Returns
+        ``(stacked, stats_total)``: the worker-stacked (or already
+        reduced ``(1, ...)``) params pytree, and the SUM-reduced phase-1
+        vector (None when no ``stats_vec`` was fused)."""
+        raise NotImplementedError
+
+    def note_real_compute(self, t0: float, dt: float) -> None:
+        """Record a wall-clock inner-compute window (perf_counter
+        origin) so real-clock overlap is measurable against the
+        in-flight collective spans.  Pricing-only backends ignore it."""
+
     def mean_scalar(self, value: float) -> float:
         """Mean of a per-process scalar over all processes (loss
         logging); identity on single-process backends."""
@@ -198,6 +233,17 @@ class SimBackend(CollectiveBackend):
             raise ValueError("SimBackend executes every worker in-process;"
                              " got a partial worker set")
         return jax.tree.map(lambda *xs: jnp.stack(xs), *worker_params)
+
+    def dispatch_outer(self, worker_params, *, stats_vec=None):
+        # The sim's "wire" is the priced clock, not real time: the stack
+        # happens eagerly at dispatch and the handle is just the result.
+        # A fused stats_vec reduces over the one process = identity sum.
+        stats = None if stats_vec is None else jnp.asarray(stats_vec,
+                                                           jnp.float32)
+        return (self.outer_reduce(worker_params), stats)
+
+    def wait_outer(self, handle):
+        return handle
 
 
 class JaxProcessBackend(CollectiveBackend):
@@ -374,19 +420,33 @@ class JaxProcessBackend(CollectiveBackend):
             return [0]
         return [self.rank]
 
-    def _execute(self, tree):
+    def _dispatch(self, tree):
         """Lift the local worker onto the global mesh (leading worker
-        axis sharded across every level axis), reduce, read back."""
+        axis sharded across every level axis) and *enqueue* the jitted
+        reduction — no ready-wait, so the collective runs while the
+        caller keeps computing (jax's async dispatch)."""
         from jax.experimental import multihost_utils
         from jax.sharding import PartitionSpec as P
 
         mesh, spec = self._mesh, P(self._axes)
         glob = multihost_utils.host_local_array_to_global_array(
             tree, mesh, spec)
-        out = jax.tree.map(self._reduce_jit, glob)
+        return jax.tree.map(self._reduce_jit, glob)
+
+    def _collect(self, out):
+        """Read a dispatched reduction back to host-local shards,
+        blocking until the wire work is done."""
+        from jax.experimental import multihost_utils
+        from jax.sharding import PartitionSpec as P
+
+        mesh, spec = self._mesh, P(self._axes)
         host = multihost_utils.global_array_to_host_local_array(
             out, mesh, spec)
         return jax.tree.map(jax.block_until_ready, host)
+
+    def _execute(self, tree):
+        """Blocking dispatch+collect (warm-ups and the inline paths)."""
+        return self._collect(self._dispatch(tree))
 
     def outer_reduce(self, worker_params):
         local = [wp for wp in worker_params if wp is not None]
@@ -413,6 +473,53 @@ class JaxProcessBackend(CollectiveBackend):
         # every shard now holds the global mean: a (1, ...) worker axis
         # that make_outer_step's mean passes through unchanged
         return host
+
+    def dispatch_outer(self, worker_params, *, stats_vec=None):
+        local = [wp for wp in worker_params if wp is not None]
+        if len(local) != 1:
+            raise ValueError(f"expected exactly the local worker's "
+                             f"params, got {len(local)} entries")
+        if self._mesh is None:
+            self._build_mesh()
+        if self._reduce_jit is None:
+            self._reduce_jit = self._reducer()
+        tree = jax.tree.map(lambda x: jnp.asarray(x)[None], local[0])
+        fused = stats_vec is not None
+        if fused:
+            # piggyback: the phase-1 [colsum, b] vector rides the same
+            # wire operation as the params — one fused collective
+            # instead of two gradient-order reductions per round
+            tree = {"params": tree,
+                    "stats": jnp.asarray(stats_vec, jnp.float32)[None]}
+        sig = tuple((l.shape, str(l.dtype)) for l in jax.tree.leaves(tree))
+        if sig not in self._warm:
+            # compile with a blocking run outside any measured window
+            # (lockstep on every rank: dispatch order is deterministic,
+            # so the extra collective is identical everywhere)
+            self._execute(tree)
+            self._warm.add(sig)
+        t0 = time.perf_counter()
+        out = self._dispatch(tree)     # enqueued, NOT blocked on
+        return {"out": out, "t0": t0, "fused": fused}
+
+    def wait_outer(self, handle):
+        host = self._collect(handle["out"])
+        t0 = handle["t0"]
+        dt = time.perf_counter() - t0
+        self._last_measured = dt
+        # the recorded span is the true in-flight window: dispatch ->
+        # ready, spanning whatever inner compute ran in between
+        self._record_real("piggyback" if handle["fused"] else "outer",
+                          t0, dt)
+        if handle["fused"]:
+            # mesh reduction is a mean over the P workers; the stats
+            # composition protocol wants elementwise sums
+            stats_total = host["stats"][0] * jnp.float32(self.num_processes)
+            return host["params"], stats_total
+        return host, None
+
+    def note_real_compute(self, t0, dt):
+        self._record_real("compute", t0, dt)
 
     def mean_scalar(self, value):
         if self.num_processes == 1:

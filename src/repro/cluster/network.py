@@ -38,9 +38,13 @@ from repro.core.comms import (CommDomain, TimedCommsMeter,
 from repro.cluster.node import DEFAULT_LATENCY, NodeProfile
 
 #: fixed scopes for fabric windows; ``Topology`` additionally accepts
-#: ``"level:<k>"`` (every domain at height k, 0 = leaves) and
-#: ``"domain:<name>"`` (one named domain).  The flat NetworkModel has a
-#: single fabric and treats every valid scope as the wire.
+#: ``"level:<k>"`` (every domain at height k, 0 = leaves),
+#: ``"domain:<name>"`` (one named domain — every path at that level) and
+#: ``"edge:<name>"`` (one named domain's *uplink*: only the single path
+#: joining that child to its siblings degrades, so one bad cable is
+#: priced on traffic through that child and nowhere else).  The flat
+#: NetworkModel has a single fabric and treats every valid scope as the
+#: wire.
 FABRIC_SCOPES = ("all", "intra", "inter")
 
 
@@ -100,13 +104,22 @@ class FabricSchedule:
         return sorted(pts)
 
 
+def _asym(s: "FabricSchedule") -> bool:
+    """True when a schedule can deviate from the identity — the
+    structural guard keeping uplink-free topologies bit-identical to
+    the pre-uplink pricing."""
+    return bool(s.windows) or s.bw_scale != 1.0 or s.extra_latency != 0.0
+
+
 def _check_scope(scope: str) -> None:
     if scope in FABRIC_SCOPES:
         return
-    if scope.startswith("level:") or scope.startswith("domain:"):
+    if (scope.startswith("level:") or scope.startswith("domain:")
+            or scope.startswith("edge:")):
         return
     raise ValueError(f"scope must be one of {FABRIC_SCOPES} or "
-                     f"'level:<k>' / 'domain:<name>', got {scope!r}")
+                     f"'level:<k>' / 'domain:<name>' / 'edge:<name>', "
+                     f"got {scope!r}")
 
 
 @dataclass
@@ -121,6 +134,13 @@ class FabricDomain:
     its own :class:`FabricSchedule`: a congestion window on a pod's
     domain squeezes only the links joining that pod's racks, a window on
     the root squeezes only the paths joining pods.
+
+    ``uplink`` is the schedule on THIS domain's single path up into its
+    parent's level (``scope="edge:<name>"``): where ``fabric`` on the
+    parent degrades every sibling path symmetrically, a window on one
+    child's uplink prices only collectives and transfers whose route
+    actually crosses that child's edge — the per-path fabric-asymmetry
+    model.  Empty on the root (it has no parent edge).
     """
 
     name: str
@@ -129,6 +149,7 @@ class FabricDomain:
     children: List["FabricDomain"] = field(default_factory=list)
     nodes: List[str] = field(default_factory=list)
     fabric: FabricSchedule = field(default_factory=FabricSchedule)
+    uplink: FabricSchedule = field(default_factory=FabricSchedule)
 
 
 @dataclass
@@ -391,6 +412,20 @@ class Topology:
                           duration: Optional[float] = None, *,
                           bw_scale: float = 1.0, extra_latency: float = 0.0,
                           scope: str = "all") -> None:
+        if scope.startswith("edge:"):
+            # per-path asymmetry: the window lands on one child's
+            # uplink schedule, so only routes crossing that edge pay
+            name = scope.split(":", 1)[1]
+            if name not in self._by_name:
+                raise ValueError(f"unknown domain {name!r} (known: "
+                                 f"{self.domain_names()})")
+            dom = self._by_name[name]
+            if self._parent[id(dom)] is None:
+                raise ValueError(f"domain {name!r} is the root and has "
+                                 f"no uplink edge")
+            dom.uplink.add_window(start, duration, bw_scale=bw_scale,
+                                  extra_latency=extra_latency)
+            return
         # domains may share a schedule object (the two-level spelling
         # shares one across all pods): dedupe so a window lands once
         scheds = {id(d.fabric): d.fabric
@@ -401,7 +436,9 @@ class Topology:
 
     def fabric_change_points(self) -> List[float]:
         pts: set = set()
-        for f in {id(d.fabric): d.fabric for d in self._domains}.values():
+        scheds = {id(s): s for d in self._domains
+                  for s in (d.fabric, d.uplink)}
+        for f in scheds.values():
             pts |= set(f.change_points())
         return sorted(pts)
 
@@ -459,22 +496,34 @@ class Topology:
                 path_bws.append(bw)
                 path_lats.append(lat)
                 return CommDomain(bw=bw, latency=lat, size=len(g))
-            kids = [k for k in (build(c) for c in dom.children)
-                    if k is not None]
-            if not kids:
+            pairs = [(c, k) for c, k in ((c, build(c))
+                                         for c in dom.children)
+                     if k is not None]
+            if not pairs:
                 return None
-            if len(kids) == 1:       # level not crossed: prices nothing
-                return kids[0]
+            if len(pairs) == 1:      # level not crossed: prices nothing
+                return pairs[0][1]
             scale, extra = dom.fabric.at(now)
             bw = dom.bw * scale
+            lat = dom.latency + extra
+            ups = [c.uplink for c, _ in pairs]
+            if any(_asym(u) for u in ups):
+                # per-path asymmetry: the exchange at this level is
+                # bottlenecked by the slowest participating child's
+                # uplink; non-participating siblings' edges price
+                # nothing.  Structurally guarded so the symmetric case
+                # stays bit-identical to the uplink-free model.
+                states = [u.at(now) for u in ups]
+                bw *= min(s for s, _ in states)
+                lat += max(e for _, e in states)
             if bw <= 0.0:
                 raise ValueError(
                     f"non-positive effective bandwidth {bw!r} on domain "
                     f"{dom.name!r}; check bw / bw_scale")
-            lat = dom.latency + extra
             path_bws.append(bw)
             path_lats.append(lat)
-            return CommDomain(bw=bw, latency=lat, children=tuple(kids))
+            return CommDomain(bw=bw, latency=lat,
+                              children=tuple(k for _, k in pairs))
 
         spec = build(self.tree)
         hier = hierarchical_allreduce_time(payload_bytes, spec)
@@ -507,6 +556,24 @@ class Topology:
                              f"ancestor")
         return up_a[:idx[id(d)] + 1] + up_b
 
+    def _edges(self, a: FabricDomain, b: FabricDomain
+               ) -> List[FabricDomain]:
+        """Child domains whose uplink edge an a->b route crosses: each
+        side's chain from the leaf up to (excluding) the lowest common
+        ancestor."""
+        up_a: List[FabricDomain] = [a]
+        d = self._parent[id(a)]
+        while d is not None:
+            up_a.append(d)
+            d = self._parent[id(d)]
+        idx = {id(x): i for i, x in enumerate(up_a)}
+        up_b: List[FabricDomain] = [b]
+        d = self._parent[id(b)]
+        while d is not None and id(d) not in idx:
+            up_b.append(d)
+            d = self._parent[id(d)]
+        return up_a[:idx[id(d)]] + up_b
+
     def point_to_point_time(self, payload_bytes: float, src: NodeProfile,
                             dst: NodeProfile, *, now: float = 0.0) -> float:
         """One-directional transfer (elastic join): bottlenecked by both
@@ -525,6 +592,17 @@ class Topology:
                 scale, extra = dom.fabric.at(now)
                 bw = min(bw, dom.bw * scale)
                 lat += dom.latency + extra
+            for edge in self._edges(ls, ld):
+                # a degraded uplink squeezes only routes crossing that
+                # child's single edge into its parent level (the edge
+                # rides the parent's per-path bw, further scaled)
+                if not _asym(edge.uplink):
+                    continue
+                par = self._parent[id(edge)]
+                us, ue = edge.uplink.at(now)
+                ps, _pe = par.fabric.at(now)
+                bw = min(bw, par.bw * ps * us)
+                lat += ue
         if bw <= 0.0:
             raise ValueError(
                 f"non-positive effective bandwidth {bw!r} between "

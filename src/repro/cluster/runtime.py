@@ -50,18 +50,31 @@ composition of ``repro.core.batching``: a ``[colsum, count]`` phase-1
 vector of one f32 per parameter — the same order as a gradient
 all-reduce — plus five scalar moments) priced through the same network
 model, counted in ``ClusterReport.num_stats_syncs`` and re-priced at
-fabric window edges like any other in-flight collective.  The next
-round's plan depends on the reduced statistics, so the stats agreement
-gates the round boundary in every policy; under ``async`` the *outer*
-all-reduce still overlaps the next round's compute (ACCO-style), but
-the stats reduction itself — about one extra gradient-sized
-all-reduce per round — stays serial.  Piggybacking its phase-1 vector
-on the outer sync (the Lau et al. trick) would remove that serial
-cost and is the known next optimization (see ROADMAP).  Batch growth
-then feeds straight back into the clock: a bigger effective batch
-means more roofline FLOPs per node per round, which is how
-sync/async/elastic trade off under a growing batch (scenarios
-``adaptive_ramp`` / ``congested_adaptive``).
+fabric window edges like any other in-flight collective.  Under the
+``sync`` (and ``elastic``) policies the next round's plan depends on
+the reduced statistics, so the stats agreement gates the round
+boundary.  Under ``async`` the stats cost is *piggybacked* (the Lau et
+al. trick): the round's phase-1 vector rides the outer all-reduce as
+one fused ``"piggyback"`` collective — priced once at params + stats
+bytes — and the batch decision folds when that collective lands
+(:meth:`repro.core.adloco.TrainerRound.apply_stats`), giving
+one-round-stale plan semantics instead of a serial gradient-sized
+reduction per round.  Batch growth then feeds straight back into the
+clock: a bigger effective batch means more roofline FLOPs per node per
+round, which is how sync/async/elastic trade off under a growing batch
+(scenarios ``adaptive_ramp`` / ``congested_adaptive``).
+
+Nonblocking collectives: the runtime *dispatches* every outer sync at
+its launch point (:meth:`CollectiveBackend.dispatch_outer`) and waits
+for the result only at the arrival event
+(:meth:`CollectiveBackend.wait_outer`).  Under the sim backend that is
+a semantic no-op (the stack is eager), but on
+``JaxProcessBackend`` the jitted collective is enqueued without a
+ready-wait, so the next round's inner compute — which the async
+schedule runs between launch and arrival — executes while the wire
+work is genuinely in flight; the measured span covers the true
+dispatch->ready window, making real-clock ``overlap_fraction`` match
+the simulated schedule's claim instead of the old 0-by-construction.
 """
 from __future__ import annotations
 
@@ -163,6 +176,11 @@ class ClusterReport:
                 s["blocked_frac"] = util["blocked_frac"]
                 s["idle_frac"] = util["idle_frac"]
                 s["overlap_frac"] = self.trace.overlap_fraction()
+                # measured wall-clock overlap (collective in-flight
+                # windows vs noted compute); 0.0 under pricing-only
+                # backends, > 0 on async runs of a real backend
+                s["real_overlap_frac"] = self.trace.overlap_fraction(
+                    clock="real")
         return s
 
 
@@ -184,6 +202,9 @@ class _TrainerRT:
     comm_ev: Optional[dict] = None  # in-flight collective (for re-pricing)
     stats_ev: Optional[dict] = None  # in-flight stats reduction (ditto)
     cspan: Optional[Any] = None     # open compute span (tracing only)
+    # deferred batch-stats handle awaiting the next outer launch (async
+    # piggybacking); a fresher round's handle supersedes an unfused one
+    stats_req: Optional[dict] = None
 
 
 class _Sim:
@@ -198,6 +219,10 @@ class _Sim:
         self.policy = policy
         self.profiles = profiles
         self.backend = backend
+        # async adaptive rounds defer the batch decision and fuse the
+        # phase-1 stats vector onto the outer sync (one "piggyback"
+        # collective); sync/elastic keep the inline gated stats path
+        self.piggyback = (policy == "async" and acfg.adaptive)
         self.eval_fn = eval_fn
         self.fixed_batch = fixed_batch
         self.verbose = verbose
@@ -230,13 +255,19 @@ class _Sim:
         self.maybe_merge(ri, now, caller=rt)
         if not rt.alive or rt.round >= rt.target:
             return
+        w0 = time.perf_counter()
         out = self.rnd.inner(
             rt.tr, fixed_batch=self.fixed_batch,
             worker_starts=rt.worker_params,
             workers=self.backend.local_workers(len(rt.tr.inner_opt_states)),
-            stats_reduce=self.backend.stats_reducer())
+            stats_reduce=self.backend.stats_reducer(),
+            defer_stats=self.piggyback)
         # distributed backends: every process logs the same global loss
         out.mean_loss = self.backend.mean_scalar(out.mean_loss)
+        # real-clock compute window (mean_scalar forces the round's
+        # results): a dispatched collective in flight across this window
+        # is measured overlap on the wall clock, not just in the sim
+        self.backend.note_real_compute(w0, time.perf_counter() - w0)
         dts = [node.compute_time(out.flops_per_worker, out.bytes_per_worker,
                                  now)
                for node in rt.nodes[:len(out.worker_params)]]
@@ -260,9 +291,20 @@ class _Sim:
         # top bottleneck -> all-gathers back up.
         snapshot = list(rt.worker_params)
         payload = param_bytes(rt.tr.params)
+        kind, stats_vec, sreq = "outer", None, rt.stats_req
+        if sreq is not None:
+            # piggyback: the deferred phase-1 stats vector rides this
+            # sync as ONE fused collective, priced (and fabric-edge
+            # re-priced) once at params + stats bytes
+            rt.stats_req = None
+            payload += sreq["bytes"]
+            kind = "piggyback"
+            self.report.num_stats_syncs += 1
+            if "phase1" in sreq["req"]:
+                stats_vec = sreq["req"]["phase1"]
         dur = self.backend.allreduce_time(payload, rt.nodes, now=now)
         self.pool.comms.record_timed(
-            "outer", participants=len(rt.tr.inner_opt_states),
+            kind, participants=len(rt.tr.inner_opt_states),
             payload_bytes=payload, step=rt.round, duration=dur)
         self.report.comm_time += dur
         self.report.num_syncs += 1
@@ -270,15 +312,20 @@ class _Sim:
         rt.synced = rt.round
         ev = {"rt": rt, "gen": rt.gen, "snapshot": snapshot,
               "x_prev": rt.tr.params, "round": rt.round,
-              "loss": loss, "mode": mode,
+              "loss": loss, "mode": mode, "stats_req": sreq,
               # re-pricing state: fraction done as of t_last under the
               # total duration cur_total priced at the last fabric edge
               "payload_bytes": payload, "t_last": now, "frac": 0.0,
               "cur_total": dur, "t_end": now + dur,
               "log": self.pool.comms.log[-1]}
+        # nonblocking dispatch: the collective starts NOW (on real
+        # backends it is enqueued without a ready-wait and runs under
+        # the rounds computed before on_comm_done waits on the handle)
+        ev["handle"] = self.backend.dispatch_outer(snapshot,
+                                                   stats_vec=stats_vec)
         if self.trace is not None:
             ev["span"] = self.trace.begin(
-                rt.tr.tid, "outer", now, now + dur, round=rt.round,
+                rt.tr.tid, kind, now, now + dur, round=rt.round,
                 mode=mode, payload_bytes=payload)
         rt.comm_ev = ev
         self.push(ev["t_end"], "comm", ev)
@@ -421,10 +468,22 @@ class _Sim:
         self.fold_pending(rt)             # delayed outer arrived mid-round
 
         if out.stats_bytes > 0.0:
-            # adaptive round: the batch-stats reduction is a collective
+            if self.piggyback and out.stats_request is not None:
+                # async adaptive: no standalone stats collective — stash
+                # the stale stats handle; the next outer launch fuses
+                # its phase-1 vector onto the sync and the decision
+                # folds when that collective lands (one-round-stale plan
+                # semantics).  A fresher handle supersedes an unfused
+                # predecessor so the decision always uses the newest
+                # gradients that reached a launch point.
+                rt.stats_req = {"req": out.stats_request,
+                                "bytes": out.stats_bytes,
+                                "round": rt.round}
+                self.after_stats(rt, now, out.mean_loss, out.mode)
+                return
+            # sync/elastic: the batch-stats reduction is a collective
             # on the wire — the next round's plan depends on its result,
-            # so it gates the round boundary (the outer sync may still
-            # overlap under async; only the *stats* agreement is serial)
+            # so it gates the round boundary
             self.launch_stats(rt, now, out.mean_loss, out.mode,
                               out.stats_bytes)
             return
@@ -491,12 +550,32 @@ class _Sim:
         self.report.sim_time = max(self.report.sim_time, now)
         rt.inflight = False
         rt.comm_ev = None
+        stacked, stats_tot = self.backend.wait_outer(ev["handle"])
+        # measured staleness in rounds: rounds already folded since the
+        # snapshot, plus the in-flight round that will rebase onto this
+        # update at its boundary (async steady state: 1; sync: 0)
+        delay = float(rt.round - ev["round"])
+        if self.policy != "sync" and rt.round < rt.target:
+            delay += 1.0
         self.rnd.outer(rt.tr, ev["snapshot"], x_prev=ev["x_prev"],
-                       reduce=self.backend.outer_reduce)
+                       reduce=lambda _wp: stacked, delay=delay)
         measured = self.backend.pop_measured()
         if measured is not None:
             self.report.real_comm_time += measured
             self.pool.comms.add_real_time(ev["log"], measured)
+        sreq = ev.get("stats_req")
+        if sreq is not None:
+            # fold the piggybacked batch decision: local-estimator
+            # requests carry finished statistics; distributed requests
+            # finish phase 2 (five scalar moments) over the backend's
+            # small reducer from the fused phase-1 total
+            self.rnd.apply_stats(rt.tr, sreq["req"],
+                                 phase1_total=stats_tot,
+                                 sum_reduce=self.backend.stats_reducer())
+            ms = self.backend.pop_stats_measured()
+            if ms is not None:
+                self.report.real_comm_time += ms
+                self.pool.comms.add_real_time(ev["log"], ms)
         self.record(rt, now, ev["round"], ev["loss"], ev["mode"])
 
         if self.policy == "sync":
@@ -520,12 +599,35 @@ class _Sim:
         alive = self.alive_rts()
         if not (acfg.enable_merge and len(alive) > 1
                 and round_i % acfg.merge_frequency == 0
-                and round_i not in self.merged_rounds
-                and min(rt.round for rt in alive) >= round_i - 1):
+                and round_i not in self.merged_rounds):
             return
+        # Merges are tagged with their originating round and fire ON
+        # TIME: trainers whose round counter drifted more than
+        # ``merge_drift_window`` behind the caller's are skipped (their
+        # params are rounds stale — folding them in would drag the
+        # survivor backwards), instead of the old behavior of stalling
+        # the whole merge until the slowest trainer caught up and then
+        # merging arbitrarily drifted states.  The window is measured
+        # against ``round_i - 1`` (the round the caller just folded);
+        # same-speed peers whose fold event shares this timestamp but
+        # has not popped yet read one behind, so the default window of
+        # 1 is the tightest setting that keeps lockstep peers eligible.
         self.merged_rounds.add(round_i)
-        ids = check_merge([t.requested_batch for t in self.pool.trainers],
-                          acfg.merge_w + 1)
+        eligible = [rt for rt in alive
+                    if (round_i - 1) - rt.round <= acfg.merge_drift_window]
+        skipped = sorted(rt.tr.tid for rt in alive if rt not in eligible)
+        if len(eligible) <= 1:
+            self.report.applied_events.append(
+                {"time": now, "kind": "merge_skipped", "round": round_i,
+                 "skipped": skipped})
+            return
+        elig_tids = {rt.tr.tid for rt in eligible}
+        elig_ids = [i for i, t in enumerate(self.pool.trainers)
+                    if t.tid in elig_tids]
+        sub = check_merge(
+            [self.pool.trainers[i].requested_batch for i in elig_ids],
+            acfg.merge_w + 1)
+        ids = [elig_ids[j] for j in sub]
         if len(ids) <= 1:
             return
         involved = [self.pool.trainers[i] for i in ids]
@@ -536,11 +638,12 @@ class _Sim:
             self.truncate_spans(rt, now, "merged")
             if id(t) in survivors:
                 # representative: a merge preempts its in-flight round
-                # and supersedes any in-flight sync
+                # and supersedes any in-flight sync or deferred stats
                 rt.gen += 1
                 rt.inflight = False
                 rt.pending = None
                 rt.worker_params = None
+                rt.stats_req = None
                 if rt is not caller and rt.round < rt.target:
                     self.start_round(rt, now)
             else:
@@ -551,10 +654,11 @@ class _Sim:
         merged_away = [t.tid for t in involved if id(t) not in survivors]
         if self.trace is not None:
             for tid in merged_away:
-                self.trace.instant(tid, "merge", now, round=round_i)
+                self.trace.instant(tid, "merge", now, round=round_i,
+                                   skipped=skipped)
         self.report.applied_events.append(
             {"time": now, "kind": "merge", "round": round_i,
-             "merged": merged_away})
+             "merged": merged_away, "skipped": skipped})
 
     # -------------------------------------------------------- scenario
     def on_scenario(self, now: float, ev: ClusterEvent) -> None:
@@ -629,6 +733,7 @@ class _Sim:
         brt.inflight = False
         brt.pending = None
         brt.worker_params = None
+        brt.stats_req = None
         if brt.round < brt.target:
             self.start_round(brt, now)
         if self.trace is not None:

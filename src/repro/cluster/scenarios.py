@@ -70,6 +70,11 @@ slow_for, stagger, scope)``
     after another (``stagger`` apart, each ``factor``x slower for
     ``slow_for`` seconds) — the compounded worst case where the wire
     and the workers degrade together.
+``drifted_merge(start, factor, duration, nodes)``
+    One trainer's nodes slow hard enough that its round counter drifts
+    past ``merge_drift_window`` by the first merge round: the
+    round-tagged merge fires on time among the up-to-date trainers and
+    records the laggard in the ``skipped`` list instead of stalling.
 
 Adaptive-aware scenarios (run with ``acfg.adaptive=True``)
 ----------------------------------------------------------
@@ -258,6 +263,22 @@ def straggler_cascade(*, start: float = 0.01, window: float = 0.04,
     return evs
 
 
+@register_scenario("drifted_merge")
+def drifted_merge(*, start: float = 0.0, factor: float = 8.0,
+                  duration: float = 10.0, nodes=(2, 3)) -> List[ClusterEvent]:
+    """Drift one trainer past the merge window: the given nodes (default
+    trainer 1's pair in a k=3, M=2 layout) compute ``factor``x slower
+    from ``start``, so by the first merge round that trainer's round
+    counter lags the callers'.  Round-tagged merging fires ON TIME and
+    skips the drifted trainer (``merge_drift_window``) instead of the
+    old behavior — stalling every merge until the slowest trainer
+    caught up and then folding rounds-stale params into the pool.
+    Pinned by the GOLDENM golden in ``tests/test_scenarios.py``."""
+    return [ClusterEvent(time=start, kind="slowdown", node=int(n),
+                         factor=factor, duration=duration)
+            for n in nodes]
+
+
 @register_scenario("adaptive_ramp")
 def adaptive_ramp() -> List[ClusterEvent]:
     """Clean fabric for the batch ramp (see the module docstring): the
@@ -280,4 +301,4 @@ __all__ = ["SCENARIOS", "register_scenario", "list_scenarios",
            "build_scenario", "baseline", "bursty_congestion", "spot_churn",
            "pod_partition", "flash_crowd_join", "correlated_pod_failure",
            "diurnal_congestion", "rack_flap", "straggler_cascade",
-           "adaptive_ramp", "congested_adaptive"]
+           "adaptive_ramp", "congested_adaptive", "drifted_merge"]

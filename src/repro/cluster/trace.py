@@ -49,16 +49,20 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 #: fail loudly in ``trace_report --validate``
 TRACE_SCHEMA = 1
 
-#: span kinds the runtime emits on the simulated clock
-SIM_SPAN_KINDS = ("compute", "outer", "stats", "xfer", "fabric")
-#: span kinds an execution backend emits on the wall clock
-REAL_SPAN_KINDS = ("outer", "stats")
+#: span kinds the runtime emits on the simulated clock ("piggyback" is
+#: the fused outer+phase-1-stats collective of the async adaptive path)
+SIM_SPAN_KINDS = ("compute", "outer", "stats", "xfer", "fabric",
+                  "piggyback")
+#: span kinds an execution backend emits on the wall clock: collective
+#: in-flight windows (dispatch -> ready) plus the inner-compute windows
+#: the runtime notes so real-clock overlap is measurable
+REAL_SPAN_KINDS = ("outer", "stats", "piggyback", "compute")
 #: instant-event kinds
 EVENT_KINDS = ("reprice", "join", "leave", "merge", "slowdown",
                "preempt")
 #: span kinds that count as "a collective in flight" for the
 #: utilization ledger and the overlap fraction
-COMM_KINDS = ("outer", "stats", "xfer")
+COMM_KINDS = ("outer", "stats", "xfer", "piggyback")
 
 #: synthetic track id for fabric-window spans (not owned by a trainer)
 FABRIC_TID = -1
@@ -201,12 +205,20 @@ class Trace:
         return [s for s in self.spans if s.clock == "sim"
                 and (kinds is None or s.kind in kinds)]
 
-    def real_spans(self) -> List[Span]:
-        return [s for s in self.spans if s.clock == "real"]
+    def real_spans(self, kinds: Optional[Sequence[str]] = None
+                   ) -> List[Span]:
+        return [s for s in self.spans if s.clock == "real"
+                and (kinds is None or s.kind in kinds)]
 
-    def _busy_union(self) -> Dict[int, List[Tuple[float, float]]]:
+    def _spans_on(self, clock: str, kinds: Optional[Sequence[str]] = None
+                  ) -> List[Span]:
+        return (self.sim_spans(kinds) if clock == "sim"
+                else self.real_spans(kinds))
+
+    def _busy_union(self, clock: str = "sim"
+                    ) -> Dict[int, List[Tuple[float, float]]]:
         per: Dict[int, List[Tuple[float, float]]] = {}
-        for s in self.sim_spans(("compute",)):
+        for s in self._spans_on(clock, ("compute",)):
             per.setdefault(s.tid, []).append((s.t0, s.t1))
         return {tid: _union(ivs) for tid, ivs in per.items()}
 
@@ -252,28 +264,36 @@ class Trace:
                 "blocked_frac": blocked / alive,
                 "idle_frac": idle / alive}
 
-    def overlap_fraction(self, kinds: Sequence[str] = ("outer", "stats")
-                         ) -> float:
+    def overlap_fraction(self,
+                         kinds: Sequence[str] = ("outer", "stats",
+                                                 "piggyback"),
+                         *, clock: str = "sim") -> float:
         """Collective in-flight time coincident with the same trainer's
         inner compute, over total collective time (ROADMAP item 1).
-        ``stats`` reductions are in the denominator on purpose: they
-        gate the round boundary today, so their zero overlap is the
-        measured cost the Lau-style piggybacking would remove."""
-        busy_u = self._busy_union()
+        Standalone ``stats`` reductions are in the denominator on
+        purpose: they gate the round boundary when not piggybacked, so
+        their zero overlap is the measured cost the Lau-style fusing
+        removes.  ``clock="real"`` scores the *measured* wall-clock
+        windows instead — collective in-flight spans (dispatch ->
+        ready) against the noted inner-compute spans — so a truly
+        nonblocking backend shows real overlap, not just a simulated
+        schedule that claims it."""
+        busy_u = self._busy_union(clock)
         total = overlap = 0.0
-        for s in self.sim_spans(kinds):
+        for s in self._spans_on(clock, kinds):
             total += s.duration
             overlap += _overlap_total((s.t0, s.t1),
                                       busy_u.get(s.tid, []))
         return overlap / total if total > 0.0 else 0.0
 
-    def overlap_by_kind(self) -> Dict[str, Dict[str, float]]:
+    def overlap_by_kind(self, *, clock: str = "sim"
+                        ) -> Dict[str, Dict[str, float]]:
         """Per-kind breakdown of :meth:`overlap_fraction`."""
         out: Dict[str, Dict[str, float]] = {}
-        busy_u = self._busy_union()
-        for kind in ("outer", "stats", "xfer"):
+        busy_u = self._busy_union(clock)
+        for kind in ("outer", "stats", "xfer", "piggyback"):
             total = overlap = 0.0
-            for s in self.sim_spans((kind,)):
+            for s in self._spans_on(clock, (kind,)):
                 total += s.duration
                 overlap += _overlap_total((s.t0, s.t1),
                                           busy_u.get(s.tid, []))

@@ -228,3 +228,14 @@ class AdLoCoConfig:
     stats_use_kernel: bool = False
     inner_optimizer: str = "adamw"
     outer_optimizer: str = "nesterov"
+    # staleness-aware delay compensation for delayed (async) outer
+    # application: scale the Nesterov momentum contribution by
+    # 1/(1 + measured delay in rounds).  Off by default so every
+    # synchronous trajectory stays bit-identical; turn on to run
+    # outer_momentum=0.9 under the async policy's one-round staleness
+    # (underdamped without it — see repro.cluster docs).
+    delay_compensation: bool = False
+    # merge drift window (rounds): maybe_merge skips trainers whose
+    # round counter lags the merge round by more than this instead of
+    # stalling the whole merge until the slowest trainer catches up
+    merge_drift_window: int = 1

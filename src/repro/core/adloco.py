@@ -74,6 +74,14 @@ class RoundOutput:
     # round ran fixed-batch); the cluster runtime prices it as a
     # collective over the trainer's nodes
     stats_bytes: float = 0.0
+    # deferred-stats handle (``inner(..., defer_stats=True)``): the
+    # material needed to finish the batch decision later via
+    # :meth:`TrainerRound.apply_stats` — either ``{"st": GradStats}``
+    # (local estimator paths, no collective needed) or
+    # ``{"phase1": vec, "G_local": rows, "micro": m}`` whose phase-1
+    # vector the runtime piggybacks onto the outer sync.  None when the
+    # decision was applied inline (sync policy / fixed batch).
+    stats_request: Optional[Dict[str, Any]] = None
 
 
 class BatchPlanProtocol:
@@ -107,6 +115,20 @@ class BatchPlanProtocol:
         """Wire payload the runtime prices the stats collective at."""
         return batching.stats_payload_bytes(n_params)
 
+    # ------------------------------------------- deferred (split) phases
+    def begin(self, G_local) -> jnp.ndarray:
+        """Phase-1 payload for a deferred reduction: the ``[colsum, b]``
+        vector the runtime piggybacks onto the outer sync."""
+        return batching.stats_phase1(G_local)
+
+    def finish(self, phase1_total, G_local, sum_reduce, *,
+               micro_size: int) -> batching.GradStats:
+        """Finish a deferred reduction from the piggybacked phase-1
+        total: phase 2 (five scalar moments) + rescale.  Bit-identical
+        to the inline :meth:`reduce` composition."""
+        return batching.stats_finish(phase1_total, G_local, sum_reduce,
+                                     micro_size=micro_size)
+
     # -------------------------------------------------------- decision
     def decide(self, st: batching.GradStats, current_b: int) -> int:
         """The configured batch test + monotone-growth/cap policy."""
@@ -138,12 +160,22 @@ class TrainerRound:
             acfg.inner_optimizer, acfg.lr_inner,
             **({"weight_decay": acfg.weight_decay}
                if acfg.inner_optimizer == "adamw" else {}))
-        self.outer_opt = optim.get_optimizer(
-            acfg.outer_optimizer, acfg.lr_outer,
-            **({"momentum": acfg.outer_momentum}
-               if acfg.outer_optimizer in ("nesterov", "sgd") else {}))
+        # staleness-aware delay compensation (async policy): swap the
+        # plain Nesterov outer for the delay-parameterized variant and
+        # thread the measured delay through the jitted step
+        self._delay_aware = (acfg.delay_compensation
+                             and acfg.outer_optimizer == "nesterov")
+        if self._delay_aware:
+            self.outer_opt = optim.delay_compensated_nesterov(
+                acfg.lr_outer, momentum=acfg.outer_momentum)
+        else:
+            self.outer_opt = optim.get_optimizer(
+                acfg.outer_optimizer, acfg.lr_outer,
+                **({"momentum": acfg.outer_momentum}
+                   if acfg.outer_optimizer in ("nesterov", "sgd") else {}))
         self.cache = StepCache(loss_fn, self.inner_opt)
-        self.outer_step = make_outer_step(self.outer_opt)
+        self.outer_step = make_outer_step(self.outer_opt,
+                                          delay_aware=self._delay_aware)
         self._n_params: Optional[int] = None
 
     # ---------------------------------------------------------- pool
@@ -195,7 +227,8 @@ class TrainerRound:
               fixed_batch: Optional[int] = None,
               worker_starts: Optional[List[Any]] = None,
               workers: Optional[List[int]] = None,
-              stats_reduce: Optional[Callable] = None) -> RoundOutput:
+              stats_reduce: Optional[Callable] = None,
+              defer_stats: bool = False) -> RoundOutput:
         """Compute phase of one round.  Mutates ``tr.inner_opt_states``
         and (adaptive) ``tr.requested_batch``; never touches
         ``tr.params``.  ``workers`` restricts which of the M workers this
@@ -207,7 +240,13 @@ class TrainerRound:
         batch statistics run the exact two-phase composition over every
         process's workers — each worker's microbatch-mean grad is one
         shard — so all ranks derive the identical requested batch and
-        compiled shapes (the :class:`BatchPlanProtocol` contract)."""
+        compiled shapes (the :class:`BatchPlanProtocol` contract).
+        ``defer_stats`` (async policy) skips the inline batch decision
+        and instead returns a stale stats handle in
+        ``RoundOutput.stats_request``; the runtime piggybacks its
+        phase-1 vector onto the outer sync and folds the decision via
+        :meth:`apply_stats` when that collective lands — one-round-stale
+        plan semantics, same on every backend by construction."""
         acfg = self.acfg
         M = len(tr.inner_opt_states)
         H = acfg.num_inner_steps
@@ -233,6 +272,7 @@ class TrainerRound:
 
         # ---- requested batch for the next round (Alg 3 line 31) ------
         stats_bytes = 0.0
+        stats_request: Optional[Dict[str, Any]] = None
         if acfg.adaptive:
             n = self._count_params(x_start)
             if stats_reduce is not None:
@@ -243,9 +283,15 @@ class TrainerRound:
                 # construction (shape-agreement protocol)
                 G_local = batching.flatten_grads(
                     jax.tree.map(lambda *g: jnp.stack(g), *worker_grads))
-                st = self.protocol.reduce(
-                    G_local, stats_reduce,
-                    micro_size=plan.effective_batch)
+                if defer_stats:
+                    st = None
+                    stats_request = {"phase1": self.protocol.begin(G_local),
+                                     "G_local": G_local,
+                                     "micro": plan.effective_batch}
+                else:
+                    st = self.protocol.reduce(
+                        G_local, stats_reduce,
+                        micro_size=plan.effective_batch)
             elif acfg.stats_estimator == "microbatch" and len(idxs) >= 2:
                 # free distributed estimator: the M workers' last
                 # microbatch-mean grads are already materialized;
@@ -270,8 +316,14 @@ class TrainerRound:
                 st = batching.per_sample_stats(
                     self.loss_fn, worker_params[idxs[0]], probe,
                     use_kernel=acfg.stats_use_kernel)
-            tr.requested_batch = self.protocol.decide(
-                st, tr.requested_batch)
+            if defer_stats:
+                # one-round-stale plan semantics: the decision folds at
+                # the outer sync's landing point (apply_stats), not here
+                if stats_request is None:
+                    stats_request = {"st": st}
+            else:
+                tr.requested_batch = self.protocol.decide(
+                    st, tr.requested_batch)
             stats_bytes = self.protocol.payload_bytes(n)
 
         spw = plan.effective_batch * H
@@ -282,13 +334,35 @@ class TrainerRound:
             mode=plan.mode, samples=spw * M, samples_per_worker=spw,
             flops_per_worker=6.0 * n * spw,
             bytes_per_worker=3.0 * param_bytes(x_start) * H,
-            stats_bytes=stats_bytes)
+            stats_bytes=stats_bytes, stats_request=stats_request)
+
+    # ---------------------------------------------------- stale stats
+    def apply_stats(self, tr: TrainerState, request: Dict[str, Any], *,
+                    phase1_total=None,
+                    sum_reduce: Optional[Callable] = None) -> int:
+        """Fold a stale stats handle produced by
+        ``inner(..., defer_stats=True)`` into the trainer's requested
+        batch.  Local-estimator requests carry the finished statistics
+        (``{"st"}``); distributed requests carry the phase-1 material —
+        the caller supplies ``phase1_total`` (the piggybacked SUM of
+        every rank's phase-1 vector) and ``sum_reduce`` for the tiny
+        phase-2 moment reduction.  Returns the updated requested batch
+        (identical on every rank — the shape-agreement contract)."""
+        if "st" in request:
+            st = request["st"]
+        else:
+            st = self.protocol.finish(
+                phase1_total, request["G_local"], sum_reduce,
+                micro_size=request["micro"])
+        tr.requested_batch = self.protocol.decide(st, tr.requested_batch)
+        return tr.requested_batch
 
     # --------------------------------------------------------- outer
     def outer(self, tr: TrainerState, worker_params: List[Any], *,
               x_prev: Optional[Any] = None,
               comms: Optional[CommsMeter] = None, step: int = 0,
-              reduce: Optional[Callable] = None) -> None:
+              reduce: Optional[Callable] = None,
+              delay: float = 0.0) -> None:
         """Apply the outer (pseudo-gradient) step: Alg 3 lines 40–44.
         ``x_prev`` defaults to the trainer's current synced params; the
         async cluster policy passes the anchor captured at launch time
@@ -296,7 +370,11 @@ class TrainerRound:
         list to the worker-stacked pytree ``make_outer_step`` averages —
         the default is the in-process ``jnp.stack``; execution backends
         substitute a real cross-process collective that returns the
-        already-reduced (1, ...) mean."""
+        already-reduced (1, ...) mean.  ``delay`` is the measured
+        staleness in rounds (how many inner rounds folded between the
+        snapshot and this application); with ``delay_compensation`` on
+        it damps the momentum contribution accordingly, otherwise it is
+        ignored by the jitted step."""
         if reduce is None:
             stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
                                    *worker_params)
@@ -304,7 +382,7 @@ class TrainerRound:
             stacked = reduce(worker_params)
         tr.params, tr.outer_opt_state = self.outer_step(
             x_prev if x_prev is not None else tr.params,
-            stacked, tr.outer_opt_state)
+            stacked, tr.outer_opt_state, float(delay))
         if comms is not None:
             comms.record("outer", participants=len(worker_params),
                          payload_bytes=param_bytes(tr.params), step=step)

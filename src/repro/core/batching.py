@@ -135,6 +135,29 @@ def stats_from_moments(m: jnp.ndarray) -> GradStats:
                      jnp.maximum(orth_var, 0.0), b)
 
 
+def stats_phase1(G_local: jnp.ndarray) -> jnp.ndarray:
+    """Phase-1 payload of the two-phase composition: the ``[colsum, b]``
+    f32 vector whose SUM all-reduce yields the global mean direction.
+    Split out of :func:`distributed_stats` so the runtime can dispatch
+    the reduction nonblocking (piggybacked on the outer sync) and finish
+    the statistics later with :func:`stats_finish`."""
+    G_local = G_local.astype(jnp.float32)
+    b_local = jnp.full((1,), G_local.shape[0], jnp.float32)
+    return jnp.concatenate([jnp.sum(G_local, axis=0), b_local])
+
+
+def stats_finish(tot: jnp.ndarray, G_local: jnp.ndarray,
+                 sum_reduce: Callable, *, micro_size: int = 0) -> GradStats:
+    """Finish the two-phase composition given the already-reduced
+    phase-1 total ``tot`` (= sum of every shard's :func:`stats_phase1`):
+    derive ḡ, reduce the five :func:`shard_moments` (phase 2), and
+    rescale.  Bit-identical to the inline :func:`distributed_stats`."""
+    G_local = G_local.astype(jnp.float32)
+    gbar = tot[:-1] / jnp.maximum(tot[-1], 1.0)
+    st = stats_from_moments(sum_reduce(shard_moments(G_local, gbar)))
+    return rescale_microbatch(st, micro_size) if micro_size else st
+
+
 def distributed_stats(G_local: jnp.ndarray, sum_reduce: Callable, *,
                       micro_size: int = 0) -> GradStats:
     """Two-phase exact composition of :class:`GradStats` across shards.
@@ -149,13 +172,8 @@ def distributed_stats(G_local: jnp.ndarray, sum_reduce: Callable, *,
     batch-plan protocol builds on.  ``micro_size`` > 0 applies the
     microbatch-estimator rescale to per-sample units.
     """
-    G_local = G_local.astype(jnp.float32)
-    b_local = jnp.full((1,), G_local.shape[0], jnp.float32)
-    phase1 = jnp.concatenate([jnp.sum(G_local, axis=0), b_local])
-    tot = sum_reduce(phase1)
-    gbar = tot[:-1] / jnp.maximum(tot[-1], 1.0)
-    st = stats_from_moments(sum_reduce(shard_moments(G_local, gbar)))
-    return rescale_microbatch(st, micro_size) if micro_size else st
+    return stats_finish(sum_reduce(stats_phase1(G_local)), G_local,
+                        sum_reduce, micro_size=micro_size)
 
 
 def compose_shards(shards: Sequence[jnp.ndarray], *,
@@ -179,8 +197,11 @@ def stats_payload_bytes(n_params: int) -> float:
     f32 vector plus the five phase-2 moments — what the cluster runtime
     prices the collective at.  Note the phase-1 vector is one f32 per
     parameter, i.e. the same order as a gradient all-reduce: the
-    protocol is exact, not cheap.  (Piggybacking phase 1 on the outer
-    sync would amortize it; see ROADMAP.)"""
+    protocol is exact, not cheap.  Under the async policy the runtime
+    therefore piggybacks this payload onto the outer sync (one fused
+    ``"piggyback"`` collective priced at params + stats bytes) instead
+    of paying a second gradient-order all-reduce; sync keeps the
+    standalone reduction so it stays bit-identical to the host loop."""
     return 4.0 * (n_params + 1 + 5)
 
 

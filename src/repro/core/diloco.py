@@ -68,21 +68,32 @@ def make_inner_step(loss_fn: Callable, inner_opt: optim.Optimizer,
     return jax.jit(make_inner_step_fn(loss_fn, inner_opt, accum_steps))
 
 
-def make_outer_step(outer_opt: optim.Optimizer):
+def make_outer_step(outer_opt: optim.Optimizer, *,
+                    delay_aware: bool = False):
     """jitted fn(x_prev, worker_params [stacked leading M axis],
-    outer_state) -> (x_new, outer_state).
+    outer_state, delay) -> (x_new, outer_state).
 
     Pseudo-gradient Δ = x_prev − mean_m(x_m)  (paper Alg 3 line 42); in a
     multi-host deployment the mean is the inter-worker all-reduce this
-    framework meters as communication.
+    framework meters as communication.  ``delay`` is the measured
+    staleness (rounds folded between snapshot and application, f32
+    scalar): with ``delay_aware=True`` it is forwarded to the
+    optimizer's ``update`` (``optim.delay_compensated_nesterov``), which
+    scales the momentum contribution accordingly; otherwise it is
+    ignored, keeping the plain path bit-identical to the legacy step.
     """
 
-    def step(x_prev, worker_params, outer_state):
+    def step(x_prev, worker_params, outer_state, delay=0.0):
         delta = jax.tree.map(
             lambda xp, w: xp.astype(jnp.float32)
             - jnp.mean(w.astype(jnp.float32), axis=0),
             x_prev, worker_params)
-        updates, outer_state = outer_opt.update(delta, outer_state, x_prev)
+        if delay_aware:
+            updates, outer_state = outer_opt.update(
+                delta, outer_state, x_prev, delay=delay)
+        else:
+            updates, outer_state = outer_opt.update(delta, outer_state,
+                                                    x_prev)
         x_new = optim.apply_updates(x_prev, updates)
         return x_new, outer_state
 

@@ -59,6 +59,37 @@ def nesterov_outer(lr: float, momentum: float = 0.9) -> Optimizer:
     return sgd(lr, momentum=momentum, nesterov=True)
 
 
+def delay_compensated_nesterov(lr: float, momentum: float = 0.9) -> Optimizer:
+    """Staleness-aware Nesterov for delayed (async) outer application.
+
+    Under one-round-stale pseudo-gradients the effective momentum of
+    plain Nesterov compounds across the staleness window and 0.9 is
+    underdamped (the documented ``outer_momentum <= 0.5`` caveat).  The
+    fix: scale the momentum contribution by the measured delay,
+    ``mu_eff = momentum / (1 + delay)`` — at delay 0 this is bit-equal
+    to :func:`nesterov_outer`, at the async policy's steady-state delay
+    of one round it lands 0.9 at 0.45, back inside the stable band.
+
+    ``update`` takes an extra ``delay`` keyword (f32 scalar, number of
+    rounds folded between the pseudo-gradient's snapshot and its
+    application); the cluster runtime measures and threads it through.
+    """
+
+    def init(params):
+        return {"m": _zeros_like_f32(params)}
+
+    def update(grads, state, params=None, delay=0.0):
+        mu = momentum / (1.0 + delay)
+        m = jax.tree.map(lambda m_, g: mu * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        upd = jax.tree.map(
+            lambda m_, g: -lr * (mu * m_ + g.astype(jnp.float32)),
+            m, grads)
+        return upd, {"m": m}
+
+    return Optimizer(init, update)
+
+
 # ------------------------------------------------------------------
 # AdamW — the inner optimizer
 # ------------------------------------------------------------------
@@ -114,4 +145,5 @@ def adagrad(lr: float, eps: float = 1e-10) -> Optimizer:
 
 def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
     return {"sgd": sgd, "adamw": adamw, "adagrad": adagrad,
-            "nesterov": nesterov_outer}[name](lr, **kw)
+            "nesterov": nesterov_outer,
+            "delay_nesterov": delay_compensated_nesterov}[name](lr, **kw)

@@ -301,11 +301,11 @@ def test_two_process_trace_digest_matches_sim(tmp_path):
     assert res["trace_digest"] == ref["trace_digest"]
     assert res["overlap_frac"] == ref["overlap_frac"] > 0.0
     assert res["utilization"] == ref["utilization"]
-    # real wall-clock spans: one per executed outer collective, two per
-    # stats reduction (the composition's vector + scalar-moment phases)
-    assert res["num_real_spans"] == (res["num_syncs"]
-                                     + 2 * res["num_stats_syncs"])
     assert res["real_span_time"] > 0.0
+    # the nonblocking contract, on the wall clock: dispatched collective
+    # windows (dispatch -> ready) must coincide with measured inner
+    # compute — async dispatch is real, not a simulated claim
+    assert res["real_overlap_frac"] > 0.0
     # the exported Perfetto file carries both clocks and validates
     data = json.loads(out.read_text())
     assert validate_perfetto(data) == []
@@ -313,5 +313,16 @@ def test_two_process_trace_digest_matches_sim(tmp_path):
     assert tr.sim_digest() == ref["trace_digest"]
     reals = tr.real_spans()
     assert len(reals) == res["num_real_spans"]
-    assert sum(s.kind == "outer" for s in reals) == res["num_syncs"]
+    # real-span census: one in-flight window per dispatched outer
+    # collective ("piggyback" when the phase-1 stats vector rode along,
+    # "outer" otherwise), one phase-2 moment reduction per fused fold,
+    # plus the noted inner-compute windows
+    kinds = {}
+    for s in reals:
+        kinds[s.kind] = kinds.get(s.kind, 0) + 1
+    assert (kinds.get("outer", 0) + kinds.get("piggyback", 0)
+            == res["num_syncs"])
+    assert kinds.get("piggyback", 0) == res["num_stats_syncs"] > 0
+    assert kinds.get("stats", 0) == res["num_stats_syncs"]
+    assert kinds.get("compute", 0) > 0
     assert all(s.duration > 0.0 for s in reals)

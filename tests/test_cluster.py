@@ -319,6 +319,68 @@ def test_tree_topology_level_and_domain_scopes():
         "cluster", "p0", "p1", "p0r0", "p0r1", "p1r0", "p1r1"}
 
 
+def test_edge_scope_prices_per_path_asymmetry():
+    """A window on one child's uplink (``scope="edge:<name>"``)
+    degrades only collectives and transfers whose route crosses that
+    child's single edge into its parent level — sibling paths, traffic
+    local to the child, and the other pod stay at clean pricing."""
+    profiles = make_rack_profiles([[2, 2], [2, 2]], **TOY)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3, pod_bw=1.5e5,
+                                  pod_latency=3e-3)
+    r00 = [p for p in profiles if p.pod == 0 and p.rack == 0]
+    r01 = [p for p in profiles if p.pod == 0 and p.rack == 1]
+    p0 = [p for p in profiles if p.pod == 0]
+    p1 = [p for p in profiles if p.pod == 1]
+    base = {k: topo.allreduce_time(1e3, g) for k, g in
+            [("r00", r00), ("r01", r01), ("p0", p0), ("p1", p1),
+             ("all", profiles)]}
+    a, c, d, e = profiles[0], profiles[2], profiles[4], profiles[6]
+    base_ac = topo.point_to_point_time(1e3, a, c)   # p0r0 -> p0r1
+    base_ad = topo.point_to_point_time(1e3, a, d)   # p0r0 -> p1r0
+    base_de = topo.point_to_point_time(1e3, d, e)   # p1r0 -> p1r1
+    topo.add_fabric_window(10.0, 1.0, bw_scale=0.1, scope="edge:p0r0")
+    # the degraded edge is p0r0's *uplink*, not its leaf ring
+    assert topo.allreduce_time(1e3, r00, now=10.5) == base["r00"]
+    # the sibling rack's own traffic never crosses p0r0's edge
+    assert topo.allreduce_time(1e3, r01, now=10.5) == base["r01"]
+    # pod- and cluster-spanning collectives include p0r0: degraded
+    assert topo.allreduce_time(1e3, p0, now=10.5) > base["p0"]
+    assert topo.allreduce_time(1e3, profiles, now=10.5) > base["all"]
+    # the other pod is untouched, symmetrically for point-to-point
+    assert topo.allreduce_time(1e3, p1, now=10.5) == base["p1"]
+    assert topo.point_to_point_time(1e3, a, c, now=10.5) > base_ac
+    assert topo.point_to_point_time(1e3, a, d, now=10.5) > base_ad
+    assert topo.point_to_point_time(1e3, d, e, now=10.5) == base_de
+    with pytest.raises(ValueError, match="unknown domain"):
+        topo.add_fabric_window(0.0, 1.0, scope="edge:nope")
+    with pytest.raises(ValueError, match="no uplink edge"):
+        topo.add_fabric_window(0.0, 1.0, scope="edge:cluster")
+
+
+def test_identity_uplink_window_keeps_symmetric_pricing_bit_identical():
+    """The per-path model is structurally guarded: an uplink schedule
+    that cannot deviate from the identity must price bit-for-bit like
+    the uplink-free fabric, and an *identity-valued* window (scale 1,
+    zero latency) must too — the asymmetric code path degenerates
+    exactly, so pre-uplink digests never move."""
+    def build():
+        profiles = make_rack_profiles([[2, 2], [2, 2]], **TOY)
+        return profiles, Topology.from_profiles(
+            profiles, inter_bw=1e5, inter_latency=4e-3, pod_bw=1.5e5,
+            pod_latency=3e-3)
+    profiles, clean = build()
+    profiles2, windowed = build()
+    windowed.add_fabric_window(0.0, None, bw_scale=1.0,
+                               extra_latency=0.0, scope="edge:p0r0")
+    for g, g2 in [(profiles, profiles2), (profiles[:4], profiles2[:4]),
+                  (profiles[:2], profiles2[:2])]:
+        assert clean.allreduce_time(1e3, g, now=0.5) == \
+            windowed.allreduce_time(1e3, g2, now=0.5)
+    assert clean.point_to_point_time(1e3, profiles[0], profiles[4]) == \
+        windowed.point_to_point_time(1e3, profiles2[0], profiles2[4])
+
+
 def test_explicit_tree_constructor_and_validation():
     tree = FabricDomain(name="root", bw=1e5, latency=1e-3, children=[
         FabricDomain(name="a", nodes=["n0", "n1"]),
@@ -427,22 +489,68 @@ def test_fabric_window_reprices_inflight_stats_collective():
     assert logs[True]["time_s"] > 5.0 * logs[False]["time_s"]
 
 
+def test_fabric_window_reprices_inflight_piggyback_collective():
+    """A congestion window opening while a *fused* piggyback collective
+    (outer params + phase-1 stats vector) is in flight must stretch
+    that single collective — the fused payload joins the re-pricing
+    registry ONCE, never as separate outer and stats entries, and its
+    wire-bytes accounting is invariant to the window."""
+    acfg = dataclasses.replace(BASE, enable_merge=False,
+                               num_init_trainers=1, num_outer_steps=2,
+                               stats_estimator="microbatch")
+    logs = {}
+    for congested in (False, True):
+        net = NetworkModel()
+        if congested:
+            # round 1's fused sync flies roughly [1ms, 5.8ms); open the
+            # window mid-flight
+            net.add_fabric_window(2e-3, 1.0, bw_scale=0.05,
+                                  extra_latency=0.1)
+        _, inits, streams = _quad_setup(k=1, M=2)
+        pool, _, rep = run_cluster(quad_loss, inits, streams, acfg,
+                                   policy="async", profiles=_profiles(2),
+                                   network=net)
+        kinds = [e["kind"] for e in pool.comms.log]
+        assert "outer" not in kinds and "stats" not in kinds
+        logs[congested] = [e for e in pool.comms.log
+                          if e["kind"] == "piggyback"]
+        assert len(logs[congested]) == rep.num_stats_syncs == 2
+    # bytes: identical fused payload either way (priced exactly once);
+    # time: launch-time pricing alone would keep the clean duration —
+    # the re-priced remainder under the degraded fabric dominates it
+    assert [e["bytes"] for e in logs[True]] == \
+        [e["bytes"] for e in logs[False]]
+    assert logs[True][0]["time_s"] > 5.0 * logs[False][0]["time_s"]
+
+
 def test_async_still_hides_outer_comm_under_adaptive():
-    """The stats agreement is serial (the next plan depends on it) but
-    the outer all-reduce still overlaps compute under async — adaptive
-    runs must keep the async < sync clock advantage."""
+    """The outer all-reduce overlaps compute under async, and the stats
+    phase no longer even gates the round boundary: its phase-1 vector
+    rides the outer sync as a fused ``piggyback`` collective — adaptive
+    runs must keep the async < sync clock advantage and pay zero
+    standalone stats collectives."""
     acfg = dataclasses.replace(BASE, enable_merge=False,
                                stats_estimator="microbatch")
-    sims = {}
+    sims, pools = {}, {}
     for policy in ("sync", "async"):
         _, inits, streams = _quad_setup()
-        _, _, rep = run_cluster(quad_loss, inits, streams, acfg,
-                                policy=policy,
-                                profiles=_profiles(6, ratio=2.0))
+        pool, _, rep = run_cluster(quad_loss, inits, streams, acfg,
+                                   policy=policy,
+                                   profiles=_profiles(6, ratio=2.0))
         sims[policy] = rep
+        pools[policy] = pool
     assert sims["async"].sim_time < sims["sync"].sim_time
-    assert sims["async"].num_stats_syncs == \
-        sims["sync"].num_stats_syncs > 0
+    assert sims["async"].num_stats_syncs > 0
+    assert sims["sync"].num_stats_syncs > 0
+    # sync keeps the inline gated stats path (bit-parity with the
+    # legacy loop); async fuses every stats phase onto an outer sync
+    kinds_sync = {e["kind"] for e in pools["sync"].comms.log}
+    kinds_async = {e["kind"] for e in pools["async"].comms.log}
+    assert "stats" in kinds_sync and "piggyback" not in kinds_sync
+    assert "piggyback" in kinds_async and "stats" not in kinds_async
+    n_piggy = sum(e["kind"] == "piggyback"
+                  for e in pools["async"].comms.log)
+    assert n_piggy == sims["async"].num_stats_syncs
 
 
 def test_rejects_unknown_policy_and_short_profiles():
@@ -611,6 +719,48 @@ def test_async_matches_sync_loss_on_tiny_lm():
     assert finals["async"] == pytest.approx(finals["sync"], rel=0.1)
 
 
+def test_delay_compensation_fixes_high_momentum_async():
+    """Regression for the documented staleness bug: outer_momentum=0.9
+    under the async policy's one-round-stale application is underdamped
+    — the run stalls far above the noise floor.  Delay compensation
+    scales the momentum by the measured staleness of each applied
+    pseudo-gradient (``mu / (1 + delay)``) and restores convergence."""
+    finals, floor = {}, None
+    for comp in (False, True):
+        acfg = dataclasses.replace(BASE, enable_merge=False,
+                                   num_outer_steps=14, lr_outer=1.0,
+                                   outer_momentum=0.9,
+                                   delay_compensation=comp)
+        prob, inits, streams = _quad_setup()
+        ev = _eval_fn(prob)
+        pool, _, _ = run_cluster(quad_loss, inits, streams, acfg,
+                                 policy="async",
+                                 profiles=_profiles(6, ratio=2.0),
+                                 eval_fn=ev)
+        finals[comp] = ev(pool.global_params)
+        floor = 0.5 * prob.noise ** 2
+    # uncompensated 0.9 oscillates: still > 2x the noise floor after 14
+    # outer rounds; compensated lands on the floor
+    assert finals[False] > 2.0 * floor
+    assert finals[True] < 1.1 * floor
+
+
+def test_delay_compensation_is_identity_at_zero_delay():
+    """Sync applies pseudo-gradients at delay 0, where the compensated
+    optimizer is bit-equal to plain Nesterov — flipping the flag must
+    not move a single bit of a synchronous trajectory."""
+    outs = {}
+    for comp in (False, True):
+        acfg = dataclasses.replace(BASE, enable_merge=False,
+                                   outer_momentum=0.9,
+                                   delay_compensation=comp)
+        _, inits, streams = _quad_setup()
+        pool, _, _ = run_cluster(quad_loss, inits, streams, acfg,
+                                 policy="sync", profiles=_profiles(6))
+        outs[comp] = np.asarray(pool.global_params["x"])
+    np.testing.assert_allclose(outs[False], outs[True], rtol=0, atol=0)
+
+
 def test_async_hides_communication_time():
     """Same numeric work, but the async clock must come in under sync
     whenever collectives cost nonzero time."""
@@ -688,6 +838,34 @@ def test_elastic_join_without_spares_is_noop():
                                scenario=scen)
     assert pool.k <= 3
     assert not any(e["kind"] == "join" for e in rep.applied_events)
+
+
+def test_leave_mid_flight_abandons_dispatched_outer():
+    """A leave landing between an outer dispatch and its fold must
+    abandon the in-flight handle cleanly: the absorbed trainer's
+    collective span is truncated at the preemption time, no stale
+    result folds into the merged pool, and the run still converges."""
+    from repro.cluster.trace import Trace
+    acfg = dataclasses.replace(BASE, enable_merge=False,
+                               num_outer_steps=6)
+    prob, inits, streams = _quad_setup()
+    tr = Trace()
+    # trainer 0's round-1 outer sync flies roughly [5.6ms, 10ms)
+    scen = [ClusterEvent(time=6e-3, kind="leave")]
+    pool, hist, rep = run_cluster(
+        quad_loss, inits, streams, acfg, policy="elastic",
+        profiles=_profiles(6, ratio=2.0), scenario=scen,
+        eval_fn=_eval_fn(prob), trace=tr)
+    leave = next(e for e in rep.applied_events if e["kind"] == "leave")
+    assert leave["time"] == pytest.approx(6e-3)
+    # the preempted collective is visible in the trace: an outer span
+    # cut at the leave time instead of running to its priced end
+    cut = [s for s in tr.spans if s.kind == "outer"
+           and ("left" in s.payload or "absorbed_leave" in s.payload)]
+    assert cut and all(s.t1 == pytest.approx(6e-3) for s in cut)
+    assert pool.k == 2
+    assert np.isfinite(np.asarray(pool.global_params["x"])).all()
+    assert hist.eval_loss[-1] < 0.5 * hist.eval_loss[0]
 
 
 # ------------------------------------------------------ time-to-target

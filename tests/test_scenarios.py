@@ -51,9 +51,13 @@ ACFG = AdLoCoConfig(num_outer_steps=8, num_inner_steps=5, lr_inner=0.05,
 #: switch mode on (microbatch estimator — deterministic jax numerics
 #: feed the batch decisions, and batch ints feed the clock), and their
 #: digests additionally pin the per-round batch/plan trajectory and the
-#: priced stats-reduction count
+#: priced stats-reduction count.  12 outer rounds (vs the fixed-batch
+#: harness's 8): async piggybacking makes every plan one round stale,
+#: so the ramp needs the extra rounds to cross the switch threshold
+#: and actually execute an "accum" round inside the run
 ACFG_ADAPTIVE = dataclasses.replace(ACFG, adaptive=True,
                                     stats_estimator="microbatch",
+                                    num_outer_steps=12,
                                     max_global_batch=256)
 
 #: stored digests: GOLDEN = the PR 2 fixture (2-pod topology), pinned
@@ -61,21 +65,24 @@ ACFG_ADAPTIVE = dataclasses.replace(ACFG, adaptive=True,
 #: split (neither may silently re-price them); GOLDEN3 = the co-scripted
 #: scenarios on the 3-level rack/pod/cluster fixture; GOLDENA = the
 #: adaptive-batching scenarios (2-pod fixture, async policy, batch ramp
-#: + stats collectives in the clock).  The values live in
-#: tests/goldens/scenarios.json so ``--update-goldens`` can rewrite
-#: them mechanically.
+#: + stats collectives in the clock); GOLDENM = the merge-enabled
+#: drifted-cluster scenario (round-tagged merges skipping laggards).
+#: The values live in tests/goldens/scenarios.json so
+#: ``--update-goldens`` can rewrite them mechanically.
 GOLDENS_PATH = pathlib.Path(__file__).parent / "goldens" / "scenarios.json"
 _STORED = json.loads(GOLDENS_PATH.read_text())
 GOLDEN = _STORED["GOLDEN"]
 GOLDEN3 = _STORED["GOLDEN3"]
 GOLDENA = _STORED["GOLDENA"]
+GOLDENM = _STORED["GOLDENM"]
 
 UPDATE_CMD = ("PYTHONPATH=src python -m pytest tests/test_scenarios.py "
               "--update-goldens")
 
 
 def _group_of(name: str) -> str:
-    return ("GOLDENA" if name in GOLDENA
+    return ("GOLDENM" if name in GOLDENM
+            else "GOLDENA" if name in GOLDENA
             else "GOLDEN3" if name in GOLDEN3 else "GOLDEN")
 
 
@@ -123,6 +130,27 @@ def _run3(name):
                        fixed_batch=4)
 
 
+def _run_merge(name):
+    """Merge-enabled drifted harness: the PR 2 fixture with
+    ``enable_merge=True`` under the elastic policy — the scenario's
+    slowdowns drift one trainer past ``merge_drift_window``, so the
+    round-tagged merge fires on time among the others and records the
+    laggard in its ``skipped`` list (the digest pins that).
+    ``merge_frequency=6`` gives the 8x-slowed trainer time to fall
+    several rounds behind by the first merge round (at merge round 3 it
+    would only be one round back — still inside the window)."""
+    profiles = make_pod_profiles([5, 5], ratio=2.0, **TOY)
+    interleaved = interleave_pods(profiles)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3)
+    prob, inits, streams = _quad_setup(k=3, M=2)
+    streams = streams + [QuadStream(prob, 100 + i) for i in range(4)]
+    acfg = dataclasses.replace(ACFG, enable_merge=True, merge_frequency=6)
+    return run_cluster(quad_loss, inits, streams, acfg, policy="elastic",
+                       profiles=interleaved, network=topo, scenario=name,
+                       fixed_batch=4)
+
+
 def _run_adaptive(name):
     """Adaptive harness: the PR 2 2-pod fixture under the async policy
     with the batch ramp on — every round prices a stats reduction and
@@ -158,6 +186,8 @@ _MEMO = {}
 
 
 def _run_by_group(name):
+    if name in GOLDENM:
+        return _run_merge(name)
     if name in GOLDENA:
         return _run_adaptive(name)
     return _run3(name) if name in GOLDEN3 else _run(name)
@@ -169,7 +199,8 @@ def _memo_run(name):
     return _MEMO[name]
 
 
-ALL_NAMES = sorted(GOLDEN) + sorted(GOLDEN3) + sorted(GOLDENA)
+ALL_NAMES = (sorted(GOLDEN) + sorted(GOLDEN3) + sorted(GOLDENA)
+             + sorted(GOLDENM))
 
 
 @pytest.mark.parametrize("name", ALL_NAMES)
@@ -197,7 +228,7 @@ def test_every_registered_scenario_has_a_golden():
     """Registering a scenario without pinning its trace defeats the
     regression net — add a digest here when adding a generator."""
     assert sorted(list_scenarios()) == sorted({**GOLDEN, **GOLDEN3,
-                                               **GOLDENA})
+                                               **GOLDENA, **GOLDENM})
 
 
 @pytest.mark.parametrize("name", ALL_NAMES)
@@ -227,9 +258,11 @@ def test_scenarios_exercise_their_event_kinds():
                 "rack_flap": {"fabric"},
                 "straggler_cascade": {"slowdown", "fabric"},
                 "adaptive_ramp": set(),
-                "congested_adaptive": {"fabric"}}
+                "congested_adaptive": {"fabric"},
+                "drifted_merge": {"slowdown"}}
     assert set(expected) == \
-        (set(GOLDEN) | set(GOLDEN3) | set(GOLDENA)) - {"baseline"}
+        (set(GOLDEN) | set(GOLDEN3) | set(GOLDENA)
+         | set(GOLDENM)) - {"baseline"}
     for name, kinds in expected.items():
         _, _, rep = _memo_run(name)
         assert kinds <= {e["kind"] for e in rep.applied_events}
@@ -244,15 +277,44 @@ def test_adaptive_scenarios_actually_ramp_and_price_stats():
     assert firsts[-1] > firsts[0]
     assert any(m == "accum" for ms in hist.modes for m in ms)
     assert rep.num_stats_syncs > 0
-    stats_log = [e for e in pool.comms.log if e["kind"] == "stats"]
+    # async + adaptive: every stats phase rides a fused "piggyback"
+    # collective on the outer sync — no standalone stats entries at all
+    stats_log = [e for e in pool.comms.log if e["kind"] == "piggyback"]
     assert len(stats_log) == rep.num_stats_syncs
+    assert not [e for e in pool.comms.log if e["kind"] == "stats"]
     assert all(e["time_s"] > 0.0 for e in stats_log)
     _, hist_c, rep_c = _memo_run("congested_adaptive")
     window = next(e for e in rep_c.applied_events if e["kind"] == "fabric")
     assert window["time"] < rep_c.sim_time
-    # congestion + re-priced collectives make the congested ramp
-    # strictly slower than the clean one on the simulated clock
-    assert rep_c.sim_time > rep.sim_time
+    # congestion + re-priced collectives cost strictly more wire time,
+    # and — because async plans fold when the (stretched) collective
+    # lands — the congested run's batch decisions arrive late and
+    # starve the ramp: it never reaches the clean run's peak batch
+    assert rep_c.comm_time > rep.comm_time
+    peak = max(b for bs in hist.requested_batches for b in bs)
+    peak_c = max(b for bs in hist_c.requested_batches for b in bs)
+    assert peak_c < peak
+
+
+def test_drifted_merge_skips_the_laggard():
+    """The merge-semantics fix, end to end: the drifted trainer must be
+    recorded in the merge's ``skipped`` list and survive untouched,
+    while the up-to-date trainers merge on time — the old behavior
+    (stall the merge until the slowest trainer catches up, then fold
+    its rounds-stale params into the pool) is gone."""
+    pool, _, rep = _memo_run("drifted_merge")
+    merges = [e for e in rep.applied_events if e["kind"] == "merge"]
+    assert merges, f"no merge fired: {rep.applied_events}"
+    first = merges[0]
+    # the merge is round-tagged and fires at its scheduled round
+    # (harness merge_frequency=6), not whenever the laggard catches up
+    assert first["round"] == 6
+    # the slowed trainer (nodes 2,3 -> tid 1) drifted past the window
+    # and was skipped, not merged
+    assert 1 in first["skipped"]
+    assert 1 not in first["merged"]
+    # skipping is not dying: the laggard is still in the pool
+    assert any(t.tid == 1 for t in pool.trainers)
 
 
 def test_build_scenario_rejects_unknown_name():

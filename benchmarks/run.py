@@ -13,6 +13,7 @@ Emits ``name,us_per_call,derived`` CSV.
   kernel   kernels_bench.py      Pallas kernels vs jnp oracle
   roofline roofline_table.py     dry-run roofline baselines (40 pairs x 2 meshes)
   cluster  cluster_bench.py      sync vs async vs elastic on simulated hardware
+  serve    serve_bench.py        dense vs paged continuous batching under traffic
 """
 from __future__ import annotations
 
@@ -28,6 +29,7 @@ MODULES = [
     ("kernel", "benchmarks.kernels_bench"),
     ("roofline", "benchmarks.roofline_table"),
     ("cluster", "benchmarks.cluster_bench"),
+    ("serve", "benchmarks.serve_bench"),
 ]
 
 

@@ -1,0 +1,233 @@
+"""Serving benchmark: dense vs paged continuous batching under traced
+traffic.
+
+For each traffic trace (``repro.serve.traffic``: steady / bursty /
+flash_crowd arrival processes mirroring the cluster scenario shapes)
+the bench drives the SAME materialized request set through two arms at
+EQUAL cache memory (positions/layer = dense n_slots * cache_len =
+paged num_blocks * block_size):
+
+  dense   the seed fixed-slot batcher — concurrency pinned at n_slots
+          because every slot preallocates worst-case rows
+  paged   the block-pool batcher — short requests hold only the blocks
+          they touch, so more lanes fit in the same memory
+
+Every gated number is TICK-based and bit-deterministic (wall-clock
+tokens/s is printed to stderr for humans, never gated): per-row
+``us_per_call`` is the scheduler tick count (5% drift band), and the
+``serve/summary`` row pins — exactly, via the committed
+``BENCH_serve.json`` baseline — per-trace throughput (tokens/tick),
+p50/p99 request latency in ticks, peak concurrency, plus the
+acceptance booleans: the paged arm sustains strictly more concurrent
+requests than dense on every trace, leaks no blocks, and matches the
+dense batcher AND per-request ``serve.generate`` token-for-token.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py            # full
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke    # CI lane
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke \\
+      --json serve.json --baseline BENCH_serve.json
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+
+from repro import models, serve
+from repro.configs import get_config, reduced
+from repro.serve import traffic
+from repro.serve.scheduler import ContinuousBatcher, DenseBatcher, Request
+
+from benchmarks.common import row
+
+ARCH = "qwen3-0.6b"
+TRACES = ("steady", "bursty", "flash_crowd")
+
+# equal cache memory: 4 * 32 = 128 positions/layer on both arms; the
+# paged arm spends it on 8 lanes of shared 8-token blocks instead of 4
+# preallocated worst-case slots
+DENSE = dict(n_slots=4, cache_len=32)
+PAGED = dict(n_slots=8, cache_len=32, block_size=8, num_blocks=16,
+             chunk_size=4)
+
+_setup_cache = None
+
+
+def _setup():
+    global _setup_cache
+    if _setup_cache is None:
+        cfg = reduced(get_config(ARCH))
+        params = models.init_params(cfg, jax.random.PRNGKey(0))
+        _setup_cache = (cfg, params)
+    return _setup_cache
+
+
+def _arrivals(trace: str, n: int):
+    cfg, _ = _setup()
+    arr = traffic.make_arrivals(trace, n_requests=n, seed=7,
+                                prompt_lo=4, prompt_hi=12,
+                                new_lo=4, new_hi=10)
+    return traffic.materialize(arr, cfg.vocab_size, seed=7)
+
+
+def bench_trace(trace: str, arm: str, n: int):
+    cfg, params = _setup()
+    cls, kw = ((DenseBatcher, DENSE) if arm == "dense"
+               else (ContinuousBatcher, PAGED))
+    cb = cls(params, cfg, **kw)
+    t0 = time.perf_counter()
+    rep = cb.run_trace(_arrivals(trace, n))
+    wall = time.perf_counter() - t0
+    print(f"# serve/{trace}/{arm}: {rep.tokens} tokens in {wall:.2f}s "
+          f"wall ({rep.tokens / max(wall, 1e-9):.1f} tok/s)",
+          file=sys.stderr, flush=True)
+    leak_free = True
+    if arm == "paged":
+        leak_free = cb.pool.no_leak()
+    outputs = {r: cb.finished[r].generated for r in cb.finished}
+    return rep, leak_free, outputs
+
+
+def parity_check(n: int = 4) -> bool:
+    """Paged greedy output == per-request serve.generate on shared
+    prompts (the dense-vs-paged match is gated per trace)."""
+    cfg, params = _setup()
+    import numpy as np
+    rng = np.random.default_rng(9)
+    prompts = [list(map(int, rng.integers(0, cfg.vocab_size, (5,))))
+               for _ in range(n)]
+    want = [serve.generate(params, cfg, jnp.asarray([p], jnp.int32),
+                           max_new_tokens=4, cache_len=32).tokens[0]
+            for p in prompts]
+    cb = ContinuousBatcher(params, cfg, **PAGED)
+    for i, p in enumerate(prompts):
+        cb.submit(Request(rid=i, tokens=p, max_new_tokens=4))
+    done = cb.run()
+    return all(done[i].generated == want[i] for i in range(n))
+
+
+def run(quick: bool = False):
+    n = 10 if quick else 20
+    rows, bits = [], []
+    for trace in TRACES:
+        reps, outs = {}, {}
+        paged_leak_free = True
+        for arm in ("dense", "paged"):
+            rep, leak_free, outputs = bench_trace(trace, arm, n)
+            reps[arm] = rep
+            outs[arm] = outputs
+            if arm == "paged":
+                paged_leak_free = leak_free
+            rows.append(row(
+                f"serve/{trace}/{arm}", float(rep.ticks),
+                f"ticks={rep.ticks};idle={rep.idle_ticks};"
+                f"tokens={rep.tokens};"
+                f"finished={rep.requests_finished};"
+                f"tok_per_tick={rep.tokens_per_tick:.4f};"
+                f"p50={rep.p50_latency:.1f};p99={rep.p99_latency:.2f};"
+                f"ttft_p50={rep.p50_ttft:.1f};"
+                f"maxconc={rep.max_concurrency};"
+                f"occupancy={rep.mean_occupancy:.4f};"
+                f"peak_blocks={rep.peak_blocks};"
+                f"preempts={rep.preemptions}"))
+        d, p = reps["dense"], reps["paged"]
+        bits.append(
+            f"{trace}_paged_tok_per_tick={p.tokens_per_tick:.4f};"
+            f"{trace}_paged_p50={p.p50_latency:.1f};"
+            f"{trace}_paged_p99={p.p99_latency:.2f};"
+            f"{trace}_dense_p50={d.p50_latency:.1f};"
+            f"{trace}_dense_p99={d.p99_latency:.2f};"
+            f"{trace}_paged_more_concurrent="
+            f"{p.max_concurrency > d.max_concurrency};"
+            f"{trace}_no_block_leak={paged_leak_free};"
+            f"{trace}_paged_matches_dense={outs['paged'] == outs['dense']}")
+    bits.append(f"paged_matches_generate={parity_check()}")
+    rows.append(row("serve/summary", 0.0, ";".join(bits)))
+    return rows
+
+
+def main(argv=None) -> int:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI run (fewer requests per trace)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the sweep rows as JSON — CI uploads "
+                         "this as a workflow artifact and diffs it "
+                         "against the committed BENCH_serve.json "
+                         "baseline (tick metrics are deterministic, so "
+                         "the file is reproducible)")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="compare the sweep rows against a stored "
+                         "baseline JSON and fail on any drift")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    ok = True
+    rows = run(quick=args.smoke)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\"",
+              flush=True)
+        if r["name"] == "serve/summary":
+            # acceptance gates: paged strictly more concurrent at equal
+            # memory on every trace, no leaked blocks, token-for-token
+            # parity with the dense batcher and per-request generate
+            ok = ok and all(
+                kv.split("=")[1] == "True"
+                for kv in r["derived"].split(";")
+                if kv.split("=")[0].endswith(
+                    ("_paged_more_concurrent", "_no_block_leak",
+                     "_paged_matches_dense"))
+                or kv.split("=")[0] == "paged_matches_generate")
+    # read the baseline BEFORE writing --json: if both flags resolve to
+    # the same file (case-insensitive filesystems!), writing first would
+    # clobber the baseline and the gate would compare it to itself
+    base = None
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+    if args.json:
+        blob = {"bench": "serve_bench",
+                "args": {"smoke": bool(args.smoke)},
+                "ok": ok, "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(blob, f, indent=2, sort_keys=True)
+            f.write("\n")
+    if base is not None:
+        # row set/order and the summary (throughput, latency and the
+        # acceptance booleans) must match exactly; tick counts get a 5%
+        # band to mirror the cluster gate even though they are integers
+        drift = []
+        if [r["name"] for r in rows] != [r["name"] for r in base["rows"]]:
+            drift.append("row names/order changed")
+        for a, b in zip(rows, base["rows"]):
+            if a["name"].endswith("summary") and a["derived"] != \
+                    b["derived"]:
+                drift.append(f"{a['name']}: {a['derived']!r} != "
+                             f"{b['derived']!r}")
+            hi = max(abs(a["us_per_call"]), abs(b["us_per_call"]), 1e-9)
+            if abs(a["us_per_call"] - b["us_per_call"]) / hi > 0.05:
+                drift.append(f"{a['name']}: {a['us_per_call']:.1f} ticks "
+                             f"vs baseline {b['us_per_call']:.1f}")
+        if drift:
+            flags = ["--smoke"] if args.smoke else []
+            print(f"BASELINE DRIFT vs {args.baseline}:\n  "
+                  + "\n  ".join(drift)
+                  + "\nIf the scheduler change is intended, regenerate "
+                  f"with:\n"
+                  f"  PYTHONPATH=src python benchmarks/serve_bench.py "
+                  f"{' '.join(flags)} --json {args.baseline}\n"
+                  f"and commit the diff.")
+            return 1
+        print(f"baseline OK: {len(rows)} rows within tolerance of "
+              f"{args.baseline}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,10 @@
 """Continuous batching: requests of different lengths join and leave the
 decode batch mid-flight — no slot idles waiting for a straggler.
 
+Part 1 drives a mixed bag of requests through the paged batcher by
+hand; part 2 replays a flash-crowd arrival trace and prints the
+scheduler report (tokens/tick, latency percentiles, peak concurrency).
+
   PYTHONPATH=src python examples/continuous_batching.py
 """
 import time
@@ -10,6 +14,7 @@ import numpy as np
 
 from repro import models
 from repro.configs import get_config, reduced
+from repro.serve import traffic
 from repro.serve.scheduler import ContinuousBatcher, Request
 
 
@@ -41,6 +46,21 @@ def main():
         r = done[rid]
         print(f"  req {rid}: prompt {len(r.tokens):2d} toks -> "
               f"{r.generated}")
+
+    # part 2: a flash crowd lands on the paged batcher — short requests
+    # hold only the blocks they touch, so concurrency can ride above
+    # what a dense cache of equal memory would ever admit
+    arr = traffic.make_arrivals("flash_crowd", n_requests=12, seed=3)
+    cb = ContinuousBatcher(params, cfg, n_slots=6, cache_len=32,
+                           block_size=8, num_blocks=12, chunk_size=4)
+    rep = cb.run_trace(traffic.materialize(arr, cfg.vocab_size, seed=3))
+    print(f"\nflash_crowd x12 on 12 shared blocks: "
+          f"{rep.tokens} tokens in {rep.ticks} ticks "
+          f"({rep.tokens_per_tick:.2f} tok/tick), "
+          f"p50 latency {rep.p50_latency:.0f} ticks, "
+          f"peak concurrency {rep.max_concurrency}, "
+          f"peak blocks {rep.peak_blocks}, "
+          f"preemptions {rep.preemptions}")
 
 
 if __name__ == "__main__":

@@ -38,10 +38,11 @@ def init_cache(cfg: ModelConfig, params, batch_size: int, cache_len: int,
     return lm.init_cache(cfg, batch_size, cache_len)
 
 
-def decode_step(params, cache, token, pos, cfg: ModelConfig):
+def decode_step(params, cache, token, pos, cfg: ModelConfig, *, active=None):
     if cfg.is_encoder_decoder:
+        assert active is None, "lane masking is decoder-only-LM serving"
         return encdec.decode_step(params, cache, token, pos, cfg)
-    return lm.decode_step(params, cache, token, pos, cfg)
+    return lm.decode_step(params, cache, token, pos, cfg, active=active)
 
 
 def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *,
@@ -49,6 +50,27 @@ def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *,
     assert not cfg.is_encoder_decoder
     return lm.prefill(params, tokens, cfg, cache_len, prefix_emb=prefix_emb,
                       use_kernels=use_kernels, last_only=last_only)
+
+
+def init_paged_cache(cfg: ModelConfig, n_lanes: int, num_blocks: int,
+                     block_size: int):
+    """Block-pool KV cache for paged serving (decoder-only LMs)."""
+    assert not cfg.is_encoder_decoder
+    return lm.init_paged_cache(cfg, n_lanes, num_blocks, block_size)
+
+
+def decode_step_paged(params, cache, token, pos, cfg: ModelConfig,
+                      tables, active, *, block_size: int):
+    assert not cfg.is_encoder_decoder
+    return lm.decode_step_paged(params, cache, token, pos, cfg,
+                                tables, active, block_size=block_size)
+
+
+def prefill_chunk_paged(params, cache, tokens, pos0, cfg: ModelConfig,
+                        table_row, lane: int, *, block_size: int):
+    assert not cfg.is_encoder_decoder
+    return lm.prefill_chunk_paged(params, cache, tokens, pos0, cfg,
+                                  table_row, lane, block_size=block_size)
 
 
 def example_batch(cfg: ModelConfig, batch: int, seq: int, key=None):
@@ -69,4 +91,5 @@ def example_batch(cfg: ModelConfig, batch: int, seq: int, key=None):
 
 
 __all__ = ["init_params", "loss_fn", "init_cache", "decode_step", "prefill",
+           "init_paged_cache", "decode_step_paged", "prefill_chunk_paged",
            "example_batch", "lm", "encdec"]

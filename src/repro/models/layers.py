@@ -270,6 +270,39 @@ def decode_attention(p, x, cfg: ModelConfig, k_cache, v_cache, pos, *,
     return out @ p["o"]
 
 
+def gathered_attention(q, k_cache, v_cache, qpos, kv_pos, *, window=None):
+    """Multi-query attention against a gathered (paged) KV cache.
+
+    q: (B,Sq,H,hd) already RoPE'd (``qkv_project``); k_cache/v_cache:
+    (B,C,Hk,hd) gathered from the block pool and ALREADY containing the
+    chunk's own k/v; qpos: (B,Sq) absolute positions of the queries;
+    kv_pos: (B,C) absolute position held by each gathered slot (-1 =
+    unallocated/unwritten -> masked out).
+
+    Generalizes ``decode_attention`` to Sq queries — the chunked-prefill
+    counterpart.  Masked slots hit exactly -1e30 before the softmax, so
+    extra (unwritten) pool slots contribute exactly 0.0 to both the
+    normalizer and the value contraction: the result is bit-identical to
+    ``sdpa`` over the same live positions.
+    """
+    B, Sq, H, hd = q.shape
+    Hk = k_cache.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Sq, Hk, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache).astype(jnp.float32)
+    logits *= scale
+    kv = kv_pos[:, None, :]                              # (B,1,C)
+    qp = qpos[:, :, None]                                # (B,Sq,1)
+    mask = (kv <= qp) & (kv >= 0)                        # (B,Sq,C)
+    if window is not None:
+        mask &= kv > qp - window
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_cache)
+    return out.reshape(B, Sq, H, hd)
+
+
 def project_kv_one(p, x, cfg: ModelConfig, pos):
     """k/v for a single new token: x (B,1,d) -> (B,1,Hk,hd) each.
     ``pos`` scalar or (B,)."""
@@ -411,17 +444,23 @@ def init_mamba(key, cfg: ModelConfig, dtype):
     }
 
 
-def causal_conv1d(x, w, b):
-    """Depthwise causal conv: x (B,S,di), w (cw,di) -> (B,S,di)."""
+def causal_conv1d(x, w, b, prev=None):
+    """Depthwise causal conv: x (B,S,di), w (cw,di) -> (B,S,di).
+
+    ``prev``: (B,cw-1,di) raw inputs preceding x (carried conv state for
+    chunked prefill); None = zeros (sequence start — unchanged math)."""
     cw = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    if prev is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
     out = jnp.zeros_like(x)
     for i in range(cw):  # cw is tiny (4): unrolled taps, no conv primitive
         out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
     return out + b[None, None, :]
 
 
-def ssm_scan_seq(u, dt, A, Bmat, Cmat, sub: int = 16):
+def ssm_scan_seq(u, dt, A, Bmat, Cmat, sub: int = 16, h0=None):
     """Selective scan via sub-block sequential recurrence (§Perf pair-1
     iteration 2).
 
@@ -469,8 +508,9 @@ def ssm_scan_seq(u, dt, A, Bmat, Cmat, sub: int = 16):
         # dynamic-update-slice; one cast after the scan is free
         return h, jnp.stack(ys, axis=1)                      # (B,sub,di) f32
 
-    h0 = jnp.zeros((Bsz, di, n), jnp.float32)
-    h_last, yb = jax.lax.scan(blk, h0, (ub, dtb, Bb, Cb))
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, n), jnp.float32)
+    h_last, yb = jax.lax.scan(blk, h0.astype(jnp.float32), (ub, dtb, Bb, Cb))
     y = yb.swapaxes(0, 1).reshape(Bsz, Sp, di)[:, :S].astype(u.dtype)
     return y, h_last.astype(u.dtype)
 
@@ -575,3 +615,34 @@ def mamba_decode(p, x, cfg: ModelConfig, conv_state, ssm_state):
     y = y + x_c * p["D"][None].astype(x.dtype)
     out = (y * jax.nn.silu(z)) @ p["out_proj"]
     return out[:, None], window[:, 1:], h.astype(ssm_state.dtype)
+
+
+def mamba_forward_chunk(p, x, cfg: ModelConfig, conv_state, ssm_state):
+    """``mamba_forward`` with carried decode state — the chunked-prefill
+    SSM path.
+
+    x: (B,S,d) chunk; conv_state: (B,cw-1,di) raw conv inputs preceding
+    the chunk; ssm_state: (B,di,n).  Returns (out (B,S,d), state dict as
+    in ``mamba_forward(return_state=True)``).  Runs the same f32
+    recurrence as ``mamba_forward(..., scan_impl="seq")`` continued from
+    the given state, so a prompt processed in chunks matches one-shot
+    prefill bit-for-bit (f32 models; bf16 pays one state-dtype
+    round-trip per chunk boundary).
+    """
+    ssm = cfg.ssm
+    n, dtr = ssm.state_dim, cfg.dt_rank
+    cw = ssm.conv_dim
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(causal_conv1d(x_in, p["conv_w"], p["conv_b"],
+                                    prev=conv_state))
+    dbc = x_c @ p["x_proj"]
+    dt_r, Bm, Cm = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus((dt_r @ p["dt_w"]).astype(jnp.float32)
+                         + p["dt_b"][None, None]).astype(x.dtype)
+    y, h_last = ssm_scan_seq(x_c, dt, p["A_log"], Bm, Cm, h0=ssm_state)
+    y = y + x_c * p["D"][None, None].astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    new_conv = jnp.concatenate([conv_state.astype(x_in.dtype), x_in],
+                               axis=1)[:, -(cw - 1):, :]
+    return out, {"conv": new_conv, "ssm": h_last}

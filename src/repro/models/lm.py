@@ -331,19 +331,40 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
     return cache
 
 
-def _decode_layer(p, x, cfg: ModelConfig, is_global, cache_slice, pos, C):
+def _mask_state(new, old, active):
+    """Keep ``old`` state rows for inactive lanes (retired slots must not
+    accumulate garbage).  active: (B,) bool; state leading axis is B."""
+    if active is None:
+        return new
+    keep = active.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(keep, new, old)
+
+
+def _decode_layer(p, x, cfg: ModelConfig, is_global, cache_slice, pos, C,
+                  active=None):
     """One layer, one token.  cache_slice: this layer's cache entries
-    (already containing slots for positions < pos).  Returns (x, new_slice)."""
+    (already containing slots for positions < pos).  Returns (x, new_slice).
+
+    ``active``: optional (B,) bool — continuous batching's lane mask.
+    Inactive lanes (freed slots still riding the fixed-shape batch) keep
+    their cache/state rows untouched instead of writing garbage at
+    whatever stale position they hold."""
     new_cache = {}
     if cfg.arch_type == "ssm":
         h = L.rms_norm(x, p["norm"], cfg.rms_eps)
         y, conv, ssm = L.mamba_decode(p["mamba"], h, cfg,
                                       cache_slice["conv"], cache_slice["ssm"])
-        return x + y, {"conv": conv, "ssm": ssm}
+        return x + y, {"conv": _mask_state(conv, cache_slice["conv"], active),
+                       "ssm": _mask_state(ssm, cache_slice["ssm"], active)}
     h = L.rms_norm(x, p["attn_norm"], cfg.rms_eps)
     k_new, v_new = L.project_kv_one(p["attn"], h, cfg, pos)
     slot = jnp.mod(jnp.asarray(pos), C)
     if slot.ndim == 0:                   # lockstep batch: one slot
+        if active is not None:
+            old_k = jax.lax.dynamic_slice_in_dim(cache_slice["k"], slot, 1, 1)
+            old_v = jax.lax.dynamic_slice_in_dim(cache_slice["v"], slot, 1, 1)
+            k_new = _mask_state(k_new, old_k, active)
+            v_new = _mask_state(v_new, old_v, active)
         k_cache = jax.lax.dynamic_update_slice_in_dim(
             cache_slice["k"], k_new, slot, axis=1)
         v_cache = jax.lax.dynamic_update_slice_in_dim(
@@ -351,8 +372,12 @@ def _decode_layer(p, x, cfg: ModelConfig, is_global, cache_slice, pos, C):
     else:                                # per-request positions (B,)
         B = k_new.shape[0]
         rows = jnp.arange(B)
-        k_cache = cache_slice["k"].at[rows, slot].set(k_new[:, 0])
-        v_cache = cache_slice["v"].at[rows, slot].set(v_new[:, 0])
+        k_w, v_w = k_new[:, 0], v_new[:, 0]
+        if active is not None:
+            k_w = _mask_state(k_w, cache_slice["k"][rows, slot], active)
+            v_w = _mask_state(v_w, cache_slice["v"][rows, slot], active)
+        k_cache = cache_slice["k"].at[rows, slot].set(k_w)
+        v_cache = cache_slice["v"].at[rows, slot].set(v_w)
     new_cache["k"], new_cache["v"] = k_cache, v_cache
     window = None
     if cfg.sliding_window is not None:
@@ -365,7 +390,8 @@ def _decode_layer(p, x, cfg: ModelConfig, is_global, cache_slice, pos, C):
         m, conv, ssm = L.mamba_decode(p["mamba"], h, cfg,
                                       cache_slice["conv"], cache_slice["ssm"])
         a = 0.5 * (a + m)
-        new_cache["conv"], new_cache["ssm"] = conv, ssm
+        new_cache["conv"] = _mask_state(conv, cache_slice["conv"], active)
+        new_cache["ssm"] = _mask_state(ssm, cache_slice["ssm"], active)
     x = x + a
     h2 = L.rms_norm(x, p["mlp_norm"], cfg.rms_eps)
     if cfg.moe is not None:
@@ -377,8 +403,10 @@ def _decode_layer(p, x, cfg: ModelConfig, is_global, cache_slice, pos, C):
     return x + y, new_cache
 
 
-def decode_step(params, cache, token, pos, cfg: ModelConfig):
-    """token (B,) int32, pos scalar int32 -> (logits (B,V), new cache)."""
+def decode_step(params, cache, token, pos, cfg: ModelConfig, *, active=None):
+    """token (B,) int32, pos scalar or (B,) int32 -> (logits (B,V), new
+    cache).  ``active``: optional (B,) bool lane mask — inactive lanes
+    compute but never write to cache/state (continuous batching)."""
     x = params["embed"][token][:, None, :] * jnp.asarray(
         math.sqrt(cfg.d_model), _dtype(cfg))
     is_global = layer_is_global(cfg)
@@ -386,7 +414,8 @@ def decode_step(params, cache, token, pos, cfg: ModelConfig):
 
     def body(x, scanned):
         p, g, cache_slice = scanned
-        x, new_slice = _decode_layer(p, x, cfg, g, cache_slice, pos, C)
+        x, new_slice = _decode_layer(p, x, cfg, g, cache_slice, pos, C,
+                                     active=active)
         return x, new_slice
 
     x, new_cache = jax.lax.scan(body, x, (params["layers"], is_global, cache))
@@ -493,3 +522,205 @@ def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *,
     else:
         logits = x @ params["lm_head"]
     return logits, cache
+
+
+# --------------------------------------------------------------------
+# paged KV cache (block pool + block tables) — serving
+# --------------------------------------------------------------------
+#
+# Layout: one pool of fixed-size blocks shared by every lane,
+#   kp, vp      : (L, num_blocks + 1, block_size, Hk, hd)
+# addressed through per-lane block tables (n_lanes, nb_max) int32 where
+# entry j maps logical block j (positions j*bs .. j*bs+bs-1, identity
+# layout — no ring) to a physical block, or -1 if unallocated.  The LAST
+# pool row is a scratch block: masked (inactive-lane) writes land there
+# with zero values, so colliding scatter indices stay deterministic.
+# SSM/hybrid decode state is O(1) per lane and needs no paging:
+#   conv, ssm   : (L, n_lanes, cw-1, di), (L, n_lanes, di, n)
+# Block accounting (free list, table assembly) is host-side, in
+# ``repro.serve.paged_cache``.
+
+def init_paged_cache(cfg: ModelConfig, n_lanes: int, num_blocks: int,
+                     block_size: int):
+    dt = _dtype(cfg)
+    Ln = cfg.num_layers
+    cache = {}
+    if _has_attn(cfg):
+        hd = cfg.resolved_head_dim
+        cache["kp"] = jnp.zeros(
+            (Ln, num_blocks + 1, block_size, cfg.num_kv_heads, hd), dt)
+        cache["vp"] = jnp.zeros(
+            (Ln, num_blocks + 1, block_size, cfg.num_kv_heads, hd), dt)
+    if _has_mamba(cfg):
+        ssm = cfg.ssm
+        di = cfg.d_inner
+        cache["conv"] = jnp.zeros((Ln, n_lanes, ssm.conv_dim - 1, di), dt)
+        cache["ssm"] = jnp.zeros((Ln, n_lanes, di, ssm.state_dim), dt)
+    return cache
+
+
+def decode_step_paged(params, cache, token, pos, cfg: ModelConfig,
+                      tables, active, *, block_size: int):
+    """One decode tick over the paged cache.
+
+    token, pos, active : (B,) int32 / int32 / bool — B lanes in lockstep,
+        each at its own absolute position; inactive lanes compute but
+        write only zeros into the scratch block and keep their SSM state.
+    tables : (B, nb_max) int32 physical-block table per lane (-1 = not
+        allocated).  Returns (logits (B, V), new cache).
+
+    Numerics match the dense per-request decode path bit-for-bit: the
+    gathered (B, nb*bs, Hk, hd) cache view feeds the same
+    ``decode_attention`` einsums, and slots beyond a lane's allocation
+    carry kv_pos = -1, masking them to exact zeros in the softmax.
+    """
+    x = params["embed"][token][:, None, :] * jnp.asarray(
+        math.sqrt(cfg.d_model), _dtype(cfg))
+    is_global = layer_is_global(cfg)
+    B = token.shape[0]
+    bs = block_size
+    if _has_attn(cfg):
+        nb = tables.shape[1]
+        scratch = cache["kp"].shape[1] - 1
+        blk = jnp.clip(pos // bs, 0, nb - 1)
+        off = jnp.mod(pos, bs)
+        phys = jnp.take_along_axis(tables, blk[:, None], axis=1)[:, 0]
+        ok = active & (phys >= 0)
+        phys_w = jnp.where(ok, phys, scratch)          # (B,)
+        tab_c = jnp.where(tables >= 0, tables, scratch)
+        slot_idx = jnp.arange(nb * bs, dtype=jnp.int32)
+        valid = jnp.repeat(tables >= 0, bs, axis=1)    # (B, nb*bs)
+        kv_pos = jnp.where(valid, slot_idx[None], -1)
+
+    def body(x, scanned):
+        p, g, cs = scanned
+        new = {}
+        if cfg.arch_type == "ssm":
+            h = L.rms_norm(x, p["norm"], cfg.rms_eps)
+            y, conv, ssm = L.mamba_decode(p["mamba"], h, cfg,
+                                          cs["conv"], cs["ssm"])
+            return x + y, {"conv": _mask_state(conv, cs["conv"], active),
+                           "ssm": _mask_state(ssm, cs["ssm"], active)}
+        h = L.rms_norm(x, p["attn_norm"], cfg.rms_eps)
+        k_new, v_new = L.project_kv_one(p["attn"], h, cfg, pos)
+        # inactive / unallocated lanes scatter ZEROS into the shared
+        # scratch block — identical colliding writes are deterministic
+        k_w = jnp.where(ok[:, None, None], k_new[:, 0], 0)
+        v_w = jnp.where(ok[:, None, None], v_new[:, 0], 0)
+        kp = cs["kp"].at[phys_w, off].set(k_w)
+        vp = cs["vp"].at[phys_w, off].set(v_w)
+        new["kp"], new["vp"] = kp, vp
+        k_cache = kp[tab_c].reshape(B, nb * bs, cfg.num_kv_heads, -1)
+        v_cache = vp[tab_c].reshape(B, nb * bs, cfg.num_kv_heads, -1)
+        window = None
+        if cfg.sliding_window is not None:
+            window = jnp.where(g, L.GLOBAL_WINDOW, cfg.sliding_window)
+        a = L.decode_attention(p["attn"], h, cfg, k_cache, v_cache, pos,
+                               window=window, kv_pos_of_slot=kv_pos)
+        if cfg.hybrid:
+            m, conv, ssm = L.mamba_decode(p["mamba"], h, cfg,
+                                          cs["conv"], cs["ssm"])
+            a = 0.5 * (a + m)
+            new["conv"] = _mask_state(conv, cs["conv"], active)
+            new["ssm"] = _mask_state(ssm, cs["ssm"], active)
+        x = x + a
+        h2 = L.rms_norm(x, p["mlp_norm"], cfg.rms_eps)
+        if cfg.moe is not None:
+            y, _ = L.moe_block(p["moe"], h2.reshape(B, -1), cfg)
+            y = y.reshape(B, 1, -1)
+        else:
+            y = L.swiglu(h2, p["gate"], p["up"], p["down"])
+        return x + y, new
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], is_global, cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = x[:, 0] @ params["embed"].T
+    else:
+        logits = x[:, 0] @ params["lm_head"]
+    return logits, new_cache
+
+
+def prefill_chunk_paged(params, cache, tokens, pos0, cfg: ModelConfig,
+                        table_row, lane: int, *, block_size: int):
+    """Prefill one chunk of one lane's prompt into the paged cache.
+
+    tokens : (1, Sc) chunk covering absolute positions
+        [pos0, pos0 + Sc); blocks spanning that range must already be
+        allocated in ``table_row`` ((nb_max,) int32, -1 = unallocated).
+    lane : which per-lane SSM state row carries across chunks.
+
+    Chunked prefill is exact: attention sees every previously-written
+    position via the gathered cache, and the SSM chunk continues the
+    carried (conv, ssm) state with the same f32 recurrence as one-shot
+    prefill.  Returns (last-position logits (1, V), new cache).
+    """
+    B, Sc = tokens.shape
+    x = params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), _dtype(cfg))
+    is_global = layer_is_global(cfg)
+    positions = pos0 + jnp.arange(Sc, dtype=jnp.int32)
+    if _has_attn(cfg):
+        bs = block_size
+        nb = table_row.shape[0]
+        scratch = cache["kp"].shape[1] - 1
+        blk = jnp.clip(positions // bs, 0, nb - 1)
+        off = jnp.mod(positions, bs)
+        phys = table_row[blk]
+        phys_w = jnp.where(phys >= 0, phys, scratch)   # (Sc,)
+        tab_c = jnp.where(table_row >= 0, table_row, scratch)
+        slot_idx = jnp.arange(nb * bs, dtype=jnp.int32)
+        kv_pos = jnp.where(jnp.repeat(table_row >= 0, bs),
+                           slot_idx, -1)[None]         # (1, nb*bs)
+        qpos = positions[None]                         # (1, Sc)
+
+    def body(x, scanned):
+        p, g, cs = scanned
+        new = {}
+        if cfg.arch_type == "ssm":
+            h = L.rms_norm(x, p["norm"], cfg.rms_eps)
+            y, st = L.mamba_forward_chunk(p["mamba"], h, cfg,
+                                          cs["conv"][lane][None],
+                                          cs["ssm"][lane][None])
+            new["conv"] = cs["conv"].at[lane].set(st["conv"][0])
+            new["ssm"] = cs["ssm"].at[lane].set(st["ssm"][0])
+            return x + y, new
+        h = L.rms_norm(x, p["attn_norm"], cfg.rms_eps)
+        q, k, v = L.qkv_project(p["attn"], h, cfg, positions)
+        kp = cs["kp"].at[phys_w, off].set(k[0])
+        vp = cs["vp"].at[phys_w, off].set(v[0])
+        new["kp"], new["vp"] = kp, vp
+        k_cache = kp[tab_c].reshape(1, nb * bs, cfg.num_kv_heads, -1)
+        v_cache = vp[tab_c].reshape(1, nb * bs, cfg.num_kv_heads, -1)
+        window = None
+        if cfg.sliding_window is not None:
+            window = jnp.where(g, L.GLOBAL_WINDOW, cfg.sliding_window)
+        a = L.gathered_attention(q, k_cache, v_cache, qpos, kv_pos,
+                                 window=window)
+        a = a.reshape(B, Sc, cfg.q_dim) @ p["attn"]["o"]
+        if cfg.hybrid:
+            m, st = L.mamba_forward_chunk(p["mamba"], h, cfg,
+                                          cs["conv"][lane][None],
+                                          cs["ssm"][lane][None])
+            new["conv"] = cs["conv"].at[lane].set(st["conv"][0])
+            new["ssm"] = cs["ssm"].at[lane].set(st["ssm"][0])
+            a = 0.5 * (a + m)
+        x = x + a
+        h2 = L.rms_norm(x, p["mlp_norm"], cfg.rms_eps)
+        if cfg.moe is not None:
+            if cfg.moe.dispatch == "grouped":
+                y, _ = L.moe_block(p["moe"], h2, cfg)
+            else:
+                y, _ = L.moe_block(p["moe"], h2.reshape(B * Sc, -1), cfg)
+                y = y.reshape(B, Sc, -1)
+        else:
+            y = L.swiglu(h2, p["gate"], p["up"], p["down"])
+        return x + y, new
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], is_global, cache))
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = x[:, 0] @ params["embed"].T
+    else:
+        logits = x[:, 0] @ params["lm_head"]
+    return logits, new_cache

@@ -1,7 +1,23 @@
-"""Batched serving loop: prefill + autoregressive decode with KV cache.
+"""Serving entry points.
 
-Small but real: request batching, greedy/temperature sampling, ring-
-buffer sliding-window caches for long contexts, per-step jit caching.
+Two tiers:
+
+* ``generate`` — static-batch decode: one prefill, then lockstep
+  autoregressive decode for every prompt in the batch.  Greedy or
+  temperature sampling with a split-before-use key chain (every sampled
+  token gets a fresh subkey; no key is ever reused between a sample and
+  a split).  ``cache_len`` shorter than prompt + generation is an error
+  unless ``ring=True`` explicitly opts into ring-buffer semantics: the
+  cache keeps only the last ``cache_len`` positions and attention is
+  truncated to that sliding window.
+* ``scheduler.ContinuousBatcher`` — paged continuous batching: block
+  KV cache, chunked prefill interleaved with decode ticks, traced
+  admission (``serve.traffic``), per-request sampling streams.  See
+  ``repro/serve/scheduler.py``.
+
+``sample_batched`` is the shared per-lane sampler: greedy where
+``temperature == 0``, temperature softmax otherwise, optional top-k
+truncation, one PRNG key per lane.
 """
 from __future__ import annotations
 
@@ -33,13 +49,46 @@ def sample(logits, key, temperature: float):
     return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
 
 
+@jax.jit
+def sample_batched(logits, keys, temperature, top_k):
+    """Per-lane sampling: logits (B, V); keys (B,) PRNG keys;
+    temperature (B,) float32 (0 = greedy); top_k (B,) int32 (0 = no
+    top-k).  Greedy lanes ignore their key entirely, so mixed batches
+    stay reproducible lane-by-lane."""
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    k = jnp.clip(top_k, 1, V)
+    kth = jnp.take_along_axis(jnp.sort(logits, axis=-1)[:, ::-1],
+                              (k - 1)[:, None], axis=1)[:, 0]
+    use_k = (top_k > 0)[:, None]
+    masked = jnp.where(use_k & (logits < kth[:, None]), -jnp.inf, logits)
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, masked / t)
+    return jnp.where(temperature > 0.0, sampled.astype(jnp.int32), greedy)
+
+
 def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, *,
              max_new_tokens: int = 32, temperature: float = 0.0,
              cache_len: Optional[int] = None, seed: int = 0,
-             frames=None, prefix_emb=None) -> GenerationResult:
-    """prompts: (B, S_prompt) int32.  Greedy/temperature batched decode."""
+             frames=None, prefix_emb=None,
+             ring: bool = False) -> GenerationResult:
+    """prompts: (B, S_prompt) int32.  Greedy/temperature batched decode.
+
+    The decode chain needs ``prefix + prompt + max_new_tokens`` cache
+    positions; a smaller ``cache_len`` raises ``ValueError`` unless
+    ``ring=True``, which opts into the ring-buffer semantics the cache
+    already implements (position p lives in slot p % cache_len):
+    attention then only sees the most recent ``cache_len`` positions —
+    a sliding window, never silent garbage."""
     B, S = prompts.shape
-    C = cache_len or (S + max_new_tokens)
+    P = 0 if prefix_emb is None else prefix_emb.shape[1]
+    need = P + S + max_new_tokens
+    C = cache_len or need
+    if C < need and not ring:
+        raise ValueError(
+            f"cache_len={C} < prefix+prompt+max_new_tokens={need}: the "
+            "cache would silently wrap; pass ring=True to opt into "
+            f"sliding-window (last {C} positions) attention")
     if cfg.is_encoder_decoder:
         assert frames is not None
         cache = models.init_cache(cfg, params, B, C, frames=frames)
@@ -53,10 +102,13 @@ def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, *,
                                            prefix_emb=prefix_emb,
                                            last_only=True)
         logits = logits_all[:, -1]
+    # split-before-use: the base key only ever feeds jax.random.split;
+    # each sampled token consumes its own fresh subkey
     key = jax.random.PRNGKey(seed)
     out = []
-    tok = sample(logits, key, temperature)
-    pos0 = S + (0 if prefix_emb is None else prefix_emb.shape[1])
+    key, sub = jax.random.split(key)
+    tok = sample(logits, sub, temperature)
+    pos0 = S + P
     for i in range(max_new_tokens):
         out.append(tok)
         key, sub = jax.random.split(key)

@@ -1,20 +1,48 @@
-"""Continuous batching: a slot-based scheduler over the per-request-
-position decode path (``decode_step`` with a (B,) ``pos`` vector).
+"""Continuous batching schedulers: paged (block-table) and dense (slot).
 
-Requests join mid-flight: a finished slot is immediately refilled from
-the queue (prefill writes the new request's KV into that slot's rows of
-the shared batched cache), so the decode batch never drains to run one
-straggler — the serving-side analogue of the paper's "keep hardware
-busy" goal.
+``ContinuousBatcher`` is the paged scheduler: requests share one pool of
+fixed-size KV blocks (``serve.paged_cache.BlockPool`` on the host,
+``models.init_paged_cache`` on the device), so the number of requests
+in flight is bounded by total cache *memory*, not by a preallocated
+``(L, n_slots, cache_len, ...)`` worst-case shape — short requests hold
+only the blocks they touch.  Each scheduler tick:
 
-Decoder-only architectures (dense / moe / ssm / hybrid).  Greedy
-sampling (extend ``_select`` for temperature).
+  1. admit + prefill: FIFO head-of-line admission from the queue into
+     free lanes (blocks for the whole prompt are claimed up front);
+     every prefilling lane then advances at most ONE chunk
+     (``chunk_size`` tokens) through ``prefill_chunk_paged``, so a long
+     prompt never stalls the decode batch.  A request that finishes at
+     prefill (``max_new_tokens=1``) retires immediately and its lane is
+     re-scanned within the same tick.
+  2. decode: all fully-prefilled lanes take one ``decode_step_paged``
+     in lockstep at their own positions.  Decode blocks are allocated
+     on demand; a lane that cannot get its next block stalls (masked
+     via ``active``) and retries next tick.  If EVERY decode lane is
+     stalled the youngest admission is preempted — its blocks are
+     freed and the request requeued at the FRONT of the queue keeping
+     its generated tokens (resume re-prefills prompt + generated).
+
+Sampling is batched (``serve.sample_batched``: greedy / temperature /
+top-k per lane) with counter-based per-request PRNG streams —
+``fold_in(fold_in(base, rid), n_generated)`` — so sampled output is
+reproducible regardless of scheduling order, preemption included.
+
+``DenseBatcher`` keeps the seed-era fixed-slot design (one dense
+``(L, n_slots, cache_len, ...)`` cache, whole-prompt prefill into slot
+rows) as the reference arm for parity tests and the bench, with the
+seed bugs fixed: freed slots are masked out of the decode write path
+instead of scribbling on row 0, slots freed during admission are
+re-scanned in the same tick, and a ``run`` budget no longer silently
+drops queued or in-flight work (see ``pending`` / ``on_budget``).
+
+Decoder-only architectures (dense / moe / ssm / hybrid).
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +50,8 @@ import numpy as np
 
 from repro import models
 from repro.configs.base import ModelConfig
+from repro.serve import sample_batched
+from repro.serve.paged_cache import BlockPool
 
 
 @dataclass
@@ -30,100 +60,493 @@ class Request:
     tokens: List[int]                    # prompt
     max_new_tokens: int = 16
     generated: List[int] = field(default_factory=list)
+    temperature: float = 0.0             # 0 = greedy
+    top_k: int = 0                       # 0 = no top-k filter
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
 
 
+class BudgetExceeded(RuntimeError):
+    """Raised by ``run(on_budget="raise")`` when the step budget is hit
+    with work outstanding.  ``.pending`` lists the unfinished requests
+    (in-flight first, then queued)."""
+
+    def __init__(self, pending: List[Request]):
+        super().__init__(f"step budget exhausted with {len(pending)} "
+                         "unfinished requests")
+        self.pending = pending
+
+
+@dataclass
+class ServeReport:
+    """Deterministic tick-based metrics from ``run_trace``."""
+    ticks: int
+    idle_ticks: int
+    requests_finished: int
+    requests_pending: int
+    tokens: int
+    tokens_per_tick: float
+    p50_latency: float                   # submit -> finish, ticks
+    p99_latency: float
+    p50_ttft: float                      # submit -> first token, ticks
+    max_concurrency: int                 # peak simultaneously-resident
+    mean_occupancy: float                # resident lanes / n_lanes
+    peak_blocks: int                     # 0 for the dense batcher
+    preemptions: int
+
+
 @partial(jax.jit, static_argnames=("cfg",))
-def _decode_vec(params, cache, token, pos, cfg):
-    return models.decode_step(params, cache, token, pos, cfg)
+def _decode_vec(params, cache, token, pos, cfg, active):
+    return models.decode_step(params, cache, token, pos, cfg, active=active)
 
 
-class ContinuousBatcher:
-    """Fixed-slot continuous batcher.
+@partial(jax.jit, static_argnames=("cfg", "block_size"))
+def _decode_paged(params, cache, token, pos, cfg, tables, active,
+                  block_size):
+    return models.decode_step_paged(params, cache, token, pos, cfg,
+                                    tables, active, block_size=block_size)
 
-    ``cache_len`` bounds prompt+generation length per request.  All
-    slots share one batched cache pytree (leaves (L, n_slots, ...)), so
-    a single jitted ``decode_step`` serves every active request at its
-    own position each step.
-    """
 
-    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
-                 cache_len: int = 128):
+@partial(jax.jit, static_argnames=("cfg", "block_size"))
+def _prefill_chunk(params, cache, tokens, pos0, cfg, table_row, lane,
+                   block_size):
+    return models.prefill_chunk_paged(params, cache, tokens, pos0, cfg,
+                                      table_row, lane,
+                                      block_size=block_size)
+
+
+class _BatcherBase:
+    """Queue / budget / metrics machinery shared by both batchers."""
+
+    def __init__(self, cfg: ModelConfig, n_lanes: int, seed: int):
         assert not cfg.is_encoder_decoder, \
             "continuous batching supports decoder-only archs"
-        self.params = params
         self.cfg = cfg
-        self.n_slots = n_slots
-        self.cache_len = cache_len
-        self.cache = models.init_cache(cfg, params, n_slots, cache_len)
-        self.slot_req: List[Optional[Request]] = [None] * n_slots
-        self.pos = np.zeros((n_slots,), np.int32)        # next position
-        self.last_token = np.zeros((n_slots,), np.int32)
-        self.queue: List[Request] = []
+        self.n_lanes = n_lanes
+        self.queue: Deque[Request] = deque()
         self.finished: Dict[int, Request] = {}
         self.steps = 0
+        self.idle_ticks = 0
+        self.preemptions = 0
+        self._key = jax.random.PRNGKey(seed)
+        self._arrive: Dict[int, int] = {}
+        self._admit_seq: Dict[int, int] = {}   # rid -> first-admission order
+        self._first_tok: Dict[int, int] = {}
+        self._finish: Dict[int, int] = {}
+        self._occupancy: List[int] = []
+        self._peak_blocks = 0
 
-    # ------------------------------------------------------------- API
+    # -------------------------------------------------------------- API
     def submit(self, req: Request) -> None:
-        assert len(req.tokens) + req.max_new_tokens <= self.cache_len, \
-            "request exceeds cache_len"
+        self._validate(req)
+        self._arrive.setdefault(req.rid, self.steps)
         self.queue.append(req)
 
-    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
-        """Drive until queue and slots drain; returns finished requests."""
-        while (self.queue or any(r is not None for r in self.slot_req)) \
-                and self.steps < max_steps:
-            self.step()
+    @property
+    def pending(self) -> List[Request]:
+        """Unfinished requests: in-flight (admission order), then queued."""
+        return self._inflight() + list(self.queue)
+
+    def step(self) -> bool:
+        """One scheduler tick.  Returns whether any work happened."""
+        worked = self._tick()
+        if worked:
+            self.steps += 1
+            self._occupancy.append(self._busy_count())
+        return worked
+
+    def run(self, max_steps: int = 10_000, *,
+            on_budget: str = "return") -> Dict[int, Request]:
+        """Drive until queue and lanes drain or the step budget is hit.
+
+        On budget exhaustion unfinished requests are NOT lost: they stay
+        queued/in-flight (``self.pending``; ``run`` may be called again
+        to resume).  ``on_budget="raise"`` raises ``BudgetExceeded``
+        carrying the pending list instead of returning."""
+        assert on_budget in ("return", "raise")
+        while self.queue or self._busy_count():
+            if self.steps >= max_steps:
+                if on_budget == "raise":
+                    raise BudgetExceeded(self.pending)
+                break
+            if not self.step():
+                raise RuntimeError("scheduler stalled: head request "
+                                   "cannot be admitted")
         return self.finished
 
-    # ----------------------------------------------------------- internals
-    def _admit(self) -> None:
-        """Fill free slots from the queue (prefill into slot rows)."""
-        for i in range(self.n_slots):
-            if self.slot_req[i] is not None or not self.queue:
+    def run_trace(self, arrivals: List[Tuple[int, Request]], *,
+                  max_steps: int = 1_000_000) -> ServeReport:
+        """Drive a timed arrival trace: ``arrivals`` is tick-sorted
+        [(tick, Request)] (see ``serve.traffic.materialize``).  Requests
+        are submitted when the scheduler clock reaches their tick; the
+        clock fast-forwards over idle gaps (counted in ``idle_ticks``)."""
+        i = 0
+        while True:
+            while i < len(arrivals) and arrivals[i][0] <= self.steps:
+                self.submit(arrivals[i][1])
+                i += 1
+            if not self.queue and not self._busy_count():
+                if i >= len(arrivals):
+                    break
+                self.idle_ticks += arrivals[i][0] - self.steps
+                self.steps = arrivals[i][0]
                 continue
-            req = self.queue.pop(0)
-            prompt = jnp.asarray([req.tokens], jnp.int32)       # (1, S)
-            logits, pcache = models.prefill(
-                self.params, prompt, self.cfg, self.cache_len,
-                last_only=True)
-            # write the single-request cache into slot i
-            self.cache = jax.tree.map(
-                lambda big, small: big.at[:, i].set(small[:, 0]),
-                self.cache, pcache)
-            self.slot_req[i] = req
-            self.pos[i] = len(req.tokens)
-            tok = int(jnp.argmax(logits[0, -1]))
-            req.generated.append(tok)
-            self.last_token[i] = tok
-            self._retire(i)
+            if self.steps >= max_steps:
+                break
+            self.step()
+        return self.report()
+
+    def report(self) -> ServeReport:
+        lat = [self._finish[r] - self._arrive[r] for r in self.finished]
+        ttft = [self._first_tok[r] - self._arrive[r] for r in self.finished
+                if r in self._first_tok]
+        occ = self._occupancy or [0]
+        return ServeReport(
+            ticks=self.steps,
+            idle_ticks=self.idle_ticks,
+            requests_finished=len(self.finished),
+            requests_pending=len(self.pending),
+            tokens=sum(len(r.generated) for r in self.finished.values()),
+            tokens_per_tick=(sum(len(r.generated)
+                                 for r in self.finished.values())
+                             / max(self.steps, 1)),
+            p50_latency=float(np.percentile(lat, 50)) if lat else 0.0,
+            p99_latency=float(np.percentile(lat, 99)) if lat else 0.0,
+            p50_ttft=float(np.percentile(ttft, 50)) if ttft else 0.0,
+            max_concurrency=max(occ),
+            mean_occupancy=float(np.mean(occ)) / self.n_lanes,
+            peak_blocks=self._peak_blocks,
+            preemptions=self.preemptions,
+        )
+
+    # ------------------------------------------------------------ shared
+    def _sample_lanes(self, logits_rows, reqs: List[Request]) -> np.ndarray:
+        """Sample one token per row with each request's settings and its
+        counter-based PRNG stream (rid x n_generated)."""
+        keys, temps, tks = [], [], []
+        for req in reqs:
+            rk = jax.random.fold_in(self._key, req.rid)
+            keys.append(jax.random.fold_in(rk, len(req.generated)))
+            temps.append(req.temperature)
+            tks.append(req.top_k)
+        toks = sample_batched(logits_rows, jnp.stack(keys),
+                              jnp.asarray(temps, jnp.float32),
+                              jnp.asarray(tks, jnp.int32))
+        return np.asarray(toks)
+
+    def _record_token(self, req: Request, tok: int) -> None:
+        if not req.generated:
+            self._first_tok.setdefault(req.rid, self.steps)
+        req.generated.append(tok)
+
+    # ---------------------------------------------------------- abstract
+    def _validate(self, req: Request) -> None:
+        raise NotImplementedError
+
+    def _tick(self) -> bool:
+        raise NotImplementedError
+
+    def _busy_count(self) -> int:
+        raise NotImplementedError
+
+    def _inflight(self) -> List[Request]:
+        raise NotImplementedError
+
+
+class ContinuousBatcher(_BatcherBase):
+    """Paged continuous batcher (see module docstring).
+
+    ``n_slots`` is the lane count (decode batch width); ``cache_len``
+    bounds a single request's prompt+generation length.  ``num_blocks``
+    defaults to ``n_slots * ceil(cache_len / block_size)`` — the same
+    memory a dense batcher of that geometry preallocates — but unlike
+    the dense batcher the blocks are shared, so more than ``n_slots``
+    requests' worth of SHORT sequences fit (raise ``n_slots`` to use
+    the headroom).  ``chunk_size=None`` prefills whole prompts in one
+    chunk per tick."""
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
+                 cache_len: int = 128, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 chunk_size: Optional[int] = None, seed: int = 0):
+        super().__init__(cfg, n_slots, seed)
+        self.params = params
+        self.cache_len = cache_len
+        self.block_size = block_size
+        self.nb_max = -(-cache_len // block_size)
+        self.num_blocks = num_blocks or n_slots * self.nb_max
+        self.chunk_size = chunk_size
+        self.pool = BlockPool(self.num_blocks, block_size, n_slots,
+                              self.nb_max)
+        self.cache = models.init_paged_cache(cfg, n_slots, self.num_blocks,
+                                             block_size)
+        self.lane_req: List[Optional[Request]] = [None] * n_slots
+        self.pos = np.zeros((n_slots,), np.int32)      # next position
+        self.last_token = np.zeros((n_slots,), np.int32)
+        self._seq: List[Optional[List[int]]] = [None] * n_slots
+        self._filled = np.zeros((n_slots,), np.int64)
+        self._resume_tok: List[Optional[int]] = [None] * n_slots
+        self._lane_order = np.zeros((n_slots,), np.int64)
+        self._admit_counter = 0
+
+    # ------------------------------------------------------------- hooks
+    def _validate(self, req: Request) -> None:
+        need = len(req.tokens) + req.max_new_tokens
+        assert need <= self.cache_len, "request exceeds cache_len"
+        assert self.pool.blocks_for(need) <= self.num_blocks, \
+            "request exceeds total block pool"
+
+    def _busy_count(self) -> int:
+        return sum(r is not None for r in self.lane_req)
+
+    def _inflight(self) -> List[Request]:
+        lanes = [i for i in range(self.n_lanes)
+                 if self.lane_req[i] is not None]
+        return [self.lane_req[i]
+                for i in sorted(lanes, key=lambda i: self._lane_order[i])]
+
+    def _tick(self) -> bool:
+        worked = self._admit_and_prefill()
+        worked |= self._decode()
+        self._peak_blocks = max(self._peak_blocks, self.pool.used_blocks)
+        return worked
+
+    # --------------------------------------------------------- internals
+    def _zero_lane_state(self, lane: int) -> None:
+        # SSM/hybrid decode state is per-lane and must not leak across
+        # occupants (attention blocks need no reset: slots beyond a
+        # lane's write position are causally masked)
+        if "conv" in self.cache:
+            self.cache["conv"] = self.cache["conv"].at[:, lane].set(0)
+            self.cache["ssm"] = self.cache["ssm"].at[:, lane].set(0)
+
+    def _admit_and_prefill(self) -> bool:
+        """FIFO head-of-line admission + at most one prefill chunk per
+        lane occupant.  Lanes freed by a request finishing AT prefill
+        are re-scanned within the same tick."""
+        worked = False
+        advanced = set()                      # (lane, rid) chunked this tick
+        progress = True
+        while progress:
+            progress = False
+            # admit the queue head while a lane + its prompt blocks fit
+            while self.queue:
+                free = [i for i in range(self.n_lanes)
+                        if self.lane_req[i] is None]
+                if not free:
+                    break
+                req = self.queue[0]
+                lane = free[0]
+                # resume keeps generated tokens: re-prefill all but the
+                # last, which becomes the next token to decode
+                seq = list(req.tokens) + req.generated[:-1]
+                if not self.pool.ensure(lane, len(seq)):
+                    break                     # head-of-line: wait, not skip
+                self.queue.popleft()
+                self.lane_req[lane] = req
+                self._seq[lane] = seq
+                self._filled[lane] = 0
+                self._resume_tok[lane] = (req.generated[-1]
+                                          if req.generated else None)
+                self._zero_lane_state(lane)
+                self._lane_order[lane] = self._admit_counter
+                self._admit_seq.setdefault(req.rid, self._admit_counter)
+                self._admit_counter += 1
+                worked = True
+            # one chunk per prefilling occupant
+            for lane in range(self.n_lanes):
+                req = self.lane_req[lane]
+                if req is None:
+                    continue
+                seq = self._seq[lane]
+                if self._filled[lane] >= len(seq) \
+                        or (lane, req.rid) in advanced:
+                    continue
+                advanced.add((lane, req.rid))
+                lo = int(self._filled[lane])
+                hi = min(lo + (self.chunk_size or len(seq)), len(seq))
+                chunk = jnp.asarray([seq[lo:hi]], jnp.int32)
+                logits, self.cache = _prefill_chunk(
+                    self.params, self.cache, chunk, jnp.int32(lo),
+                    self.cfg, jnp.asarray(self.pool.tables[lane]),
+                    jnp.int32(lane), self.block_size)
+                self._filled[lane] = hi
+                worked = True
+                if hi < len(seq):
+                    continue
+                # prefill complete -> decode phase
+                self.pos[lane] = len(seq)
+                if self._resume_tok[lane] is not None:
+                    self.last_token[lane] = self._resume_tok[lane]
+                    self._resume_tok[lane] = None
+                else:
+                    tok = int(self._sample_lanes(logits, [req])[0])
+                    self._record_token(req, tok)
+                    self.last_token[lane] = tok
+                    if req.done:
+                        self._retire(lane)
+                        progress = True       # re-scan the freed lane
+        return worked
+
+    def _decode(self) -> bool:
+        decoding = [i for i in range(self.n_lanes)
+                    if self.lane_req[i] is not None
+                    and self._filled[i] >= len(self._seq[i])]
+        if not decoding:
+            return False
+        # claim each lane's write block; preempt the youngest admission
+        # if EVERY decode lane is stalled on the pool
+        did_preempt = False
+        while True:
+            ready = [i for i in decoding
+                     if self.pool.ensure(i, int(self.pos[i]) + 1)]
+            if ready or not decoding:
+                break
+            victim = max(decoding, key=lambda i: self._lane_order[i])
+            self._preempt(victim)
+            did_preempt = True
+            decoding.remove(victim)
+        if not ready:
+            return did_preempt
+        active = np.zeros((self.n_lanes,), bool)
+        active[ready] = True
+        logits, self.cache = _decode_paged(
+            self.params, self.cache,
+            jnp.asarray(self.last_token), jnp.asarray(self.pos), self.cfg,
+            jnp.asarray(self.pool.tables), jnp.asarray(active),
+            self.block_size)
+        reqs = [self.lane_req[i] for i in ready]
+        toks = self._sample_lanes(logits[jnp.asarray(ready)], reqs)
+        for j, i in enumerate(ready):
+            req = self.lane_req[i]
+            self._record_token(req, int(toks[j]))
+            self.last_token[i] = toks[j]
+            self.pos[i] += 1
+            if req.done:
+                self._retire(i)
+        return True
+
+    def _preempt(self, lane: int) -> None:
+        req = self.lane_req[lane]
+        self._free_lane(lane)
+        self.queue.appendleft(req)            # resumes first, FIFO kept
+        self.preemptions += 1
+
+    def _retire(self, lane: int) -> None:
+        req = self.lane_req[lane]
+        self.finished[req.rid] = req
+        self._finish[req.rid] = self.steps
+        self._free_lane(lane)
+
+    def _free_lane(self, lane: int) -> None:
+        self.pool.release(lane)
+        self.lane_req[lane] = None
+        self._seq[lane] = None
+        self._filled[lane] = 0
+        self._resume_tok[lane] = None
+        self.pos[lane] = 0
+        self.last_token[lane] = 0
+
+
+class DenseBatcher(_BatcherBase):
+    """Seed-era fixed-slot batcher, kept as the reference arm.
+
+    One dense ``(L, n_slots, cache_len, ...)`` cache: every slot
+    reserves worst-case memory for its request, so concurrency is
+    pinned at ``n_slots`` no matter how short the requests are —
+    exactly the wall the paged batcher removes."""
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
+                 cache_len: int = 128, seed: int = 0):
+        super().__init__(cfg, n_slots, seed)
+        self.params = params
+        self.cache_len = cache_len
+        self.cache = models.init_cache(cfg, params, n_slots, cache_len)
+        self.lane_req: List[Optional[Request]] = [None] * n_slots
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.last_token = np.zeros((n_slots,), np.int32)
+        self._lane_order = np.zeros((n_slots,), np.int64)
+        self._admit_counter = 0
+
+    # ------------------------------------------------------------- hooks
+    def _validate(self, req: Request) -> None:
+        assert len(req.tokens) + req.max_new_tokens <= self.cache_len, \
+            "request exceeds cache_len"
+
+    def _busy_count(self) -> int:
+        return sum(r is not None for r in self.lane_req)
+
+    def _inflight(self) -> List[Request]:
+        lanes = [i for i in range(self.n_lanes)
+                 if self.lane_req[i] is not None]
+        return [self.lane_req[i]
+                for i in sorted(lanes, key=lambda i: self._lane_order[i])]
+
+    def _tick(self) -> bool:
+        worked = self._admit()
+        worked |= self._decode()
+        return worked
+
+    # --------------------------------------------------------- internals
+    def _admit(self) -> bool:
+        """Whole-prompt prefill into free slot rows; slots freed by a
+        request finishing at prefill are re-scanned in the same tick."""
+        worked = False
+        progress = True
+        while progress:
+            progress = False
+            for i in range(self.n_lanes):
+                if self.lane_req[i] is not None or not self.queue:
+                    continue
+                req = self.queue.popleft()
+                prompt = jnp.asarray([req.tokens], jnp.int32)
+                logits, pcache = models.prefill(
+                    self.params, prompt, self.cfg, self.cache_len,
+                    last_only=True)
+                self.cache = jax.tree.map(
+                    lambda big, small: big.at[:, i].set(small[:, 0]),
+                    self.cache, pcache)
+                self.lane_req[i] = req
+                self.pos[i] = len(req.tokens)
+                self._lane_order[i] = self._admit_counter
+                self._admit_seq.setdefault(req.rid, self._admit_counter)
+                self._admit_counter += 1
+                tok = int(self._sample_lanes(logits[:, -1], [req])[0])
+                self._record_token(req, tok)
+                self.last_token[i] = tok
+                worked = True
+                if req.done:
+                    self._retire(i)
+                    progress = True
+        return worked
+
+    def _decode(self) -> bool:
+        lanes = [i for i in range(self.n_lanes)
+                 if self.lane_req[i] is not None]
+        if not lanes:
+            return False
+        active = np.zeros((self.n_lanes,), bool)
+        active[lanes] = True
+        logits, self.cache = _decode_vec(
+            self.params, self.cache, jnp.asarray(self.last_token),
+            jnp.asarray(self.pos), self.cfg, jnp.asarray(active))
+        reqs = [self.lane_req[i] for i in lanes]
+        toks = self._sample_lanes(logits[jnp.asarray(lanes)], reqs)
+        for j, i in enumerate(lanes):
+            req = self.lane_req[i]
+            self._record_token(req, int(toks[j]))
+            self.last_token[i] = toks[j]
+            self.pos[i] += 1
+            if req.done:
+                self._retire(i)
+        return True
 
     def _retire(self, i: int) -> None:
-        req = self.slot_req[i]
-        if req is not None and req.done:
-            self.finished[req.rid] = req
-            self.slot_req[i] = None
-            self.pos[i] = 0
-
-    def step(self) -> None:
-        """One scheduler tick: admit, one batched decode, retire."""
-        self._admit()
-        active = [i for i in range(self.n_slots)
-                  if self.slot_req[i] is not None]
-        if not active:
-            return
-        tokens = jnp.asarray(self.last_token, jnp.int32)
-        pos = jnp.asarray(self.pos, jnp.int32)               # (n_slots,)
-        logits, self.cache = _decode_vec(self.params, self.cache,
-                                         tokens, pos, self.cfg)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        self.steps += 1
-        for i in active:
-            req = self.slot_req[i]
-            req.generated.append(int(nxt[i]))
-            self.last_token[i] = nxt[i]
-            self.pos[i] += 1
-            self._retire(i)
+        req = self.lane_req[i]
+        self.finished[req.rid] = req
+        self._finish[req.rid] = self.steps
+        self.lane_req[i] = None
+        self.pos[i] = 0
+        self.last_token[i] = 0

@@ -233,8 +233,45 @@ window, pinning the skip-the-laggard merge semantics).  The
 adaptive arms ``adaptive_ramp`` (clean fabric; the ramp lives in the
 config) and ``congested_adaptive`` (a deep congestion window colliding
 with the middle of the batch ramp) are meant to run with
-``acfg.adaptive=True``.  See the generator docstrings for knob
-semantics; register new ones with ``scenarios.register_scenario``.
+``acfg.adaptive=True``; ``autoscale_ramp`` (clean fabric, no scripted
+events — the pool dynamics come from the autoscale policy) and
+``preemption_storm_growth`` (scripted leaves landing mid-ramp, so the
+policy must rebuild the pool it just lost) are meant to run with
+``autoscale=`` as well.  ``build_scenario`` compiles a name into a
+:class:`~repro.cluster.scenarios.Scenario` record — ``(name, knobs,
+events)`` — that ``run_cluster`` accepts anywhere a plain event list
+works and threads into ``summary(extended=True)["scenario"]``.  See
+the generator docstrings for knob semantics; register new ones with
+``scenarios.register_scenario``.
+
+Autoscaling
+-----------
+AdLoCo's batch tests grow the requested global batch roughly
+exponentially, so a fixed pool's gradients-per-worker grows with it.
+``run_cluster(..., policy="elastic", autoscale=BandAutoscale(...))``
+(or ``ClusterSpec(autoscale=...)``) closes the loop the adadamp way: an
+:class:`~repro.cluster.autoscale.ElasticPolicy` observes every round
+boundary's decided batch and scripts ``join``/``leave`` events through
+the same elastic machinery scenarios use — scale-ups pay real
+``point_to_point_time`` parameter transfers (re-priced at fabric-window
+edges), joiners inherit the source trainer's requested batch, and each
+trainer executes only its ``ceil(requested_batch / pool_size)`` share
+while the batch *decision* keeps tracking the full requested batch.
+Actions land in ``applied_events`` (kind ``"autoscale"``, with the
+observed gradients-per-worker), ``ClusterReport.num_autoscale_events``,
+and fabric-lane trace instants; joins that exhaust the spare pool
+record a ``"join_skipped"`` event instead of failing silently.  The
+reference policy :class:`~repro.cluster.autoscale.BandAutoscale` holds
+gradients-per-worker inside a ``[lo, hi]`` hysteresis band with a
+cooldown between actions.  Pair it with ``acfg.k_correct > 1``
+(PadaDamp-style predicted growth: the exact gradient-order stats
+reduction runs every ``k_correct`` rounds and the fitted exponential
+trajectory fills the rounds between, cutting stats collectives by
+~``k_correct``x) to co-scale the fleet against a mostly-predicted
+batch trajectory.  ``History.eval_loss_pool`` tracks the
+batch-weighted pool-average parameters (what ``consolidate`` would
+return) so time-to-target comparisons see the whole fleet, not one
+anchor trainer.
 
 Which sync policy should I use?
 -------------------------------
@@ -278,6 +315,7 @@ heterogeneity, across registered scenarios on a 2-pod topology, and
 across the co-scripted scenarios on a 3-level rack/pod/cluster fabric;
 ``examples/heterogeneous_cluster.py`` is the narrated tour.
 """
+from repro.cluster.autoscale import BandAutoscale, ElasticPolicy
 from repro.cluster.backend import (CollectiveBackend, JaxProcessBackend,
                                    SimBackend)
 from repro.cluster.network import (FABRIC_SCOPES, CommDomain, FabricDomain,
@@ -287,17 +325,18 @@ from repro.cluster.node import (NodeProfile, Slowdown, interleave_pods,
                                 make_heterogeneous_profiles,
                                 make_pod_profiles, make_rack_profiles)
 from repro.cluster.runtime import (POLICIES, ClusterEvent, ClusterReport,
-                                   run_cluster)
-from repro.cluster.scenarios import (SCENARIOS, build_scenario,
+                                   ClusterSpec, run_cluster)
+from repro.cluster.scenarios import (SCENARIOS, Scenario, build_scenario,
                                      list_scenarios, register_scenario)
 from repro.cluster.trace import (Span, Trace, TraceEvent,
                                  validate_perfetto)
 
 __all__ = [
-    "FABRIC_SCOPES", "POLICIES", "SCENARIOS", "ClusterEvent",
-    "ClusterReport", "CollectiveBackend", "CommDomain", "FabricDomain",
-    "FabricSchedule", "FabricWindow", "JaxProcessBackend", "NetworkModel",
-    "NodeProfile", "SimBackend", "Slowdown", "Span", "Topology", "Trace",
+    "FABRIC_SCOPES", "POLICIES", "SCENARIOS", "BandAutoscale",
+    "ClusterEvent", "ClusterReport", "ClusterSpec", "CollectiveBackend",
+    "CommDomain", "ElasticPolicy", "FabricDomain", "FabricSchedule",
+    "FabricWindow", "JaxProcessBackend", "NetworkModel", "NodeProfile",
+    "Scenario", "SimBackend", "Slowdown", "Span", "Topology", "Trace",
     "TraceEvent", "build_scenario", "interleave_pods", "list_scenarios",
     "make_heterogeneous_profiles", "make_pod_profiles",
     "make_rack_profiles", "register_scenario", "run_cluster",

@@ -85,7 +85,8 @@ class CollectiveBackend:
         """Associate the run's node profiles (index i = worker i)."""
 
     def validate(self, acfg, *, policy: str, k: int, M: int,
-                 scenario: Sequence[Any] = ()) -> None:
+                 scenario: Sequence[Any] = (),
+                 autoscale: Optional[Any] = None) -> None:
         """Reject configurations this backend cannot execute."""
 
     def attach_trace(self, trace) -> None:
@@ -310,12 +311,17 @@ class JaxProcessBackend(CollectiveBackend):
             self._trace.begin(0, kind, rel, rel + dt, clock="real",
                               rank=self.rank)
 
-    def validate(self, acfg, *, policy, k, M, scenario=()):
+    def validate(self, acfg, *, policy, k, M, scenario=(), autoscale=None):
         P = self.num_processes
         if policy not in ("sync", "async"):
             raise ValueError(
                 f"JaxProcessBackend supports the sync/async policies, "
                 f"not {policy!r} (elastic pools mutate in-process state)")
+        if autoscale is not None:
+            raise ValueError(
+                "autoscaling scripts joins/leaves through the elastic "
+                "in-process pool; JaxProcessBackend cannot grow or "
+                "shrink its process set mid-run")
         if k != 1:
             raise ValueError(
                 f"JaxProcessBackend runs one trainer across its "

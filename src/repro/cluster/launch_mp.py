@@ -39,6 +39,14 @@ sizes, modes — against the SimBackend reference::
     PYTHONPATH=src python -m repro.cluster.launch_mp \\
         --procs 2 --rounds 6 --adaptive --check
 
+``--k-correct N`` (with ``--adaptive``) enables the PadaDamp-style
+batch-growth predictor: between every N-th exact estimate the ranks
+*predict* the next batch from the fitted growth curve instead of
+running the batch-stats all-reduce, so most rounds issue zero stats
+collectives — and the decision-agreement guarantee must hold anyway,
+because every rank fits the same curve to the same observations.
+``--check`` pins that trajectory against the SimBackend reference.
+
 Outer collectives are *dispatched* nonblocking (``dispatch_outer`` /
 ``wait_outer``): under ``--policy async`` the next round's inner steps
 run while the reduction is in flight, and under ``--adaptive`` the
@@ -95,7 +103,7 @@ def quad_loss(params, batch):
 
 
 def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0,
-            adaptive: bool = False):
+            adaptive: bool = False, k_correct: int = 0):
     """(acfg, inits, streams, profiles, network) for the canonical
     single-trainer run: M = ``procs`` workers, merging off.  ``pods``
     splits the workers across a 2-pod :class:`Topology` so the
@@ -103,7 +111,9 @@ def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0,
     flat :class:`NetworkModel`.  ``adaptive`` swaps the fixed batch for
     adaptive batching + switch mode with the composable microbatch
     estimator (``max_batch`` small enough that the ramp crosses the
-    switch boundary within a handful of rounds)."""
+    switch boundary within a handful of rounds); ``k_correct > 1``
+    additionally turns on predicted batch growth between exact
+    estimates."""
     import dataclasses
 
     import jax
@@ -125,7 +135,7 @@ def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0,
         acfg = dataclasses.replace(
             acfg, adaptive=True, stats_estimator="microbatch",
             eta=0.25, max_batch=8, switch_multiplier=2,
-            max_global_batch=64)
+            max_global_batch=64, k_correct=max(1, k_correct))
     prob = QuadraticProblem(dim=DIM, noise=2.0, seed=seed)
     inits = [{"x": jax.random.normal(jax.random.PRNGKey(seed), (DIM,))}]
     streams = [_QuadStream(prob, i, seed=seed) for i in range(procs)]
@@ -143,7 +153,7 @@ def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0,
 
 def run_sim(procs: int, *, rounds: int, policy: str = "sync",
             pods: bool = False, seed: int = 0, adaptive: bool = False,
-            trace: bool = False):
+            k_correct: int = 0, trace: bool = False):
     """The same fixture through the in-process SimBackend — the
     reference arm of the parity check.  ``trace`` records the span
     trace and adds its backend-invariant ``trace_digest`` (the
@@ -152,7 +162,8 @@ def run_sim(procs: int, *, rounds: int, policy: str = "sync",
     from repro.cluster.runtime import run_cluster
 
     acfg, inits, streams, profiles, network = fixture(
-        procs, rounds=rounds, pods=pods, seed=seed, adaptive=adaptive)
+        procs, rounds=rounds, pods=pods, seed=seed, adaptive=adaptive,
+        k_correct=k_correct)
     pool, hist, rep = run_cluster(
         quad_loss, inits, streams, acfg, policy=policy, profiles=profiles,
         backend=SimBackend(network), trace=trace or None,
@@ -190,7 +201,7 @@ def worker_main(args) -> int:
 
     acfg, inits, streams, profiles, network = fixture(
         args.procs, rounds=args.rounds, pods=args.pods, seed=args.seed,
-        adaptive=args.adaptive)
+        adaptive=args.adaptive, k_correct=args.k_correct)
     backend = JaxProcessBackend(network)
     # every rank builds the same seeded init; the broadcast makes the
     # coordinator's copy authoritative (and exercises the transfer path)
@@ -242,6 +253,7 @@ def worker_main(args) -> int:
                   "policy": args.policy, "procs": args.procs,
                   "pods": bool(args.pods), "wall_s": wall,
                   "adaptive": bool(args.adaptive),
+                  "k_correct": int(args.k_correct),
                   "backend": "jax"}
         if rep.trace is not None:
             reals = rep.trace.real_spans()
@@ -276,8 +288,8 @@ def _free_port() -> int:
 
 def run_mp(procs: int, *, rounds: int = 2, policy: str = "sync",
            pods: bool = False, seed: int = 0, adaptive: bool = False,
-           trace: Optional[str] = None, record_trace: bool = False,
-           timeout: float = 600.0) -> dict:
+           k_correct: int = 0, trace: Optional[str] = None,
+           record_trace: bool = False, timeout: float = 600.0) -> dict:
     """Spawn ``procs`` local worker processes, run the fixture through
     the real backend, and return process 0's result dict.  ``trace``
     names a Perfetto JSON path for rank 0 to export; ``record_trace``
@@ -300,7 +312,7 @@ def run_mp(procs: int, *, rounds: int = 2, policy: str = "sync",
                    "--worker", "--rank", str(rank), "--procs", str(procs),
                    "--coordinator", coord, "--rounds", str(rounds),
                    "--policy", policy, "--seed", str(seed),
-                   "--out", out.name]
+                   "--k-correct", str(k_correct), "--out", out.name]
             if pods:
                 cmd.append("--pods")
             if adaptive:
@@ -352,6 +364,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="adaptive batching + switch mode (microbatch "
                          "estimator; batch-stats all-reduce over the "
                          "mesh) instead of the fixed batch")
+    ap.add_argument("--k-correct", type=int, default=0, dest="k_correct",
+                    help="with --adaptive: run the exact batch-stats "
+                         "reduction only every Nth round and predict "
+                         "the batch from the fitted growth curve in "
+                         "between (0/1 = exact every round)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="also run the SimBackend reference in-process "
@@ -376,8 +393,8 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     res = run_mp(args.procs, rounds=args.rounds, policy=args.policy,
                  pods=args.pods, seed=args.seed, adaptive=args.adaptive,
-                 trace=args.trace, record_trace=args.check,
-                 timeout=args.timeout)
+                 k_correct=args.k_correct, trace=args.trace,
+                 record_trace=args.check, timeout=args.timeout)
     print(f"[launch_mp] procs={res['procs']} policy={res['policy']} "
           f"pods={res['pods']} adaptive={res['adaptive']} "
           f"syncs={res['num_syncs']} stats={res['num_stats_syncs']} "
@@ -399,7 +416,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         traced = "trace_digest" in res
         ref = run_sim(args.procs, rounds=args.rounds, policy=args.policy,
                       pods=args.pods, seed=args.seed,
-                      adaptive=args.adaptive, trace=traced)
+                      adaptive=args.adaptive, k_correct=args.k_correct,
+                      trace=traced)
         diff = float(np.max(np.abs(np.asarray(res["x"])
                                    - np.asarray(ref["x"]))))
         same_clock = (res["sim_time"] == ref["sim_time"]

@@ -90,6 +90,7 @@ import jax
 from repro.configs.base import AdLoCoConfig
 from repro.core.adloco import History, RoundOutput, TrainerRound
 from repro.core.comms import TimedCommsMeter, param_bytes
+from repro.core.diloco import merge_params
 from repro.core.mit import (TrainerPoolState, check_merge, consolidate,
                             do_merge)
 from repro.cluster.backend import CollectiveBackend, SimBackend
@@ -149,6 +150,15 @@ class ClusterReport:
     # so pre-adaptive golden digests stay byte-identical; the adaptive
     # golden traces pin it alongside the batch/plan trajectory.
     num_stats_syncs: int = 0
+    # adaptive rounds whose batch came from the fitted growth predictor
+    # instead of an exact stats reduction (acfg.k_correct > 1); the gap
+    # between this and num_stats_syncs is the measured comms cut
+    num_predicted_rounds: int = 0
+    # scaling actions the ClusterSpec.autoscale policy scripted
+    num_autoscale_events: int = 0
+    # name of the compiled Scenario the run was driven by (None for raw
+    # event lists); extended-summary only, so golden digests stay put
+    scenario: Optional[str] = None
     rounds: Dict[int, int] = field(default_factory=dict)   # tid -> rounds
     applied_events: List[dict] = field(default_factory=list)
     # the span/event trace the run recorded into, when one was passed to
@@ -170,6 +180,9 @@ class ClusterReport:
         if extended:
             s["real_comm_time"] = self.real_comm_time
             s["num_stats_syncs"] = self.num_stats_syncs
+            s["num_predicted_rounds"] = self.num_predicted_rounds
+            s["num_autoscale_events"] = self.num_autoscale_events
+            s["scenario"] = self.scenario
             if self.trace is not None:
                 util = self.trace.utilization_summary()
                 s["utilization"] = util["utilization"]
@@ -212,13 +225,17 @@ class _Sim:
                  policy: str, profiles: List[NodeProfile],
                  backend: CollectiveBackend, eval_fn: Optional[Callable],
                  fixed_batch: Optional[int], verbose: bool,
-                 trace: Optional[Trace] = None):
+                 trace: Optional[Trace] = None, autoscale=None):
         self.rnd = TrainerRound(loss_fn, acfg)
         self.trace = trace
         self.acfg = acfg
         self.policy = policy
         self.profiles = profiles
         self.backend = backend
+        # ElasticPolicy driving pool size off the batch trajectory; the
+        # policy itself is pure — the sim owns the cooldown counter
+        self.autoscale = autoscale
+        self.autoscale_ticks = 0    # round boundaries since last action
         # async adaptive rounds defer the batch decision and fuse the
         # phase-1 stats vector onto the outer sync (one "piggyback"
         # collective); sync/elastic keep the inline gated stats path
@@ -255,13 +272,25 @@ class _Sim:
         self.maybe_merge(ri, now, caller=rt)
         if not rt.alive or rt.round >= rt.target:
             return
+        share = None
+        if self.autoscale is not None and self.acfg.adaptive:
+            # adadamp: the pool serves the requested batch together, so
+            # each trainer executes its gradients-per-worker share (the
+            # batch *decision* stays the trainer's full requested batch)
+            alive_k = max(1, len(self.alive_rts()))
+            share = max(1, -(-int(rt.tr.requested_batch) // alive_k))
         w0 = time.perf_counter()
         out = self.rnd.inner(
             rt.tr, fixed_batch=self.fixed_batch,
             worker_starts=rt.worker_params,
             workers=self.backend.local_workers(len(rt.tr.inner_opt_states)),
             stats_reduce=self.backend.stats_reducer(),
-            defer_stats=self.piggyback)
+            defer_stats=self.piggyback, round_i=ri, batch_share=share)
+        if out.predicted:
+            self.report.num_predicted_rounds += 1
+            if self.trace is not None:
+                self.trace.instant(rt.tr.tid, "predict", now, round=ri,
+                                   batch=int(rt.tr.requested_batch))
         # distributed backends: every process logs the same global loss
         out.mean_loss = self.backend.mean_scalar(out.mean_loss)
         # real-clock compute window (mean_scalar forces the round's
@@ -415,6 +444,19 @@ class _Sim:
             val = float(self.eval_fn(rt.tr.params))
             hist.eval_loss.append(val)
             hist.eval_loss_by_trainer.append({rt.tr.tid: val})
+            # what the consolidated model would score *now*: the batch-
+            # weighted average of the live pool (mirrors ``consolidate``)
+            # — the honest convergence curve for autoscaled pools, where
+            # averaging k anchors divides the noise floor the way the
+            # paper's merge does
+            anchors = [t.tr for t in self.alive_rts()]
+            if len(anchors) > 1:
+                avg = merge_params(
+                    [t.params for t in anchors],
+                    [max(t.requested_batch, 1) for t in anchors])
+                hist.eval_loss_pool.append(float(self.eval_fn(avg)))
+            else:
+                hist.eval_loss_pool.append(val)
         if self.verbose:
             print(f"[cluster/{self.policy}] t={now * 1e3:9.3f}ms "
                   f"tid={rt.tr.tid} round={round_i} loss={loss:.4f} "
@@ -529,6 +571,7 @@ class _Sim:
         # flight (async/elastic): fold it before launching, exactly as
         # the un-gated round boundary would have
         self.fold_pending(rt)
+        self.maybe_autoscale(now)
         if self.policy == "sync":
             # barrier: wait for the collective before the next round
             self.launch_sync(rt, now, loss, mode)
@@ -571,7 +614,8 @@ class _Sim:
             # small reducer from the fused phase-1 total
             self.rnd.apply_stats(rt.tr, sreq["req"],
                                  phase1_total=stats_tot,
-                                 sum_reduce=self.backend.stats_reducer())
+                                 sum_reduce=self.backend.stats_reducer(),
+                                 round_i=sreq.get("round"))
             ms = self.backend.pop_stats_measured()
             if ms is not None:
                 self.report.real_comm_time += ms
@@ -591,6 +635,41 @@ class _Sim:
             self.fold_pending(rt)
             if rt.synced < rt.round:
                 self.launch_sync(rt, now, rt.last_loss, "flush")
+
+    # ------------------------------------------------------- autoscale
+    def maybe_autoscale(self, now: float) -> None:
+        """Let the ``ClusterSpec.autoscale`` policy observe the batch
+        trajectory at a round boundary and script joins/leaves through
+        the same machinery scenario events use (joins pay real
+        point-to-point transfer prices, re-priced at fabric edges)."""
+        if self.autoscale is None:
+            return
+        alive = self.alive_rts()
+        if not alive:
+            return
+        M = self.acfg.nodes_per_gpu
+        self.autoscale_ticks += 1
+        b = max(int(rt.tr.requested_batch) for rt in alive)
+        k = len(alive)
+        spare = min(len(self.free_streams) // M, len(self.free_nodes) // M)
+        action = int(self.autoscale.decide(
+            requested_batch=b, pool_size=k, spare_capacity=spare,
+            rounds_since_change=self.autoscale_ticks))
+        if action == 0:
+            return
+        self.autoscale_ticks = 0
+        kind = "join" if action > 0 else "leave"
+        for _ in range(abs(action)):
+            self.push(now, "scenario", {"ev": ClusterEvent(time=now,
+                                                           kind=kind)})
+        self.report.num_autoscale_events += 1
+        self.report.applied_events.append(
+            {"time": now, "kind": "autoscale", "action": action,
+             "pool": k, "requested_batch": b,
+             "gradients_per_worker": b / k})
+        if self.trace is not None:
+            self.trace.instant(FABRIC_TID, "autoscale", now, action=action,
+                               pool=k, requested_batch=b)
 
     # ---------------------------------------------------------- merges
     def maybe_merge(self, round_i: int, now: float,
@@ -746,15 +825,34 @@ class _Sim:
     def do_join(self, now: float) -> None:
         M = self.acfg.nodes_per_gpu
         alive = self.alive_rts()
-        if not alive or len(self.free_streams) < M or len(self.free_nodes) < M:
-            return                               # nothing to clone / no room
+        if not alive:
+            return                               # nothing to clone from
         remaining = max(rt.target - rt.round for rt in alive)
         if remaining <= 0:
+            return                               # run is over anyway
+        if len(self.free_streams) < M or len(self.free_nodes) < M:
+            # spare pool exhausted: record the skip (like drifted-merge
+            # skips) instead of silently dropping the join — sweeps that
+            # under-provision spares can now see it in applied_events
+            self.report.applied_events.append(
+                {"time": now, "kind": "join_skipped",
+                 "free_streams": len(self.free_streams),
+                 "free_nodes": len(self.free_nodes), "needed": M})
+            if self.trace is not None:
+                self.trace.instant(FABRIC_TID, "join", now, skipped=True,
+                                   free_streams=len(self.free_streams),
+                                   free_nodes=len(self.free_nodes))
             return
         src = max(alive, key=lambda rt: rt.tr.requested_batch)
         streams = [self.free_streams.pop(0) for _ in range(M)]
         nodes = [self.free_nodes.pop(0) for _ in range(M)]
         tr = self.rnd.new_trainer(self.next_tid, src.tr.params, streams)
+        if self.autoscale is not None:
+            # an autoscaled joiner inherits the source's batch
+            # trajectory: the pool co-serves the requested batch, so a
+            # newcomer restarting from the initial batch would skew the
+            # gradients-per-worker share it was recruited to absorb
+            tr.requested_batch = src.tr.requested_batch
         self.next_tid += 1
         self.pool.trainers.append(tr)
         rt = _TrainerRT(tr=tr, nodes=nodes, target=remaining)
@@ -795,19 +893,51 @@ class _Sim:
         self.start_round(rt, now)
 
 
+@dataclass(frozen=True)
+class ClusterSpec:
+    """Everything about a cluster run that is not the model or the data.
+
+    ``run_cluster`` grew one keyword per feature until the autoscaler
+    would have been the fourteenth; the spec is the one record that
+    carries them all.  Legacy keywords still work (each is a thin alias
+    that builds this spec), but a spec cannot be combined with them —
+    mixing the two spellings raises.
+
+    ``autoscale`` is an :class:`~repro.cluster.autoscale.ElasticPolicy`
+    observing the adaptive batch trajectory at every round boundary and
+    scripting joins/leaves through the elastic machinery; it requires
+    ``policy="elastic"``.
+    """
+
+    policy: str = "sync"
+    profiles: Optional[List[NodeProfile]] = None
+    network: Optional[NetworkModel] = None
+    backend: Optional[CollectiveBackend] = None
+    num_outer_steps: Optional[int] = None
+    eval_fn: Optional[Callable] = None
+    fixed_batch: Optional[int] = None
+    scenario: Any = ()
+    trace: Optional[Trace] = None
+    autoscale: Optional[Any] = None
+    verbose: bool = False
+
+
+_UNSET = object()    # distinguishes "kwarg not passed" from its default
+
+
 def run_cluster(loss_fn: Callable, init_params_list: List[Any],
                 streams: List[Any], acfg: AdLoCoConfig, *,
-                policy: str = "sync",
-                profiles: Optional[List[NodeProfile]] = None,
-                network: Optional[NetworkModel] = None,
-                backend: Optional[CollectiveBackend] = None,
-                num_outer_steps: Optional[int] = None,
-                eval_fn: Optional[Callable] = None,
-                fixed_batch: Optional[int] = None,
-                scenario=(),
-                trace: Optional[Trace] = None,
-                verbose: bool = False):
+                spec: Optional[ClusterSpec] = None,
+                policy=_UNSET, profiles=_UNSET, network=_UNSET,
+                backend=_UNSET, num_outer_steps=_UNSET, eval_fn=_UNSET,
+                fixed_batch=_UNSET, scenario=_UNSET, trace=_UNSET,
+                autoscale=_UNSET, verbose=_UNSET):
     """Train AdLoCo on a simulated heterogeneous cluster.
+
+    The run is configured by a :class:`ClusterSpec` — ``spec=`` is the
+    canonical spelling; every individual keyword below is a deprecated
+    alias that builds the same spec (bit-identical behavior, pinned by
+    the golden-digest suite) and cannot be mixed with ``spec=``.
 
     ``streams`` beyond the initial k*M shards form the spare pool handed
     to trainers that join mid-run (elastic scenarios); ``profiles``
@@ -822,29 +952,57 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
     worker, launched via ``repro.cluster.launch_mp``) runs them as real
     ``jax.lax`` collectives and carries its own pricing network —
     passing both ``backend=`` and ``network=`` is an error.
-    ``scenario`` is a sequence of :class:`ClusterEvent`\\ s or the name
-    of a registered scenario (see ``repro.cluster.scenarios``).
+    ``scenario`` is a sequence of :class:`ClusterEvent`\\ s, a compiled
+    :class:`~repro.cluster.scenarios.Scenario`, or the name of a
+    registered scenario (see ``repro.cluster.scenarios``); a named
+    scenario's name is threaded into ``summary(extended=True)``.
+    ``autoscale`` hands the elastic pool to an
+    :class:`~repro.cluster.autoscale.ElasticPolicy` (see the
+    "Autoscaling" section of ``repro.cluster``'s docstring).
     ``trace`` is an optional :class:`~repro.cluster.trace.Trace` (or
     ``True`` to allocate one) the event loop records typed spans into —
     inner-compute blocks, outer collectives, stats reductions, join
     transfers, fabric windows — plus instant annotations for
-    re-pricings, merges, joins, leaves and slowdowns; real backends add
-    measured wall-clock spans.  Recording never changes the schedule,
-    and with the default ``None`` the instrumentation is a no-op.  The
-    populated trace is also attached to ``ClusterReport.trace`` so
+    re-pricings, merges, joins, leaves, slowdowns, autoscale actions
+    and predicted batch decisions; real backends add measured
+    wall-clock spans.  Recording never changes the schedule, and with
+    the default ``None`` the instrumentation is a no-op.  The populated
+    trace is also attached to ``ClusterReport.trace`` so
     ``report.summary(extended=True)`` can expose the utilization ledger
     and the overlap fraction.
     Returns (TrainerPoolState, History, ClusterReport) — the History
     carries ``sim_time`` so convergence can be plotted against the
     simulated clock.
     """
+    legacy = {name: val for name, val in (
+        ("policy", policy), ("profiles", profiles), ("network", network),
+        ("backend", backend), ("num_outer_steps", num_outer_steps),
+        ("eval_fn", eval_fn), ("fixed_batch", fixed_batch),
+        ("scenario", scenario), ("trace", trace), ("autoscale", autoscale),
+        ("verbose", verbose)) if val is not _UNSET}
+    if spec is not None:
+        if legacy:
+            raise ValueError(
+                f"configure the run through spec= OR the legacy keyword "
+                f"aliases, not both (got spec= plus {sorted(legacy)})")
+    else:
+        spec = ClusterSpec(**legacy)
+
+    policy, scenario = spec.policy, spec.scenario
+    profiles, network, backend = spec.profiles, spec.network, spec.backend
+    eval_fn, fixed_batch, trace = spec.eval_fn, spec.fixed_batch, spec.trace
     if policy not in POLICIES:
         raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
     if isinstance(scenario, str):
         from repro.cluster.scenarios import build_scenario
         scenario = build_scenario(scenario)
+    scenario_name = getattr(scenario, "name", None)
+    if spec.autoscale is not None and policy != "elastic":
+        raise ValueError(
+            f"autoscale= scripts joins/leaves and needs the elastic "
+            f"pool; run with policy='elastic', not {policy!r}")
     k, M = len(init_params_list), acfg.nodes_per_gpu
-    T = num_outer_steps or acfg.num_outer_steps
+    T = spec.num_outer_steps or acfg.num_outer_steps
     if profiles is None:
         profiles = make_heterogeneous_profiles(k * M)
     if len(profiles) < k * M:
@@ -862,7 +1020,8 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
     profiles = [copy.deepcopy(p) for p in profiles]
     backend = backend.for_run()
     backend.bind(profiles)
-    backend.validate(acfg, policy=policy, k=k, M=M, scenario=scenario)
+    backend.validate(acfg, policy=policy, k=k, M=M, scenario=scenario,
+                     autoscale=spec.autoscale)
     if trace is True:
         trace = Trace()
     if trace is not None:
@@ -870,7 +1029,8 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
 
     sim = _Sim(loss_fn, acfg, policy=policy, profiles=list(profiles),
                backend=backend, eval_fn=eval_fn, fixed_batch=fixed_batch,
-               verbose=verbose, trace=trace)
+               verbose=spec.verbose, trace=trace, autoscale=spec.autoscale)
+    sim.report.scenario = scenario_name
     sim.pool = sim.rnd.init_pool(init_params_list, streams[:k * M])
     sim.pool.comms = TimedCommsMeter()
     if fixed_batch is not None and not acfg.adaptive:

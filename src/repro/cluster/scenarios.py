@@ -88,6 +88,15 @@ supplies the fabric the ramp runs on.
     No events: the undisturbed fabric — the control arm, isolating the
     cost/benefit of batch growth itself (stats collectives + growing
     compute vs fewer rounds to target).
+``autoscale_ramp()``
+    No events, like ``adaptive_ramp`` — but meant to run with a
+    ``ClusterSpec.autoscale`` policy (see ``repro.cluster.autoscale``):
+    the batch ramp drives the pool, joins and leaves are scripted by the
+    autoscaler at round boundaries rather than by the event stream.
+``preemption_storm_growth(start, leaves, spacing)``
+    A burst of trainer evictions timed to land mid-growth; with an
+    autoscale policy the band re-grows the pool from the spares, paying
+    real join-transfer prices through the re-pricing registry.
 ``congested_adaptive(start, duration, depth, extra_latency, scope)``
     One deep congestion window timed to collide with the batch ramp —
     the paper's motivating trade: exactly as rounds lengthen (growing
@@ -101,7 +110,8 @@ supplies the fabric the ramp runs on.
 from __future__ import annotations
 
 import math
-from typing import Callable, Dict, List
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Tuple
 
 import numpy as np
 
@@ -109,6 +119,39 @@ from repro.cluster.runtime import ClusterEvent
 
 #: name -> generator; use :func:`register_scenario` to extend
 SCENARIOS: Dict[str, Callable[..., List[ClusterEvent]]] = {}
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A compiled scenario: the generator's name, the knobs it was built
+    with, and the event stream they compiled to.
+
+    Behaves as a plain sequence of :class:`~repro.cluster.runtime.
+    ClusterEvent`\\ s (iteration, ``len``, indexing, slicing, ``+`` with
+    a list concatenates to a raw event list), so every call site that
+    accepted a raw list still works — but the *name* now travels with
+    the events, and ``run_cluster`` threads it into
+    ``ClusterReport.summary(extended=True)``.
+    """
+
+    name: str
+    knobs: Dict[str, Any] = field(default_factory=dict)
+    events: Tuple[ClusterEvent, ...] = ()
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __getitem__(self, idx):
+        return self.events[idx]
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def __add__(self, other) -> List[ClusterEvent]:
+        return list(self.events) + list(other)
+
+    def __radd__(self, other) -> List[ClusterEvent]:
+        return list(other) + list(self.events)
 
 
 def register_scenario(name: str):
@@ -126,14 +169,15 @@ def list_scenarios() -> List[str]:
     return sorted(SCENARIOS)
 
 
-def build_scenario(name: str, **knobs) -> List[ClusterEvent]:
-    """Compile the registered scenario ``name`` to its event stream."""
+def build_scenario(name: str, **knobs) -> Scenario:
+    """Compile the registered scenario ``name`` to a named
+    :class:`Scenario` record (a sequence of its events)."""
     try:
         gen = SCENARIOS[name]
     except KeyError:
         raise ValueError(f"unknown scenario {name!r}; registered: "
                          f"{list_scenarios()}") from None
-    return gen(**knobs)
+    return Scenario(name=name, knobs=dict(knobs), events=tuple(gen(**knobs)))
 
 
 @register_scenario("baseline")
@@ -286,6 +330,29 @@ def adaptive_ramp() -> List[ClusterEvent]:
     return []
 
 
+@register_scenario("autoscale_ramp")
+def autoscale_ramp() -> List[ClusterEvent]:
+    """Clean fabric for the batch-growth *autoscaling* arm: like
+    ``adaptive_ramp`` the adaptivity lives in the config, and the pool
+    dynamics live in the ``ClusterSpec.autoscale`` policy (joins/leaves
+    are scripted by the autoscaler at round boundaries, not by the event
+    stream), so the scenario itself contributes no events."""
+    return []
+
+
+@register_scenario("preemption_storm_growth")
+def preemption_storm_growth(*, start: float = 0.08, leaves: int = 2,
+                            spacing: float = 0.02) -> List[ClusterEvent]:
+    """A burst of preemptions timed to land mid-growth: ``leaves``
+    trainers are evicted every ``spacing`` seconds starting at ``start``
+    (defaults hit the exponential phase of the adaptive ramp).  Run with
+    an autoscale policy: the band detects the collapsed pool against the
+    still-large batch and re-grows from the spare pool, paying real
+    join-transfer prices."""
+    return [ClusterEvent(time=start + i * spacing, kind="leave")
+            for i in range(leaves)]
+
+
 @register_scenario("congested_adaptive")
 def congested_adaptive(*, start: float = 0.015, duration: float = 0.12,
                        depth: float = 0.1, extra_latency: float = 8e-3,
@@ -297,8 +364,9 @@ def congested_adaptive(*, start: float = 0.015, duration: float = 0.12,
                          duration=duration)]
 
 
-__all__ = ["SCENARIOS", "register_scenario", "list_scenarios",
+__all__ = ["SCENARIOS", "Scenario", "register_scenario", "list_scenarios",
            "build_scenario", "baseline", "bursty_congestion", "spot_churn",
            "pod_partition", "flash_crowd_join", "correlated_pod_failure",
            "diurnal_congestion", "rack_flap", "straggler_cascade",
-           "adaptive_ramp", "congested_adaptive", "drifted_merge"]
+           "adaptive_ramp", "autoscale_ramp", "congested_adaptive",
+           "drifted_merge", "preemption_storm_growth"]

@@ -5,7 +5,7 @@ scalars (``ClusterReport``); this module records *where* the time goes:
 one :class:`Span` per inner-compute block, outer collective, batch-stats
 reduction, join transfer and fabric window, plus instant
 :class:`TraceEvent` annotations (re-pricings, merges, joins, leaves,
-slowdowns).  Two clocks coexist — ``sim`` spans carry the runtime's
+slowdowns, autoscale actions and predicted batch decisions).  Two clocks coexist — ``sim`` spans carry the runtime's
 simulated timestamps, ``real`` spans carry wall-clock seconds measured
 inside an execution backend's collectives (``JaxProcessBackend``) — so
 the simulated schedule and the machine's actual behavior can be laid
@@ -57,9 +57,11 @@ SIM_SPAN_KINDS = ("compute", "outer", "stats", "xfer", "fabric",
 #: in-flight windows (dispatch -> ready) plus the inner-compute windows
 #: the runtime notes so real-clock overlap is measurable
 REAL_SPAN_KINDS = ("outer", "stats", "piggyback", "compute")
-#: instant-event kinds
+#: instant-event kinds ("autoscale" marks an ElasticPolicy scaling
+#: action, "predict" a batch decision the growth predictor supplied
+#: without a stats reduction)
 EVENT_KINDS = ("reprice", "join", "leave", "merge", "slowdown",
-               "preempt")
+               "preempt", "autoscale", "predict")
 #: span kinds that count as "a collective in flight" for the
 #: utilization ledger and the overlap fraction
 COMM_KINDS = ("outer", "stats", "xfer", "piggyback")

@@ -239,3 +239,10 @@ class AdLoCoConfig:
     # round counter lags the merge round by more than this instead of
     # stalling the whole merge until the slowest trainer catches up
     merge_drift_window: int = 1
+    # PadaDamp-style predicted batch growth (Lau et al., arXiv
+    # 2406.13936): run the exact gradient-order stats reduction only
+    # every k_correct rounds and, in between, set the requested batch
+    # from a fitted exponential growth trajectory — zero collectives on
+    # the skipped rounds, with the exact protocol as the periodic
+    # correction.  1 (default) = exact every round, the legacy behavior.
+    k_correct: int = 1

@@ -42,6 +42,11 @@ class History:
     # per-record {tid: eval loss} so elastic / multi-trainer runs stay
     # attributable to the trainer that produced each number
     eval_loss_by_trainer: List[Dict[int, float]] = field(default_factory=list)
+    # eval loss of the batch-weighted average of the live pool at each
+    # record (what ``consolidate`` would return right now) — the honest
+    # convergence curve for autoscaled/elastic pools, where averaging k
+    # anchors divides the gradient-noise floor; cluster runtime only
+    eval_loss_pool: List[float] = field(default_factory=list)
     pool_size: List[int] = field(default_factory=list)
     requested_batches: List[List[int]] = field(default_factory=list)
     comm_events: List[int] = field(default_factory=list)
@@ -82,6 +87,10 @@ class RoundOutput:
     # vector the runtime piggybacks onto the outer sync.  None when the
     # decision was applied inline (sync policy / fixed batch).
     stats_request: Optional[Dict[str, Any]] = None
+    # True when the round's batch decision came from the fitted growth
+    # predictor (``acfg.k_correct`` > 1, non-correction round): no stats
+    # were computed and no reduction is owed (stats_bytes stays 0.0)
+    predicted: bool = False
 
 
 class BatchPlanProtocol:
@@ -177,6 +186,25 @@ class TrainerRound:
         self.outer_step = make_outer_step(self.outer_opt,
                                           delay_aware=self._delay_aware)
         self._n_params: Optional[int] = None
+        # per-trainer batch-growth predictors (k_correct > 1): exact
+        # decisions are observed, skipped rounds read the fitted line
+        self._predictors: Dict[int, batching.BatchGrowthPredictor] = {}
+
+    # ----------------------------------------------- predicted growth
+    def _predictor_for(self, tid: int) -> batching.BatchGrowthPredictor:
+        pred = self._predictors.get(tid)
+        if pred is None:
+            pred = batching.BatchGrowthPredictor(self.acfg.max_global_batch)
+            self._predictors[tid] = pred
+        return pred
+
+    def _is_correction(self, round_i: Optional[int]) -> bool:
+        """Rounds that run the exact stats protocol under predicted
+        growth: round 1 and every ``k_correct``'th round after it.
+        Everything is exact when ``k_correct <= 1`` or the caller does
+        not thread round indices (legacy call sites)."""
+        k = self.acfg.k_correct
+        return k <= 1 or round_i is None or (round_i - 1) % k == 0
 
     # ---------------------------------------------------------- pool
     def init_pool(self, init_params_list: List[Any],
@@ -228,7 +256,9 @@ class TrainerRound:
               worker_starts: Optional[List[Any]] = None,
               workers: Optional[List[int]] = None,
               stats_reduce: Optional[Callable] = None,
-              defer_stats: bool = False) -> RoundOutput:
+              defer_stats: bool = False,
+              round_i: Optional[int] = None,
+              batch_share: Optional[int] = None) -> RoundOutput:
         """Compute phase of one round.  Mutates ``tr.inner_opt_states``
         and (adaptive) ``tr.requested_batch``; never touches
         ``tr.params``.  ``workers`` restricts which of the M workers this
@@ -246,12 +276,20 @@ class TrainerRound:
         ``RoundOutput.stats_request``; the runtime piggybacks its
         phase-1 vector onto the outer sync and folds the decision via
         :meth:`apply_stats` when that collective lands — one-round-stale
-        plan semantics, same on every backend by construction."""
+        plan semantics, same on every backend by construction.
+        ``round_i`` (1-based outer round) enables predicted batch growth
+        when ``acfg.k_correct > 1``: non-correction rounds set the
+        requested batch from the fitted exponential trajectory with zero
+        stats collectives.  ``batch_share`` (autoscaling runtimes)
+        overrides the *executed* plan to this trainer's slice of the
+        requested batch without touching the decision trajectory."""
         acfg = self.acfg
         M = len(tr.inner_opt_states)
         H = acfg.num_inner_steps
         idxs = list(range(M)) if workers is None else list(workers)
         plan = self.plan_for(tr, fixed_batch)
+        if batch_share is not None and acfg.adaptive:
+            plan = self.protocol.plan_for(max(1, int(batch_share)))
         step_fn = self.cache.get(plan)
 
         x_start = tr.params
@@ -273,7 +311,16 @@ class TrainerRound:
         # ---- requested batch for the next round (Alg 3 line 31) ------
         stats_bytes = 0.0
         stats_request: Optional[Dict[str, Any]] = None
-        if acfg.adaptive:
+        predicted = False
+        if acfg.adaptive and not self._is_correction(round_i):
+            # PadaDamp-style skipped round: read the fitted exponential
+            # trajectory instead of running the stats reduction — zero
+            # collectives, every rank fits the same observations so the
+            # shape-agreement contract holds without communication
+            tr.requested_batch = self._predictor_for(tr.tid).predict(
+                round_i, tr.requested_batch)
+            predicted = True
+        elif acfg.adaptive:
             n = self._count_params(x_start)
             if stats_reduce is not None:
                 # distributed backends: each process contributes its
@@ -324,6 +371,9 @@ class TrainerRound:
             else:
                 tr.requested_batch = self.protocol.decide(
                     st, tr.requested_batch)
+                if acfg.k_correct > 1 and round_i is not None:
+                    self._predictor_for(tr.tid).observe(
+                        round_i, tr.requested_batch)
             stats_bytes = self.protocol.payload_bytes(n)
 
         spw = plan.effective_batch * H
@@ -334,12 +384,14 @@ class TrainerRound:
             mode=plan.mode, samples=spw * M, samples_per_worker=spw,
             flops_per_worker=6.0 * n * spw,
             bytes_per_worker=3.0 * param_bytes(x_start) * H,
-            stats_bytes=stats_bytes, stats_request=stats_request)
+            stats_bytes=stats_bytes, stats_request=stats_request,
+            predicted=predicted)
 
     # ---------------------------------------------------- stale stats
     def apply_stats(self, tr: TrainerState, request: Dict[str, Any], *,
                     phase1_total=None,
-                    sum_reduce: Optional[Callable] = None) -> int:
+                    sum_reduce: Optional[Callable] = None,
+                    round_i: Optional[int] = None) -> int:
         """Fold a stale stats handle produced by
         ``inner(..., defer_stats=True)`` into the trainer's requested
         batch.  Local-estimator requests carry the finished statistics
@@ -355,6 +407,8 @@ class TrainerRound:
                 phase1_total, request["G_local"], sum_reduce,
                 micro_size=request["micro"])
         tr.requested_batch = self.protocol.decide(st, tr.requested_batch)
+        if self.acfg.k_correct > 1 and round_i is not None:
+            self._predictor_for(tr.tid).observe(round_i, tr.requested_batch)
         return tr.requested_batch
 
     # --------------------------------------------------------- outer
@@ -440,7 +494,7 @@ def train_adloco(loss_fn: Callable, init_params_list: List[Any],
 
         round_losses, modes = [], []
         for tr in pool.trainers:
-            out = rnd.inner(tr, fixed_batch=fixed_batch)
+            out = rnd.inner(tr, fixed_batch=fixed_batch, round_i=t)
             round_losses.append(out.mean_loss)
             modes.append(out.mode)
             samples_total += out.samples

@@ -279,3 +279,65 @@ def requested_batch(st: GradStats, acfg, current_b: int) -> int:
     b = int(jax.device_get(b))
     b = max(b, int(current_b))          # monotone non-decreasing
     return int(min(b, acfg.max_global_batch))
+
+
+# ------------------------------------------------------------------
+# predicted batch growth (PadaDamp; Lau et al., arXiv 2406.13936)
+# ------------------------------------------------------------------
+
+class BatchGrowthPredictor:
+    """Fit the observed batch-growth trajectory and predict between
+    exact estimates.
+
+    The adaptive tests above make the requested batch track the falling
+    gradient signal-to-noise ratio, which under geometric loss decay is
+    (close to) exponential in the round index — so ``ln b`` is fit by
+    least squares against the round number over the *exact* decisions
+    observed so far, and skipped rounds read the fitted line instead of
+    paying a gradient-order stats reduction (``acfg.k_correct``).
+
+    Determinism contract: the fit is pure Python float arithmetic over
+    observations that are identical on every rank by the shape-agreement
+    protocol (exact decisions are reduced collectively), so every rank
+    derives the identical predicted batch with **zero** collectives on
+    non-correction rounds.  Predictions are conservative — the slope is
+    clamped non-negative, the fitted value floored to an int, growth
+    kept monotone and capped — so an over-eager fit cannot lock in a
+    runaway batch between corrections (the cap and the monotone floor
+    are the same policy the exact path applies).
+    """
+
+    def __init__(self, max_global_batch: int):
+        self.max_global_batch = int(max_global_batch)
+        self._rounds: list = []
+        self._batches: list = []
+
+    def observe(self, round_i: int, b: int) -> None:
+        """Record an exact decision (correction round)."""
+        round_i, b = int(round_i), int(b)
+        if b < 1:
+            return
+        if self._rounds and round_i <= self._rounds[-1]:
+            return                      # stale/duplicate fold (async)
+        self._rounds.append(round_i)
+        self._batches.append(b)
+
+    @property
+    def num_observations(self) -> int:
+        return len(self._rounds)
+
+    def predict(self, round_i: int, current_b: int) -> int:
+        """Predicted batch for ``round_i``; falls back to ``current_b``
+        until two exact observations anchor the fit."""
+        if len(self._rounds) < 2:
+            return int(current_b)
+        xs, ys = self._rounds, [math.log(b) for b in self._batches]
+        n = float(len(xs))
+        mx = sum(xs) / n
+        my = sum(ys) / n
+        sxx = sum((x - mx) ** 2 for x in xs)
+        sxy = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+        slope = max(0.0, sxy / sxx) if sxx > 0.0 else 0.0
+        b = int(math.floor(math.exp(my + slope * (round_i - mx)) + 1e-9))
+        b = max(b, int(current_b))      # monotone non-decreasing
+        return int(min(b, self.max_global_batch))

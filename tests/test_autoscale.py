@@ -1,0 +1,231 @@
+"""Unit + integration tests for the batch-growth autoscaling layer.
+
+Covers the redesigned run configuration (``ClusterSpec`` vs the legacy
+keyword aliases — same behavior, mixing rejected), the named
+:class:`~repro.cluster.scenarios.Scenario` record, the
+:class:`~repro.cluster.autoscale.BandAutoscale` policy in isolation,
+the exhausted-spares ``join_skipped`` regression, and an end-to-end
+autoscaled run (pool co-scales with the adaptive batch, joiners inherit
+the batch trajectory, the scenario name reaches the extended summary).
+Golden digests for the autoscaled scenarios live in
+``tests/test_scenarios.py``; this module pins the API semantics.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs.base import AdLoCoConfig
+from repro.cluster import (BandAutoscale, ClusterEvent, ClusterSpec,
+                           Topology, interleave_pods, make_pod_profiles,
+                           run_cluster)
+from repro.cluster.autoscale import ElasticPolicy
+from repro.cluster.scenarios import Scenario, build_scenario
+
+from tests.test_adloco_integration import QuadStream, _quad_setup, quad_loss
+
+TOY = dict(flops=1e6, hbm_bw=1e9, link_bw=2e5, link_latency=2e-3)
+
+ACFG = AdLoCoConfig(num_outer_steps=6, num_inner_steps=5, lr_inner=0.05,
+                    lr_outer=0.7, outer_momentum=0.5, nodes_per_gpu=2,
+                    num_init_trainers=2, initial_batch_size=2,
+                    merge_frequency=3, eta=0.8, max_batch=16,
+                    inner_optimizer="sgd", stats_probe_size=32,
+                    enable_merge=False, adaptive=False)
+
+
+def _cluster(k=2, M=2, pods=(4, 4), spares=0):
+    profiles = interleave_pods(make_pod_profiles(list(pods), ratio=2.0,
+                                                 **TOY))
+    topo = Topology.from_profiles(
+        make_pod_profiles(list(pods), ratio=2.0, **TOY),
+        inter_bw=1e5, inter_latency=4e-3)
+    prob, inits, streams = _quad_setup(k=k, M=M)
+    streams = streams + [QuadStream(prob, 100 + i) for i in range(spares)]
+    return profiles, topo, inits, streams
+
+
+# ------------------------------------------------------- BandAutoscale
+
+def test_band_autoscale_edges_and_bounds():
+    pol = BandAutoscale(lo=2.0, hi=8.0, cooldown_rounds=0)
+    dec = lambda **kw: pol.decide(rounds_since_change=99, **kw)
+    # inside the band (including both edges): hold
+    assert dec(requested_batch=16, pool_size=2, spare_capacity=5) == 0
+    assert dec(requested_batch=16, pool_size=8, spare_capacity=5) == 0
+    # above hi: join — but only with spare capacity
+    assert dec(requested_batch=17, pool_size=2, spare_capacity=5) == 1
+    assert dec(requested_batch=17, pool_size=2, spare_capacity=0) == 0
+    # below lo: leave — but never below min_trainers
+    assert dec(requested_batch=3, pool_size=2, spare_capacity=5) == -1
+    assert dec(requested_batch=3, pool_size=1, spare_capacity=5) == 0
+    # max_trainers caps joins
+    capped = BandAutoscale(lo=2.0, hi=8.0, max_trainers=2)
+    assert capped.decide(requested_batch=100, pool_size=2,
+                         spare_capacity=5, rounds_since_change=9) == 0
+
+
+def test_band_autoscale_cooldown_suppresses_actions():
+    pol = BandAutoscale(lo=2.0, hi=8.0, cooldown_rounds=3)
+    kw = dict(requested_batch=100, pool_size=2, spare_capacity=5)
+    assert pol.decide(rounds_since_change=0, **kw) == 0
+    assert pol.decide(rounds_since_change=2, **kw) == 0
+    assert pol.decide(rounds_since_change=3, **kw) == 1
+
+
+def test_band_autoscale_validates_knobs():
+    with pytest.raises(ValueError, match="0 < lo < hi"):
+        BandAutoscale(lo=8.0, hi=2.0)
+    with pytest.raises(ValueError, match="0 < lo < hi"):
+        BandAutoscale(lo=0.0, hi=2.0)
+    with pytest.raises(ValueError, match="min_trainers"):
+        BandAutoscale(min_trainers=0)
+    with pytest.raises(ValueError, match="max_trainers"):
+        BandAutoscale(min_trainers=3, max_trainers=2)
+    assert "BandAutoscale" in BandAutoscale().describe()
+
+
+def test_elastic_policy_protocol_is_abstract():
+    with pytest.raises(NotImplementedError):
+        ElasticPolicy().decide(requested_batch=1, pool_size=1,
+                               spare_capacity=0, rounds_since_change=0)
+
+
+# ----------------------------------------------------- Scenario record
+
+def test_scenario_record_behaves_as_event_sequence():
+    sc = build_scenario("spot_churn")
+    assert isinstance(sc, Scenario)
+    assert sc.name == "spot_churn" and sc.knobs == {}
+    assert len(sc) == len(sc.events) > 0
+    assert sc[0] is sc.events[0]
+    assert list(sc) == list(sc.events)
+    extra = [ClusterEvent(time=9.9, kind="join")]
+    # + concatenates to a raw event list in either order
+    assert sc + extra == list(sc.events) + extra
+    assert extra + sc == extra + list(sc.events)
+    # knobs travel with the record
+    storm = build_scenario("preemption_storm_growth", leaves=3)
+    assert storm.knobs == {"leaves": 3}
+
+
+def test_build_scenario_unknown_name_lists_registry():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        build_scenario("not_a_scenario")
+
+
+# ------------------------------------------------- ClusterSpec redesign
+
+def test_spec_and_legacy_kwargs_are_equivalent():
+    """The whole point of the alias shim: the same run configured
+    through spec= and through the legacy keywords must be identical —
+    summary, applied events, and per-round history."""
+    def go(via_spec):
+        profiles, topo, inits, streams = _cluster(spares=4)
+        kw = dict(policy="elastic", profiles=profiles, network=topo,
+                  scenario="spot_churn", fixed_batch=4)
+        if via_spec:
+            return run_cluster(quad_loss, inits, streams, ACFG,
+                               spec=ClusterSpec(**kw))
+        return run_cluster(quad_loss, inits, streams, ACFG, **kw)
+
+    (_, hist_a, rep_a), (_, hist_b, rep_b) = go(True), go(False)
+    assert rep_a.summary(extended=True) == rep_b.summary(extended=True)
+    assert rep_a.applied_events == rep_b.applied_events
+    assert hist_a.requested_batches == hist_b.requested_batches
+    assert hist_a.sim_time == hist_b.sim_time
+
+
+def test_spec_cannot_be_mixed_with_legacy_kwargs():
+    profiles, topo, inits, streams = _cluster()
+    spec = ClusterSpec(policy="elastic", profiles=profiles, network=topo,
+                       fixed_batch=4)
+    with pytest.raises(ValueError, match="not both"):
+        run_cluster(quad_loss, inits, streams, ACFG, spec=spec,
+                    fixed_batch=4)
+
+
+def test_spec_is_frozen():
+    spec = ClusterSpec()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.policy = "elastic"
+
+
+def test_autoscale_requires_elastic_policy():
+    profiles, topo, inits, streams = _cluster()
+    for policy in ("sync", "async"):
+        with pytest.raises(ValueError, match="elastic"):
+            run_cluster(quad_loss, inits, streams, ACFG,
+                        spec=ClusterSpec(policy=policy, profiles=profiles,
+                                         network=topo, fixed_batch=4,
+                                         autoscale=BandAutoscale()))
+
+
+# ------------------------------------------- join_skipped (regression)
+
+def test_exhausted_spares_record_join_skipped():
+    """A scripted join with no spare streams/nodes used to be dropped
+    silently; it must now land in applied_events with the shortfall."""
+    profiles, topo, inits, streams = _cluster(spares=0)  # exactly k*M
+    _, _, rep = run_cluster(
+        quad_loss, inits, streams, ACFG,
+        spec=ClusterSpec(policy="elastic", profiles=profiles, network=topo,
+                         fixed_batch=4,
+                         scenario=[ClusterEvent(time=0.01, kind="join")]))
+    skips = [e for e in rep.applied_events if e["kind"] == "join_skipped"]
+    assert len(skips) == 1
+    ev = skips[0]
+    assert ev["needed"] == ACFG.nodes_per_gpu
+    # streams are the binding shortfall here (profiles have spares)
+    assert ev["free_streams"] == 0 and ev["free_nodes"] >= 0
+    assert not any(e["kind"] == "join" for e in rep.applied_events)
+
+
+# --------------------------------------------------- end-to-end runs
+
+def _autoscaled_run(k_correct=3, rounds=12):
+    profiles, topo, inits, streams = _cluster(k=2, M=2, pods=(6, 6),
+                                              spares=8)
+    acfg = dataclasses.replace(ACFG, adaptive=True,
+                               stats_estimator="microbatch",
+                               num_outer_steps=rounds,
+                               max_global_batch=256, k_correct=k_correct)
+    spec = ClusterSpec(policy="elastic", profiles=profiles, network=topo,
+                       scenario="autoscale_ramp",
+                       autoscale=BandAutoscale(lo=2.0, hi=8.0,
+                                               cooldown_rounds=2))
+    return run_cluster(quad_loss, inits, streams, acfg, spec=spec)
+
+
+def test_autoscaled_run_coscales_pool_with_batch():
+    _, hist, rep = _autoscaled_run()
+    # the ramp pushed gradients-per-worker over the band: the policy
+    # scripted at least one join and the pool actually grew
+    assert rep.num_autoscale_events > 0
+    acts = [e for e in rep.applied_events if e["kind"] == "autoscale"]
+    assert acts and all(e["action"] != 0 for e in acts)
+    assert {"action", "pool", "requested_batch",
+            "gradients_per_worker"} <= set(acts[0])
+    assert any(e["kind"] == "join" for e in rep.applied_events)
+    # co-scaling in both directions: the tiny initial batch puts
+    # gradients-per-worker below the band (early leave), then the ramp
+    # grows the pool past its starting size
+    assert min(hist.pool_size) < 2 and max(hist.pool_size) > 2
+    # joiners inherit the source's batch trajectory instead of restarting
+    # from initial_batch_size: the first history row recorded after the
+    # pool grew has no trainer back at the initial batch
+    grew = next(i for i in range(1, len(hist.pool_size))
+                if hist.pool_size[i] > hist.pool_size[i - 1])
+    assert min(hist.requested_batches[grew]) > ACFG.initial_batch_size
+    # the compiled scenario's name reaches the extended summary
+    s = rep.summary(extended=True)
+    assert s["scenario"] == "autoscale_ramp"
+    assert s["num_autoscale_events"] == rep.num_autoscale_events
+
+
+def test_autoscaled_run_predicts_between_corrections():
+    _, _, rep = _autoscaled_run(k_correct=3)
+    _, _, rep_exact = _autoscaled_run(k_correct=1)
+    # predicted rounds pay no stats reduction, corrections still do
+    assert rep.num_predicted_rounds > 0
+    assert rep_exact.num_predicted_rounds == 0
+    assert 0 < rep.num_stats_syncs < rep_exact.num_stats_syncs

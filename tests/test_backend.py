@@ -189,6 +189,42 @@ def test_jax_backend_adaptive_validation():
     backend.validate(bad, policy="sync", k=1, M=1)
 
 
+def test_jax_backend_rejects_autoscale():
+    """An ElasticPolicy scripts joins/leaves through the in-process
+    elastic pool; a fixed process set cannot honor it.  run_cluster
+    already refuses autoscale on the sync/async policies, so the
+    backend contract is pinned on validate() directly."""
+    from repro.cluster.autoscale import BandAutoscale
+
+    acfg, _, _, _, network = launch_mp.fixture(1, rounds=2)
+    backend = JaxProcessBackend(network)
+    with pytest.raises(ValueError, match="cannot grow or shrink"):
+        backend.validate(acfg, policy="sync", k=1, M=1,
+                         autoscale=BandAutoscale())
+    backend.validate(acfg, policy="sync", k=1, M=1)  # None: accepted
+
+
+def test_jax_backend_single_process_predicted_matches_sim_bitwise():
+    """k_correct > 1 through the JaxProcessBackend on one process must
+    reproduce the SimBackend trajectory bit-for-bit: the predictor is
+    pure local float arithmetic, so prediction cannot introduce a
+    backend-dependent decision."""
+    acfg, inits, streams, profiles, network = launch_mp.fixture(
+        1, rounds=6, adaptive=True, k_correct=3)
+    pool, hist, rep = run_cluster(
+        launch_mp.quad_loss, inits, streams, acfg, policy="sync",
+        profiles=profiles, backend=JaxProcessBackend(network))
+    ref = run_sim(1, rounds=6, adaptive=True, k_correct=3)
+    np.testing.assert_allclose(
+        np.asarray(pool.global_params["x"], np.float64),
+        np.asarray(ref["x"]), rtol=0, atol=0)
+    assert hist.requested_batches == ref["batches"]
+    assert hist.modes == ref["modes"]
+    # corrections at rounds 1 and 4; the other four rounds predicted
+    assert rep.num_stats_syncs == ref["num_stats_syncs"] == 2
+    assert rep.num_predicted_rounds == 4
+
+
 def test_jax_backend_single_process_adaptive_matches_sim_bitwise():
     """Adaptive + switch through the JaxProcessBackend on one process
     must reproduce the SimBackend bit-for-bit: the stats reducer is

@@ -74,6 +74,133 @@ def test_stats_payload_bytes_prices_both_phases():
     assert batching.stats_payload_bytes(0) == 24.0
 
 
+def test_growth_predictor_warmup_and_exact_exponential_fit():
+    """Fewer than two exact observations cannot anchor a fit — the
+    predictor must fall back to the current batch — and once the
+    observations lie on an exponential the extrapolation is exact."""
+    pred = batching.BatchGrowthPredictor(max_global_batch=512)
+    assert pred.predict(3, 7) == 7
+    pred.observe(1, 4)
+    assert pred.predict(3, 7) == 7          # one point is still warmup
+    pred.observe(2, 8)
+    pred.observe(3, 16)
+    # ln b is exactly linear in the round, so the fitted line passes
+    # through every future doubling (the 1e-9 guard absorbs float fuzz)
+    assert pred.predict(5, 16) == 64
+    assert pred.predict(6, 16) == 128
+
+
+def test_growth_predictor_monotone_capped_and_slope_clamped():
+    """Conservatism contract: predictions never shrink the batch, never
+    exceed the global cap, and a decreasing observation sequence clamps
+    the slope to zero (round-independent prediction) instead of
+    extrapolating the batch downward."""
+    pred = batching.BatchGrowthPredictor(max_global_batch=64)
+    pred.observe(1, 4)
+    pred.observe(2, 8)
+    assert pred.predict(20, 8) == 64        # capped, not 2 ** 21
+    assert pred.predict(3, 60) >= 60        # monotone vs current batch
+    down = batching.BatchGrowthPredictor(max_global_batch=64)
+    down.observe(1, 16)
+    down.observe(2, 8)
+    # clamped slope: the fit is flat, so prediction cannot depend on
+    # how far ahead the skipped round is
+    assert down.predict(3, 8) == down.predict(30, 8)
+    assert down.predict(3, 8) >= 8
+
+
+def test_growth_predictor_ignores_stale_async_observations():
+    """Async folds can replay an older round's decision after a newer
+    one; the predictor must drop stale/duplicate observations so every
+    rank fits the same ordered series."""
+    pred = batching.BatchGrowthPredictor(max_global_batch=512)
+    pred.observe(4, 32)
+    pred.observe(4, 48)                     # duplicate round: dropped
+    pred.observe(2, 8)                      # stale round: dropped
+    assert pred.num_observations == 1
+    pred.observe(7, 64)
+    ref = batching.BatchGrowthPredictor(max_global_batch=512)
+    ref.observe(4, 32)
+    ref.observe(7, 64)
+    assert pred.predict(9, 64) == ref.predict(9, 64)
+
+
+def test_decision_agreement_under_prediction():
+    """The k_correct protocol across simulated ranks: correction rounds
+    decide once from the composed (all-reduced) shard statistics, and
+    the skipped rounds read each rank's *local* predictor — yet every
+    rank must derive the identical batch trajectory, with the stats
+    composition running only on the corrections."""
+    rng = np.random.default_rng(5)
+    ranks, T, k_correct, cap = 4, 10, 3, 512
+    preds = [batching.BatchGrowthPredictor(cap) for _ in range(ranks)]
+    b = [4] * ranks
+    traj = [[] for _ in range(ranks)]
+    compositions = 0
+    for r in range(1, T + 1):
+        if (r - 1) % k_correct == 0:
+            # exact: one shard per rank, one composition standing in for
+            # the all-reduce (its result is identical on every rank)
+            shards = [jnp.asarray(rng.standard_normal((3, 16)) * 2.0,
+                                  jnp.float32) for _ in range(ranks)]
+            st_ = batching.compose_shards(shards)
+            compositions += 1
+            req = int(batching.norm_test(st_, 0.5))
+            for k in range(ranks):
+                b[k] = min(max(b[k], req), cap)
+                preds[k].observe(r, b[k])
+        else:
+            for k in range(ranks):
+                b[k] = preds[k].predict(r, b[k])
+        for k in range(ranks):
+            traj[k].append(b[k])
+    assert all(t == traj[0] for t in traj)
+    corrections = [r for r in range(1, T + 1) if (r - 1) % k_correct == 0]
+    assert compositions == len(corrections) < T
+
+
+def test_periodic_correction_pins_predicted_arm_to_exact():
+    """Exact-every-round vs k_correct=3 over the same stats schedule
+    (requested batch doubles per round): after the second correction
+    anchors the fit, the predicted arm reproduces the exact trajectory
+    on every round — including the capped tail — while paying stats
+    evaluations only on corrections."""
+    eta, cap, T, k_correct = 0.5, 512, 9, 3
+
+    def stats_at(r):
+        # eq-10 ratio = sigma2 / (eta^2 * mean_norm2) = 9 * 2^(r-1)
+        return batching.GradStats(
+            mean_norm2=jnp.float32(4.0 / 2 ** (r - 1)),
+            sigma2=jnp.float32(9.0), ip_var=jnp.float32(0.0),
+            orth_var=jnp.float32(0.0), b=jnp.float32(8))
+
+    exact, pred_arm = 4, 4
+    pred = batching.BatchGrowthPredictor(cap)
+    evals = 0
+    exact_traj, pred_traj = [], []
+    for r in range(1, T + 1):
+        exact = min(max(exact, int(batching.norm_test(stats_at(r), eta))),
+                    cap)
+        if (r - 1) % k_correct == 0:
+            evals += 1
+            pred_arm = min(max(pred_arm,
+                               int(batching.norm_test(stats_at(r), eta))),
+                           cap)
+            pred.observe(r, pred_arm)
+        else:
+            pred_arm = pred.predict(r, pred_arm)
+        exact_traj.append(exact)
+        pred_traj.append(pred_arm)
+    corrections = [r for r in range(1, T + 1) if (r - 1) % k_correct == 0]
+    for r in corrections:
+        assert pred_traj[r - 1] == exact_traj[r - 1]
+    # once two corrections anchor the fit, parity is per-round exact
+    second = corrections[1]
+    assert pred_traj[second - 1:] == exact_traj[second - 1:]
+    assert exact_traj[-1] == cap            # the schedule reaches the cap
+    assert evals == len(corrections) < T
+
+
 def test_batch_tests_stable_at_integer_ratios():
     """The epsilon-guarded ceil: statistics whose test ratio lands
     exactly on an integer must request exactly that integer, and a

@@ -29,9 +29,10 @@ import pytest
 
 from repro.configs.base import AdLoCoConfig
 from repro.core import train_adloco
-from repro.cluster import (ClusterEvent, Topology, interleave_pods,
-                           list_scenarios, make_pod_profiles,
-                           make_rack_profiles, run_cluster)
+from repro.cluster import (BandAutoscale, ClusterEvent, ClusterSpec,
+                           Topology, interleave_pods, list_scenarios,
+                           make_pod_profiles, make_rack_profiles,
+                           run_cluster)
 from repro.cluster.scenarios import build_scenario
 
 from tests.test_adloco_integration import QuadStream, _quad_setup, quad_loss
@@ -66,7 +67,10 @@ ACFG_ADAPTIVE = dataclasses.replace(ACFG, adaptive=True,
 #: scenarios on the 3-level rack/pod/cluster fixture; GOLDENA = the
 #: adaptive-batching scenarios (2-pod fixture, async policy, batch ramp
 #: + stats collectives in the clock); GOLDENM = the merge-enabled
-#: drifted-cluster scenario (round-tagged merges skipping laggards).
+#: drifted-cluster scenario (round-tagged merges skipping laggards);
+#: GOLDENAS = the autoscaled adaptive scenarios (elastic policy +
+#: BandAutoscale + k_correct=3 predicted growth — the digest pins the
+#: policy's scripted joins/leaves and the predictor's round decisions).
 #: The values live in tests/goldens/scenarios.json so
 #: ``--update-goldens`` can rewrite them mechanically.
 GOLDENS_PATH = pathlib.Path(__file__).parent / "goldens" / "scenarios.json"
@@ -75,13 +79,18 @@ GOLDEN = _STORED["GOLDEN"]
 GOLDEN3 = _STORED["GOLDEN3"]
 GOLDENA = _STORED["GOLDENA"]
 GOLDENM = _STORED["GOLDENM"]
+GOLDENAS = _STORED["GOLDENAS"]
+
+#: adaptive arms whose digests also pin the batch/plan trajectory
+_TRAJ_PINNED = set(GOLDENA) | set(GOLDENAS)
 
 UPDATE_CMD = ("PYTHONPATH=src python -m pytest tests/test_scenarios.py "
               "--update-goldens")
 
 
 def _group_of(name: str) -> str:
-    return ("GOLDENM" if name in GOLDENM
+    return ("GOLDENAS" if name in GOLDENAS
+            else "GOLDENM" if name in GOLDENM
             else "GOLDENA" if name in GOLDENA
             else "GOLDEN3" if name in GOLDEN3 else "GOLDEN")
 
@@ -166,6 +175,29 @@ def _run_adaptive(name):
                        scenario=name)
 
 
+def _run_autoscale(name):
+    """Autoscale harness: 2-pod fixture, elastic policy, BandAutoscale
+    co-scaling the pool with the batch ramp and ``k_correct=3``
+    predicted growth (the exact stats reduction every third round).
+    The initial batch is below the band so the policy first *shrinks*
+    the pool, then rebuilds it join by join as the ramp crosses ``hi``
+    — the digest pins the whole decision trajectory, scripted event
+    prices included.  Invoked through ``ClusterSpec`` so the golden
+    suite also pins the spec path's equivalence to the legacy kwargs."""
+    profiles = make_pod_profiles([6, 6], ratio=2.0, **TOY)
+    interleaved = interleave_pods(profiles)
+    topo = Topology.from_profiles(profiles, inter_bw=1e5,
+                                  inter_latency=4e-3)
+    prob, inits, streams = _quad_setup(k=2, M=2)
+    streams = streams + [QuadStream(prob, 100 + i) for i in range(8)]
+    acfg = dataclasses.replace(ACFG_ADAPTIVE, k_correct=3)
+    spec = ClusterSpec(policy="elastic", profiles=interleaved,
+                       network=topo, scenario=name,
+                       autoscale=BandAutoscale(lo=2.0, hi=8.0,
+                                               cooldown_rounds=2))
+    return run_cluster(quad_loss, inits, streams, acfg, spec=spec)
+
+
 def _trace(rep, hist=None):
     t = {"summary": rep.summary(), "events": rep.applied_events}
     if hist is not None:
@@ -186,6 +218,8 @@ _MEMO = {}
 
 
 def _run_by_group(name):
+    if name in GOLDENAS:
+        return _run_autoscale(name)
     if name in GOLDENM:
         return _run_merge(name)
     if name in GOLDENA:
@@ -200,14 +234,14 @@ def _memo_run(name):
 
 
 ALL_NAMES = (sorted(GOLDEN) + sorted(GOLDEN3) + sorted(GOLDENA)
-             + sorted(GOLDENM))
+             + sorted(GOLDENM) + sorted(GOLDENAS))
 
 
 @pytest.mark.parametrize("name", ALL_NAMES)
 def test_scenario_matches_golden_trace(name, request):
     _, hist, rep = _memo_run(name)
     golden = _STORED[_group_of(name)][name]
-    digest = _digest(rep, hist if name in GOLDENA else None)
+    digest = _digest(rep, hist if name in _TRAJ_PINNED else None)
     if digest == golden:
         return
     if request.config.getoption("--update-goldens"):
@@ -221,14 +255,15 @@ def test_scenario_matches_golden_trace(name, request):
         f"If this behavior change is intended, regenerate the stored "
         f"digests with:\n  {UPDATE_CMD}\n"
         f"and commit the tests/goldens/scenarios.json diff.\n"
-        f"Trace: {_trace(rep, hist if name in GOLDENA else None)}")
+        f"Trace: {_trace(rep, hist if name in _TRAJ_PINNED else None)}")
 
 
 def test_every_registered_scenario_has_a_golden():
     """Registering a scenario without pinning its trace defeats the
     regression net — add a digest here when adding a generator."""
     assert sorted(list_scenarios()) == sorted({**GOLDEN, **GOLDEN3,
-                                               **GOLDENA, **GOLDENM})
+                                               **GOLDENA, **GOLDENM,
+                                               **GOLDENAS})
 
 
 @pytest.mark.parametrize("name", ALL_NAMES)
@@ -239,7 +274,7 @@ def test_scenario_is_deterministic(name):
     _, hist2, rep2 = _run_by_group(name)
     assert rep1.summary() == rep2.summary()
     assert rep1.applied_events == rep2.applied_events
-    if name in GOLDENA:
+    if name in _TRAJ_PINNED:
         # the adaptive trajectory is part of the pinned behavior
         assert hist1.requested_batches == hist2.requested_batches
         assert hist1.modes == hist2.modes
@@ -259,10 +294,15 @@ def test_scenarios_exercise_their_event_kinds():
                 "straggler_cascade": {"slowdown", "fabric"},
                 "adaptive_ramp": set(),
                 "congested_adaptive": {"fabric"},
-                "drifted_merge": {"slowdown"}}
+                "drifted_merge": {"slowdown"},
+                # the pool dynamics come from the autoscale policy, not
+                # the scripted stream: the ramp crosses the band so the
+                # policy must both shrink (early small batch) and grow
+                "autoscale_ramp": {"autoscale", "join", "leave"},
+                "preemption_storm_growth": {"autoscale", "join", "leave"}}
     assert set(expected) == \
         (set(GOLDEN) | set(GOLDEN3) | set(GOLDENA)
-         | set(GOLDENM)) - {"baseline"}
+         | set(GOLDENM) | set(GOLDENAS)) - {"baseline"}
     for name, kinds in expected.items():
         _, _, rep = _memo_run(name)
         assert kinds <= {e["kind"] for e in rep.applied_events}

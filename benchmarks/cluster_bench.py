@@ -384,6 +384,7 @@ def bench_autoscale_scenario(name: str, arm: str, T: int, *,
         "k_final": pool.k,
         "k_max": max(hist.pool_size),
         "gpw": gpw,
+        "gpw_t": list(hist.sim_time),
         "autoscale_events": rep.num_autoscale_events,
         "joins": kinds.count("join"),
         "leaves": kinds.count("leave"),
@@ -437,7 +438,7 @@ def run_autoscale_scenarios(T: int, names):
             r = bench_autoscale_scenario(name, arm, T)
             t2ts[(name, arm)] = r["t2t"]
             if arm == "autoscaled":
-                gpws[name] = r["gpw"]
+                gpws[name] = (r["gpw"], r["gpw_t"])
             t2t = f"{r['t2t']:.4f}" if r["t2t"] is not None else "none"
             rows.append(row(
                 f"cluster/autoscale/{name}/{arm}", r["sim_time"] * 1e6,
@@ -464,14 +465,35 @@ def run_autoscale_scenarios(T: int, names):
     # gradients-per-worker stays inside the configured band at >= 90%
     # of round records — brief crossings while a scripted join's
     # transfer is in flight (or the cooldown holds) are the hysteresis
-    # working, not a violation
+    # working, not a violation.  Scenarios with scripted evictions get
+    # two-part scoring: (a) the band must RE-CLOSE after the last
+    # eviction — a preemption physically removes workers, so gpw must
+    # spike until the policy rebuilds from reclaimed capacity; when
+    # leaves hoard the leaver's streams the pool gets stuck below band
+    # size and never re-closes, which is exactly the verdict this
+    # gates — and (b) the adherence fraction skips the reaction window
+    # (first eviction -> first post-burst in-band record, paced by the
+    # policy's own cooldown) but counts everything after re-close, so
+    # a band that re-opens later still fails.
     lo, hi = AUTOSCALE_BAND["lo"], AUTOSCALE_BAND["hi"]
     in_band = {}
     for name in names:
-        tail = gpws[name][len(gpws[name]) // 4:]
-        frac = (sum(1 for g in tail if lo <= g <= hi) / len(tail)
+        g, ts = gpws[name]
+        records = list(zip(ts, g))
+        tail = records[len(records) // 4:]
+        evs = [e.time for e in build_scenario(name).events
+               if e.kind in ("join", "leave")]
+        recovered = True
+        if evs:
+            t_burst, t_last = min(evs), max(evs)
+            t_ok = next((t for t, x in records
+                         if t > t_last and lo <= x <= hi), None)
+            recovered = t_ok is not None
+            tail = [(t, x) for t, x in tail
+                    if t < t_burst or (t_ok is not None and t >= t_ok)]
+        frac = (sum(1 for _, x in tail if lo <= x <= hi) / len(tail)
                 if tail else 0.0)
-        in_band[name] = frac >= 0.9
+        in_band[name] = recovered and frac >= 0.9
     parts = [f"autoscaled_faster_{n}={wins[n]}" for n in names]
     parts += [f"gpw_in_band_{n}={in_band[n]}" for n in names]
     if "autoscale_ramp" in names:
@@ -707,18 +729,18 @@ def main(argv=None) -> int:
                                   "piggyback_absorbs_stats_")))
         if r["name"] == "cluster/autoscale-summary":
             # autoscaling must win time-to-target on the clean ramp,
-            # hold gradients-per-worker inside the band there, and the
-            # predictor must cut stats syncs >= 2x while staying tied
-            # to the exact trajectory at its correction rounds.  The
-            # preemption storm's band verdict is report-only: the
-            # scripted leaves re-home their data shards to survivors,
-            # so the storm deliberately exhausts join capacity and the
-            # band cannot re-close — the run documents that regime.
+            # hold gradients-per-worker inside the band on EVERY
+            # autoscale scenario — preemption storm included, now that
+            # scripted leaves return the leaver's full capacity slice
+            # (nodes and streams) to the spare pools and the band can
+            # re-close after churn — and the predictor must cut stats
+            # syncs >= 2x while staying tied to the exact trajectory
+            # at its correction rounds.
             ok = ok and all(
                 kv.split("=")[1] == "True"
                 for kv in r["derived"].split(";")
                 if kv.startswith(("autoscaled_faster_autoscale_ramp",
-                                  "gpw_in_band_autoscale_ramp",
+                                  "gpw_in_band_",
                                   "predictor_")))
     # read the baseline BEFORE writing --json: if both flags resolve to
     # the same file (case-insensitive filesystems!), writing first would

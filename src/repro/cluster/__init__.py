@@ -58,8 +58,12 @@ Execution backends
     real collective lands in ``ClusterReport.real_comm_time``, per
     event in the comms log (``real_s``), and — when tracing — as
     ``real``-clock spans laid alongside the sim spans.  Scope:
-    sync/async policies, one trainer — merging and elastic events need
-    the in-process pool and stay simulator-only for now.
+    sync/async policies with ``k >= 1`` trainer groups — each group's
+    outer sync is a grouped mean over its own ranks and MIT merges
+    execute as real cross-group collectives (see *Three-stage method on
+    real collectives* below); elastic join/leave scenarios and the
+    autoscaler still need in-process pool surgery and stay
+    simulator-only.
 
 The dispatch/handle contract (nonblocking collectives)
 ------------------------------------------------------
@@ -101,8 +105,12 @@ priced as kind ``"piggyback"`` with ``payload_bytes = params_bytes +
 stats_payload_bytes``, counted in ``num_stats_syncs``.  On
 ``JaxProcessBackend`` the fused tree is ``{"params": <stacked pytree>,
 "stats": <(1, n+1) float32>}`` reduced by the same ``pmean`` chain; the
-phase-2 five scalar moments stay a small standalone ``stats`` reduction
-at fold time (``stats_reducer``).  The batch decision folds at the
+phase-2 five scalar moments chain onto the same in-flight window: the
+dispatch derives the global mean gradient from the enqueued phase-1
+buffers without blocking and enqueues the five-moment reduction as a
+second collective on the same handle, which the outer wait collects
+alongside the params — no standalone fold-time ``stats`` collective
+remains on the wire.  The batch decision folds at the
 fused collective's arrival — one round stale, exactly the
 ``BatchPlanProtocol`` semantics every rank already agrees on.
 Sync/elastic policies keep the inline gated stats path, preserving
@@ -113,6 +121,47 @@ the zero-to-parity smoke: it spawns the processes, runs the canonical
 quadratic through the real backend, and asserts the final parameters
 match the simulator; add ``--adaptive`` for the batch-ramp variant
 (trajectory parity included).
+
+Three-stage method on real collectives (multi-trainer MIT)
+----------------------------------------------------------
+With ``--k K`` the process set splits into ``K`` disjoint trainer
+groups: trainer ``t`` owns the contiguous rank block ``[t*M, (t+1)*M)``
+where ``M = P / K`` (``validate`` rejects anything that doesn't divide
+evenly).  The device mesh grows a leading ``"t"`` axis over the
+groups, with the fabric axes nested inside it whenever every group's
+participant-pruned ``FabricDomain`` tree has the same shape (one flat
+row per group otherwise).  Grouped reductions never name ``"t"``, so
+each trainer's outer sync is a ``lax.pmean`` chain over its *own*
+block only — ``K`` independent DiLoCo instances sharing one mesh, one
+lockstep event loop, and one wire.
+
+MIT merges (and the final consolidate) are the one place groups talk
+to each other, and they execute as real cross-group collectives
+(``merge_reducer``): each member rank contributes its trainer's
+replica scaled by ``weight / M`` (the M group ranks split the group's
+share), non-member ranks contribute zeros of the same shape, and a
+single global ``psum`` folds both the weighted parameter sum and the
+total-weight row; the division yields Algorithm 2's batch-weighted
+average replicated on every rank.  The merge is priced on the sim
+clock exactly as the ``SimBackend`` prices it (so ``--check`` parity
+covers the merged params, the merge applied-events, and the sim-span
+trace digest), while the measured wall time lands in
+``real_comm_time`` and as a ``real``-clock ``merge`` span.
+``merge_drift_window`` gating, survivor bookkeeping and stream unions
+stay host-side pool surgery — identical on both backends because it is
+pure rank-indexed group-membership arithmetic over the same
+deterministic loop.
+
+``validate`` still rejects elastic join/leave scenario events, the
+autoscaler, and ``adaptive`` with ``k > 1``: the first two resize the
+pool mid-run (cross-process pool surgery — remapping live ranks
+between groups — is not built yet), and the stats protocol reduces
+over the whole fabric rather than per trainer group, so adaptive
+multi-trainer pools would feed every group the union statistics.
+``python -m repro.cluster.launch_mp --procs 4 --k 2 --rounds 6
+--merge --check`` is the multi-trainer smoke (CI runs it): two
+2-process trainers, at least one executed merge, float parity with the
+simulator end to end.
 
 Distributed adaptive batching (the stats-reduction protocol)
 ------------------------------------------------------------

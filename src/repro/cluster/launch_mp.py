@@ -56,10 +56,22 @@ windows alongside the noted compute windows, and ``--check`` on async
 runs additionally gates ``real_overlap_frac > 0`` — wall-clock proof
 the overlap is real, not simulated.
 
-Scope: sync/async policies, one trainer.  The per-sample probe
-estimator stays rejected under multi-process adaptive runs (its probe
-is rank-local — see ``JaxProcessBackend.validate``); elastic pools and
-merging stay simulator-only for now.
+``--k N`` splits the processes into N trainer groups of
+``procs // N`` workers each (MIT, paper §4.1): each trainer's outer
+sync is a grouped collective over its own block of ranks, and
+``--merge`` turns on merge events — executed as real cross-group
+weighted psums — so the paper's three-stage method runs end-to-end on
+real collectives.  ``--check`` then also pins the merge applied-events
+against the SimBackend reference::
+
+    PYTHONPATH=src python -m repro.cluster.launch_mp \\
+        --procs 4 --k 2 --rounds 6 --merge --check
+
+Scope: sync/async policies; multi-trainer pools are fixed-batch (the
+stats reductions are global, not per-group — see
+``JaxProcessBackend.validate``).  The per-sample probe estimator stays
+rejected under multi-process adaptive runs (its probe is rank-local);
+elastic pools (joins/leaves/autoscale) stay simulator-only.
 """
 from __future__ import annotations
 
@@ -103,17 +115,21 @@ def quad_loss(params, batch):
 
 
 def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0,
-            adaptive: bool = False, k_correct: int = 0):
-    """(acfg, inits, streams, profiles, network) for the canonical
-    single-trainer run: M = ``procs`` workers, merging off.  ``pods``
-    splits the workers across a 2-pod :class:`Topology` so the
-    hierarchical group mapping is exercised; otherwise the fabric is the
-    flat :class:`NetworkModel`.  ``adaptive`` swaps the fixed batch for
+            adaptive: bool = False, k_correct: int = 0, k: int = 1,
+            merge: bool = False):
+    """(acfg, inits, streams, profiles, network) for the canonical run:
+    ``k`` trainers x ``procs // k`` workers (the default is the single
+    trainer with M = ``procs`` workers, merging off).  ``pods`` splits
+    the workers across a 2-pod :class:`Topology` so the hierarchical
+    group mapping is exercised; otherwise the fabric is the flat
+    :class:`NetworkModel`.  ``adaptive`` swaps the fixed batch for
     adaptive batching + switch mode with the composable microbatch
     estimator (``max_batch`` small enough that the ramp crosses the
     switch boundary within a handful of rounds); ``k_correct > 1``
     additionally turns on predicted batch growth between exact
-    estimates."""
+    estimates.  ``merge`` enables MIT merge events (every 3rd round,
+    ``merge_w + 1 = 2`` smallest-batch trainers fold into their
+    representative)."""
     import dataclasses
 
     import jax
@@ -124,12 +140,15 @@ def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0,
                                     make_heterogeneous_profiles,
                                     make_pod_profiles)
 
+    if procs % k != 0:
+        raise ValueError(f"--k {k} must divide --procs {procs}")
+    M = procs // k
     acfg = AdLoCoConfig(num_outer_steps=rounds, num_inner_steps=5,
                         lr_inner=0.05, lr_outer=0.7, outer_momentum=0.5,
-                        nodes_per_gpu=procs, num_init_trainers=1,
+                        nodes_per_gpu=M, num_init_trainers=k,
                         initial_batch_size=4, merge_frequency=3, eta=0.8,
                         max_batch=16, inner_optimizer="sgd",
-                        stats_probe_size=32, enable_merge=False,
+                        stats_probe_size=32, enable_merge=merge,
                         adaptive=False)
     if adaptive:
         acfg = dataclasses.replace(
@@ -137,7 +156,8 @@ def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0,
             eta=0.25, max_batch=8, switch_multiplier=2,
             max_global_batch=64, k_correct=max(1, k_correct))
     prob = QuadraticProblem(dim=DIM, noise=2.0, seed=seed)
-    inits = [{"x": jax.random.normal(jax.random.PRNGKey(seed), (DIM,))}]
+    inits = [{"x": jax.random.normal(jax.random.PRNGKey(seed + i), (DIM,))}
+             for i in range(k)]
     streams = [_QuadStream(prob, i, seed=seed) for i in range(procs)]
     if pods and procs >= 2:
         profiles = make_pod_profiles(
@@ -151,9 +171,17 @@ def fixture(procs: int, *, rounds: int, pods: bool = False, seed: int = 0,
     return acfg, inits, streams, profiles, network
 
 
+def merge_events_of(rep) -> List[dict]:
+    """The merge-related applied events (executed and skipped) — the
+    MIT trajectory the parity check pins across backends."""
+    return [e for e in rep.applied_events
+            if e.get("kind") in ("merge", "merge_skipped")]
+
+
 def run_sim(procs: int, *, rounds: int, policy: str = "sync",
             pods: bool = False, seed: int = 0, adaptive: bool = False,
-            k_correct: int = 0, trace: bool = False):
+            k_correct: int = 0, k: int = 1, merge: bool = False,
+            trace: bool = False):
     """The same fixture through the in-process SimBackend — the
     reference arm of the parity check.  ``trace`` records the span
     trace and adds its backend-invariant ``trace_digest`` (the
@@ -163,7 +191,7 @@ def run_sim(procs: int, *, rounds: int, policy: str = "sync",
 
     acfg, inits, streams, profiles, network = fixture(
         procs, rounds=rounds, pods=pods, seed=seed, adaptive=adaptive,
-        k_correct=k_correct)
+        k_correct=k_correct, k=k, merge=merge)
     pool, hist, rep = run_cluster(
         quad_loss, inits, streams, acfg, policy=policy, profiles=profiles,
         backend=SimBackend(network), trace=trace or None,
@@ -173,7 +201,9 @@ def run_sim(procs: int, *, rounds: int, policy: str = "sync",
            "num_syncs": rep.num_syncs,
            "num_stats_syncs": rep.num_stats_syncs,
            "batches": hist.requested_batches, "modes": hist.modes,
-           "policy": policy, "procs": procs, "backend": "sim"}
+           "merge_events": merge_events_of(rep),
+           "policy": policy, "procs": procs, "k": k,
+           "merge": bool(merge), "backend": "sim"}
     if rep.trace is not None:
         res["trace_digest"] = rep.trace.sim_digest()
         res["overlap_frac"] = rep.trace.overlap_fraction()
@@ -201,11 +231,13 @@ def worker_main(args) -> int:
 
     acfg, inits, streams, profiles, network = fixture(
         args.procs, rounds=args.rounds, pods=args.pods, seed=args.seed,
-        adaptive=args.adaptive, k_correct=args.k_correct)
+        adaptive=args.adaptive, k_correct=args.k_correct, k=args.k,
+        merge=args.merge)
     backend = JaxProcessBackend(network)
-    # every rank builds the same seeded init; the broadcast makes the
-    # coordinator's copy authoritative (and exercises the transfer path)
-    inits = [backend.broadcast_params(inits[0])]
+    # every rank builds the same seeded inits; the broadcast makes the
+    # coordinator's copies authoritative (and exercises the transfer
+    # path) — one broadcast per trainer, lockstep on every rank
+    inits = [backend.broadcast_params(p) for p in inits]
 
     # every rank records (the event loop is lockstep, so the sim spans
     # are identical everywhere); only rank 0 exports
@@ -249,11 +281,13 @@ def worker_main(args) -> int:
                   "num_syncs": rep.num_syncs,
                   "num_stats_syncs": rep.num_stats_syncs,
                   "batches": hist.requested_batches, "modes": hist.modes,
+                  "merge_events": merge_events_of(rep),
                   "rounds": dict(rep.rounds), "loss": hist.loss,
                   "policy": args.policy, "procs": args.procs,
                   "pods": bool(args.pods), "wall_s": wall,
                   "adaptive": bool(args.adaptive),
                   "k_correct": int(args.k_correct),
+                  "k": int(args.k), "merge": bool(args.merge),
                   "backend": "jax"}
         if rep.trace is not None:
             reals = rep.trace.real_spans()
@@ -288,7 +322,8 @@ def _free_port() -> int:
 
 def run_mp(procs: int, *, rounds: int = 2, policy: str = "sync",
            pods: bool = False, seed: int = 0, adaptive: bool = False,
-           k_correct: int = 0, trace: Optional[str] = None,
+           k_correct: int = 0, k: int = 1, merge: bool = False,
+           trace: Optional[str] = None,
            record_trace: bool = False, timeout: float = 600.0) -> dict:
     """Spawn ``procs`` local worker processes, run the fixture through
     the real backend, and return process 0's result dict.  ``trace``
@@ -312,11 +347,14 @@ def run_mp(procs: int, *, rounds: int = 2, policy: str = "sync",
                    "--worker", "--rank", str(rank), "--procs", str(procs),
                    "--coordinator", coord, "--rounds", str(rounds),
                    "--policy", policy, "--seed", str(seed),
-                   "--k-correct", str(k_correct), "--out", out.name]
+                   "--k-correct", str(k_correct), "--k", str(k),
+                   "--out", out.name]
             if pods:
                 cmd.append("--pods")
             if adaptive:
                 cmd.append("--adaptive")
+            if merge:
+                cmd.append("--merge")
             if trace and rank == 0:
                 cmd.extend(["--trace", trace])
             elif trace or record_trace:
@@ -369,6 +407,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "reduction only every Nth round and predict "
                          "the batch from the fitted growth curve in "
                          "between (0/1 = exact every round)")
+    ap.add_argument("--k", type=int, default=1,
+                    help="trainer groups: split the processes into k "
+                         "disjoint groups of procs//k workers each "
+                         "(MIT multi-instance pool; must divide --procs)")
+    ap.add_argument("--merge", action="store_true",
+                    help="with --k > 1: enable MIT merge events, "
+                         "executed as real cross-group collectives")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="also run the SimBackend reference in-process "
@@ -388,16 +433,24 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
 
+    if args.adaptive and args.k > 1:
+        ap.error("--adaptive needs --k 1 (the batch-stats reductions "
+                 "are global, not per trainer group)")
     if args.worker:
         return worker_main(args)
 
     res = run_mp(args.procs, rounds=args.rounds, policy=args.policy,
                  pods=args.pods, seed=args.seed, adaptive=args.adaptive,
-                 k_correct=args.k_correct, trace=args.trace,
+                 k_correct=args.k_correct, k=args.k, merge=args.merge,
+                 trace=args.trace,
                  record_trace=args.check, timeout=args.timeout)
-    print(f"[launch_mp] procs={res['procs']} policy={res['policy']} "
+    n_merges = sum(1 for e in res.get("merge_events", ())
+                   if e["kind"] == "merge")
+    print(f"[launch_mp] procs={res['procs']} k={res['k']} "
+          f"policy={res['policy']} "
           f"pods={res['pods']} adaptive={res['adaptive']} "
           f"syncs={res['num_syncs']} stats={res['num_stats_syncs']} "
+          f"merges={n_merges} "
           f"sim_time={res['sim_time']:.4f}s "
           f"real_comm={res['real_comm_time']:.4f}s "
           f"wall={res['wall_s']:.2f}s")
@@ -417,13 +470,21 @@ def main(argv: Optional[List[str]] = None) -> int:
         ref = run_sim(args.procs, rounds=args.rounds, policy=args.policy,
                       pods=args.pods, seed=args.seed,
                       adaptive=args.adaptive, k_correct=args.k_correct,
-                      trace=traced)
+                      k=args.k, merge=args.merge, trace=traced)
         diff = float(np.max(np.abs(np.asarray(res["x"])
                                    - np.asarray(ref["x"]))))
         same_clock = (res["sim_time"] == ref["sim_time"]
                       and res["num_syncs"] == ref["num_syncs"])
         same_plan = (res["batches"] == ref["batches"]
                      and res["modes"] == ref["modes"])
+        # the merge trajectory (executed + skipped events, with their
+        # rounds and participants) must match the simulator exactly;
+        # with --merge at least one merge must actually have executed
+        # or the cross-group collective path wasn't exercised
+        same_merges = (res.get("merge_events") == ref.get("merge_events"))
+        merged_ok = (not args.merge
+                     or any(e["kind"] == "merge"
+                            for e in res.get("merge_events", ())))
         # the sim-span digest must be backend-invariant, and the real
         # backend must have measured actual wall time on the wire
         same_trace = (not traced
@@ -436,9 +497,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                       or res["real_overlap_frac"] > 0.0)
         print(f"[launch_mp] parity vs SimBackend: max|dx|={diff:.3e} "
               f"same_sim_clock={same_clock} same_plan_seq={same_plan} "
+              f"same_merge_events={same_merges} merged_ok={merged_ok} "
               f"same_trace_digest={same_trace} real_spans_ok={real_ok} "
               f"real_overlap_ok={overlap_ok}")
         if (diff > 1e-5 or not same_clock or not same_plan
+                or not same_merges or not merged_ok
                 or not same_trace or not real_ok or not overlap_ok):
             print("[launch_mp] PARITY FAILURE", file=sys.stderr)
             return 1

@@ -109,6 +109,12 @@ class ClusterEvent:
         ``duration`` simulated seconds.
     kind="leave":    trainer ``tid`` (default: smallest requested batch)
         leaves; its knowledge is merged into the pool via ``do_merge``.
+        Scripted leaves model *preemptions*: the leaver's capacity
+        slice (nodes and data shards alike) returns to the spare
+        pools so the pool can re-grow after churn.  Leaves synthesized
+        by an autoscale policy (``autoscaled=True``) model deliberate
+        *consolidation* instead: the survivor keeps the unioned shards
+        per Algorithm 2 and only the nodes are freed.
     kind="join":     a new trainer joins on spare nodes/streams, cloned
         from the most-advanced trainer.
     kind="fabric":   a congestion window opens on the network for
@@ -132,6 +138,9 @@ class ClusterEvent:
     bw_scale: float = 1.0
     extra_latency: float = 0.0
     scope: str = "all"
+    # set by maybe_autoscale on the join/leave events it synthesizes;
+    # scripted scenario events leave it False
+    autoscaled: bool = False
 
 
 @dataclass
@@ -283,7 +292,8 @@ class _Sim:
         out = self.rnd.inner(
             rt.tr, fixed_batch=self.fixed_batch,
             worker_starts=rt.worker_params,
-            workers=self.backend.local_workers(len(rt.tr.inner_opt_states)),
+            workers=self.backend.local_workers(
+                len(rt.tr.inner_opt_states), tid=rt.tr.tid),
             stats_reduce=self.backend.stats_reducer(),
             defer_stats=self.piggyback, round_i=ri, batch_share=share)
         if out.predicted:
@@ -291,12 +301,14 @@ class _Sim:
             if self.trace is not None:
                 self.trace.instant(rt.tr.tid, "predict", now, round=ri,
                                    batch=int(rt.tr.requested_batch))
-        # distributed backends: every process logs the same global loss
-        out.mean_loss = self.backend.mean_scalar(out.mean_loss)
+        # distributed backends: every process logs the same group loss
+        out.mean_loss = self.backend.mean_scalar(out.mean_loss,
+                                                 tid=rt.tr.tid)
         # real-clock compute window (mean_scalar forces the round's
         # results): a dispatched collective in flight across this window
         # is measured overlap on the wall clock, not just in the sim
-        self.backend.note_real_compute(w0, time.perf_counter() - w0)
+        self.backend.note_real_compute(w0, time.perf_counter() - w0,
+                                       tid=rt.tr.tid)
         dts = [node.compute_time(out.flops_per_worker, out.bytes_per_worker,
                                  now)
                for node in rt.nodes[:len(out.worker_params)]]
@@ -349,9 +361,15 @@ class _Sim:
               "log": self.pool.comms.log[-1]}
         # nonblocking dispatch: the collective starts NOW (on real
         # backends it is enqueued without a ready-wait and runs under
-        # the rounds computed before on_comm_done waits on the handle)
-        ev["handle"] = self.backend.dispatch_outer(snapshot,
-                                                   stats_vec=stats_vec)
+        # the rounds computed before on_comm_done waits on the handle).
+        # A distributed deferred-stats request also hands the backend
+        # its phase-2 material so the five-moment reduction can chain
+        # onto the same in-flight window (no standalone fold-time sync)
+        ev["handle"] = self.backend.dispatch_outer(
+            snapshot, stats_vec=stats_vec,
+            phase2=(sreq["req"] if sreq is not None
+                    and "G_local" in sreq["req"] else None),
+            tid=rt.tr.tid, template=rt.tr.params)
         if self.trace is not None:
             ev["span"] = self.trace.begin(
                 rt.tr.tid, kind, now, now + dur, round=rt.round,
@@ -610,10 +628,14 @@ class _Sim:
         if sreq is not None:
             # fold the piggybacked batch decision: local-estimator
             # requests carry finished statistics; distributed requests
-            # finish phase 2 (five scalar moments) over the backend's
-            # small reducer from the fused phase-1 total
+            # finish from the phase-2 moments total the backend chained
+            # onto the outer window at dispatch time (pop_phase2_total),
+            # falling back to the small standalone reducer for backends
+            # that didn't chain it
             self.rnd.apply_stats(rt.tr, sreq["req"],
                                  phase1_total=stats_tot,
+                                 phase2_total=(
+                                     self.backend.pop_phase2_total()),
                                  sum_reduce=self.backend.stats_reducer(),
                                  round_i=sreq.get("round"))
             ms = self.backend.pop_stats_measured()
@@ -660,8 +682,9 @@ class _Sim:
         self.autoscale_ticks = 0
         kind = "join" if action > 0 else "leave"
         for _ in range(abs(action)):
-            self.push(now, "scenario", {"ev": ClusterEvent(time=now,
-                                                           kind=kind)})
+            self.push(now, "scenario",
+                      {"ev": ClusterEvent(time=now, kind=kind,
+                                          autoscaled=True)})
         self.report.num_autoscale_events += 1
         self.report.applied_events.append(
             {"time": now, "kind": "autoscale", "action": action,
@@ -710,12 +733,23 @@ class _Sim:
         if len(ids) <= 1:
             return
         involved = [self.pool.trainers[i] for i in ids]
-        self.pool = do_merge(self.pool, ids, step=round_i)
-        survivors = set(id(t) for t in self.pool.trainers)
+        # on multi-group backends the weighted average executes as a
+        # real cross-group collective (merge_reducer); its wall-clock
+        # cost lands in real_comm_time like any other collective, while
+        # the sim clock stays the analytic price
+        self.pool = do_merge(self.pool, ids, step=round_i,
+                             reduce=self.backend.merge_reducer())
+        ms = self.backend.pop_merge_measured()
+        if ms is not None:
+            self.report.real_comm_time += ms
+            self.pool.comms.add_real_time(self.pool.comms.log[-1], ms)
+        # survivor detection is rank-indexable (tids are stable and
+        # unique), not keyed on in-process object identity
+        surviving = {t.tid for t in self.pool.trainers}
         for t in involved:
             rt = self.rts[t.tid]
             self.truncate_spans(rt, now, "merged")
-            if id(t) in survivors:
+            if t.tid in surviving:
                 # representative: a merge preempts its in-flight round
                 # and supersedes any in-flight sync or deferred stats
                 rt.gen += 1
@@ -730,7 +764,7 @@ class _Sim:
                 self.free_nodes.extend(rt.nodes)
                 if self.trace is not None:
                     self.trace.trainer_dead(t.tid, now)
-        merged_away = [t.tid for t in involved if id(t) not in survivors]
+        merged_away = [t.tid for t in involved if t.tid not in surviving]
         if self.trace is not None:
             for tid in merged_away:
                 self.trace.instant(tid, "merge", now, round=round_i,
@@ -754,7 +788,7 @@ class _Sim:
                                        duration=ev.duration)
             return
         if ev.kind == "leave":
-            self.do_leave(now, ev.tid)
+            self.do_leave(now, ev.tid, reclaim=not ev.autoscaled)
             return
         if ev.kind == "join":
             self.do_join(now)
@@ -781,7 +815,8 @@ class _Sim:
             return
         raise ValueError(f"unknown scenario event kind: {ev.kind!r}")
 
-    def do_leave(self, now: float, tid: Optional[int]) -> None:
+    def do_leave(self, now: float, tid: Optional[int], *,
+                 reclaim: bool = True) -> None:
         alive = self.alive_rts()
         if len(alive) <= 1:
             return                               # last trainer can't leave
@@ -798,13 +833,28 @@ class _Sim:
         best = max(others, key=lambda t: t.requested_batch)
         ids = [self.pool.trainers.index(leaver),
                self.pool.trainers.index(best)]
+        keep = len(best.streams)
         self.pool = do_merge(self.pool, ids, step=self.rts[leaver.tid].round)
         lrt = self.rts[leaver.tid]
         self.truncate_spans(lrt, now, "left")
         lrt.alive = False
-        # nodes go back to the spare pool; the leaver's data shards were
-        # re-homed to the survivor by do_merge, so later joins draw on
-        # the originally-provisioned spare streams only
+        # On a preemption (scripted leave) both halves of the leaver's
+        # capacity return to the spare pools: its nodes, and the data
+        # shards do_merge just unioned onto the survivor (the
+        # survivor's own M workers never read past streams[M-1], so
+        # the union was pure bookkeeping) are reclaimed as spares —
+        # appended at the BACK, so joins keep drawing the
+        # originally-provisioned spares first.  Without the
+        # reclamation a preemption storm permanently exhausted join
+        # capacity: streams were hoarded by survivors while nodes sat
+        # free, and the autoscaler's spare_capacity stuck at zero.
+        # Autoscaler-decided shrinks (reclaim=False) keep the union on
+        # the survivor: a policy shrink consolidates data coverage
+        # onto fewer trainers, it does not evict capacity.
+        if reclaim:
+            reclaimed = best.streams[keep:]
+            del best.streams[keep:]
+            self.free_streams.extend(reclaimed)
         self.free_nodes.extend(lrt.nodes)
         brt = self.rts[best.tid]
         self.truncate_spans(brt, now, "absorbed_leave")
@@ -1073,5 +1123,13 @@ def run_cluster(loss_fn: Callable, init_params_list: List[Any],
     if trace is not None:
         trace.finalize(sim.report.sim_time)
         sim.report.trace = trace
-    pool = consolidate(sim.pool, step=T)
+    # on multi-group backends the final consolidate is a real global
+    # collective even for a pool of one — it doubles as the broadcast
+    # that re-replicates the surviving model on every rank after merges
+    pool = consolidate(sim.pool, step=T, reduce=backend.merge_reducer())
+    ms = backend.pop_merge_measured()
+    if ms is not None:
+        sim.report.real_comm_time += ms
+        if pool.comms.log and pool.comms.log[-1]["kind"] == "consolidate":
+            pool.comms.add_real_time(pool.comms.log[-1], ms)
     return pool, sim.hist, sim.report

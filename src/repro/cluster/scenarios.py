@@ -24,11 +24,13 @@ scope)``
     Poisson spot-instance churn: leave events with exponential
     inter-arrival gaps (``rate`` per simulated second, until
     ``horizon``), each followed ``rejoin_after`` seconds later by a join
-    that restores capacity from the spare pool.  A leave re-homes the
-    leaver's data shards to the surviving trainer (they are *not*
-    returned as spares), so the number of spare streams provisioned
-    bounds how many rejoins land — under-provision and the pool
-    collapses, which is itself a scenario worth measuring.
+    that restores capacity from the spare pool.  A scripted leave is a
+    *preemption*: the survivor briefly absorbs the leaver's data
+    shards, then the absorbed streams are reclaimed into the spare
+    pool along with the nodes, so churn returns the full capacity it
+    took and rejoins can land indefinitely.  (Only autoscaler-scripted
+    shrinks — deliberate consolidations — leave the union on the
+    survivor; see ``runtime.ClusterEvent``.)
 ``pod_partition(start, duration, residual, extra_latency)``
     The cross-pod links all but fail for ``duration`` seconds:
     bandwidth drops to ``residual`` of nominal and hops pay
@@ -348,7 +350,10 @@ def preemption_storm_growth(*, start: float = 0.08, leaves: int = 2,
     (defaults hit the exponential phase of the adaptive ramp).  Run with
     an autoscale policy: the band detects the collapsed pool against the
     still-large batch and re-grows from the spare pool, paying real
-    join-transfer prices."""
+    join-transfer prices.  Each eviction returns the leaver's streams
+    and nodes to the spares, so the storm never permanently shrinks the
+    join capacity — the bench gates the gradients-per-worker band
+    re-closing after the last eviction."""
     return [ClusterEvent(time=start + i * spacing, kind="leave")
             for i in range(leaves)]
 

@@ -55,8 +55,11 @@ SIM_SPAN_KINDS = ("compute", "outer", "stats", "xfer", "fabric",
                   "piggyback")
 #: span kinds an execution backend emits on the wall clock: collective
 #: in-flight windows (dispatch -> ready) plus the inner-compute windows
-#: the runtime notes so real-clock overlap is measurable
-REAL_SPAN_KINDS = ("outer", "stats", "piggyback", "compute")
+#: the runtime notes so real-clock overlap is measurable; merge /
+#: consolidate are the cross-group pool collectives of multi-trainer
+#: (k > 1) runs
+REAL_SPAN_KINDS = ("outer", "stats", "piggyback", "compute", "merge",
+                   "consolidate")
 #: instant-event kinds ("autoscale" marks an ElasticPolicy scaling
 #: action, "predict" a batch decision the growth predictor supplied
 #: without a stats reduction)

@@ -138,6 +138,14 @@ class BatchPlanProtocol:
         return batching.stats_finish(phase1_total, G_local, sum_reduce,
                                      micro_size=micro_size)
 
+    def finish_total(self, phase2_total, *,
+                     micro_size: int) -> batching.GradStats:
+        """Finish from an already-summed phase-2 moments vector — the
+        path for backends that chained the moment reduction onto the
+        outer collective's window instead of running it standalone."""
+        return batching.stats_finish_total(phase2_total,
+                                           micro_size=micro_size)
+
     # -------------------------------------------------------- decision
     def decide(self, st: batching.GradStats, current_b: int) -> int:
         """The configured batch test + monotone-growth/cap policy."""
@@ -380,7 +388,11 @@ class TrainerRound:
         n = self._count_params(x_start)
         return RoundOutput(
             worker_params=worker_params, x_start=x_start,
-            mean_loss=sum(last_losses) / len(last_losses),
+            # a rank outside this trainer's process group computes no
+            # workers; its zero contribution drops out of the backend's
+            # group-masked loss mean
+            mean_loss=(sum(last_losses) / len(last_losses)
+                       if last_losses else 0.0),
             mode=plan.mode, samples=spw * M, samples_per_worker=spw,
             flops_per_worker=6.0 * n * spw,
             bytes_per_worker=3.0 * param_bytes(x_start) * H,
@@ -389,19 +401,24 @@ class TrainerRound:
 
     # ---------------------------------------------------- stale stats
     def apply_stats(self, tr: TrainerState, request: Dict[str, Any], *,
-                    phase1_total=None,
+                    phase1_total=None, phase2_total=None,
                     sum_reduce: Optional[Callable] = None,
                     round_i: Optional[int] = None) -> int:
         """Fold a stale stats handle produced by
         ``inner(..., defer_stats=True)`` into the trainer's requested
         batch.  Local-estimator requests carry the finished statistics
         (``{"st"}``); distributed requests carry the phase-1 material —
-        the caller supplies ``phase1_total`` (the piggybacked SUM of
-        every rank's phase-1 vector) and ``sum_reduce`` for the tiny
+        the caller supplies either ``phase2_total`` (the five-moment
+        SUM a backend chained onto the outer collective's in-flight
+        window) or ``phase1_total`` (the piggybacked SUM of every
+        rank's phase-1 vector) plus ``sum_reduce`` for the standalone
         phase-2 moment reduction.  Returns the updated requested batch
         (identical on every rank — the shape-agreement contract)."""
         if "st" in request:
             st = request["st"]
+        elif phase2_total is not None:
+            st = self.protocol.finish_total(
+                phase2_total, micro_size=request["micro"])
         else:
             st = self.protocol.finish(
                 phase1_total, request["G_local"], sum_reduce,

@@ -158,6 +158,17 @@ def stats_finish(tot: jnp.ndarray, G_local: jnp.ndarray,
     return rescale_microbatch(st, micro_size) if micro_size else st
 
 
+def stats_finish_total(moments_total: jnp.ndarray, *,
+                       micro_size: int = 0) -> GradStats:
+    """Finish from an already-reduced phase-2 moments total (= sum of
+    every shard's :func:`shard_moments`), for backends that fuse the
+    phase-2 reduction onto another in-flight collective and hand the
+    runtime the summed vector directly.  Bit-identical to
+    :func:`stats_finish` fed the same reduction."""
+    st = stats_from_moments(jnp.asarray(moments_total, jnp.float32))
+    return rescale_microbatch(st, micro_size) if micro_size else st
+
+
 def distributed_stats(G_local: jnp.ndarray, sum_reduce: Callable, *,
                       micro_size: int = 0) -> GradStats:
     """Two-phase exact composition of :class:`GradStats` across shards.

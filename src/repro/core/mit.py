@@ -1,15 +1,25 @@
 """Multi-Instance Training (paper §4.1): trainer pool, CheckMerge
 (Algorithm 1) and DoMerge (Algorithm 2).
+
+``do_merge`` and ``consolidate`` optionally take a ``reduce`` callable
+supplied by a :class:`~repro.cluster.backend.CollectiveBackend` — when
+present, the weighted average is computed by a real cross-group
+collective (every process participates, members contribute their own
+trainer's replica) instead of the in-process ``merge_params``.  The
+callable sees ``reduce(trainers, weights, *, kind, tid)`` and must
+return the merged parameter tree, replicated identically on every rank.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, List, Optional
+from typing import Any, Callable, List, Optional
 
 import jax
 
 from repro.core.comms import CommsMeter, param_bytes
 from repro.core.diloco import merge_params
+
+MergeReduce = Callable[..., Any]
 
 
 @dataclass
@@ -38,19 +48,18 @@ class TrainerPoolState:
 
 def check_merge(requested_batches: List[int], w: int) -> List[int]:
     """Algorithm 1: indices of the w trainers with the smallest requested
-    batch (proxy for least-advanced optimization).  Empty when w == 0,
-    k <= 1, or w > k."""
+    batch (proxy for least-advanced optimization).  Empty when w == 0 or
+    k <= 1; w is clamped to k, so w >= k merges the whole pool."""
     k = len(requested_batches)
     if w == 0 or k <= 1:
         return []
-    if w > k:
-        return []
+    w = min(w, k)
     order = sorted(range(k), key=lambda i: (requested_batches[i], i))
     return order[:w]
 
 
-def do_merge(pool: TrainerPoolState, merge_ids: List[int], step: int
-             ) -> TrainerPoolState:
+def do_merge(pool: TrainerPoolState, merge_ids: List[int], step: int,
+             *, reduce: Optional[MergeReduce] = None) -> TrainerPoolState:
     """Algorithm 2: weighted average of the merge set, keep the
     representative with the largest requested batch, carry its optimizer
     state forward; pool contracts by |S| − 1."""
@@ -58,8 +67,11 @@ def do_merge(pool: TrainerPoolState, merge_ids: List[int], step: int
         return pool
     S = [pool.trainers[i] for i in merge_ids]
     weights = [max(t.requested_batch, 1) for t in S]
-    merged = merge_params([t.params for t in S], weights)
     rep = max(S, key=lambda t: (t.requested_batch, -t.tid))
+    if reduce is not None:
+        merged = reduce(S, weights, kind="merge", tid=rep.tid)
+    else:
+        merged = merge_params([t.params for t in S], weights)
     rep.params = merged
     # representative inherits the *union* of data shards so merged
     # knowledge keeps training on all of it
@@ -74,14 +86,30 @@ def do_merge(pool: TrainerPoolState, merge_ids: List[int], step: int
     return pool
 
 
-def consolidate(pool: TrainerPoolState, step: int):
-    """Final model: batch-size-weighted merge of all surviving trainers."""
-    if pool.k == 1:
+def consolidate(pool: TrainerPoolState, step: int,
+                *, reduce: Optional[MergeReduce] = None):
+    """Final model: batch-size-weighted merge of all surviving trainers.
+
+    With a backend ``reduce``, the collective runs even for a pool of
+    one: on a multi-group backend only the surviving trainer's own
+    group holds its live replica, so the "average" doubles as the
+    broadcast that re-replicates the final model on every rank.  The
+    comms meter still only records a consolidate for k > 1, matching
+    the analytic simulator (a single-trainer consolidate is free).
+    """
+    weights = [max(t.requested_batch, 1) for t in pool.trainers]
+    if reduce is not None:
+        pool.global_params = reduce(pool.trainers, weights,
+                                    kind="consolidate",
+                                    tid=pool.trainers[0].tid)
+    elif pool.k == 1:
         pool.global_params = pool.trainers[0].params
         return pool
-    weights = [max(t.requested_batch, 1) for t in pool.trainers]
-    pool.global_params = merge_params(
-        [t.params for t in pool.trainers], weights)
-    pool.comms.record("consolidate", participants=pool.k,
-                      payload_bytes=param_bytes(pool.global_params), step=step)
+    else:
+        pool.global_params = merge_params(
+            [t.params for t in pool.trainers], weights)
+    if pool.k > 1:
+        pool.comms.record("consolidate", participants=pool.k,
+                          payload_bytes=param_bytes(pool.global_params),
+                          step=step)
     return pool

@@ -10,7 +10,9 @@ import pytest
 from repro.configs.base import AdLoCoConfig
 from repro.core import train_adloco
 from repro.core.comms import (CommDomain, hierarchical_allreduce_time,
-                              ring_allreduce_time)
+                              param_bytes, ring_allreduce_time)
+from repro.core.mit import (TrainerPoolState, TrainerState, check_merge,
+                            consolidate, do_merge)
 from repro.cluster import (ClusterEvent, FabricDomain, FabricSchedule,
                            NetworkModel, NodeProfile, Topology,
                            interleave_pods, make_heterogeneous_profiles,
@@ -801,12 +803,14 @@ def test_elastic_join_leave_keeps_pool_invariants():
     assert "leave" in kinds and "join" in kinds
     # pool size: 3 initial - 1 leave + 1 join
     assert pool.k == 3
-    # stream ownership: every stream owned by exactly one trainer, and
-    # the leaver's shards were re-homed (no data orphaned)
+    # stream ownership: every stream owned by exactly one trainer, no
+    # trainer hoards more than its M shards (the scripted leave
+    # returned the leaver's slice to the spare pool, where the joiner
+    # could draw it back), and nothing was invented out of thin air
     owned = [id(s) for tr in pool.trainers for s in tr.streams]
     assert len(owned) == len(set(owned))
-    original = {id(s) for s in streams[:6]}
-    assert original <= set(owned)
+    assert all(len(tr.streams) == 2 for tr in pool.trainers)
+    assert set(owned) <= {id(s) for s in streams}
     # the joiner trained and is attributable in history
     join_tid = next(e["tid"] for e in rep.applied_events
                     if e["kind"] == "join")
@@ -814,6 +818,47 @@ def test_elastic_join_leave_keeps_pool_invariants():
     assert any(join_tid in d for d in hist.eval_loss_by_trainer)
     # elastic run still converges
     assert hist.eval_loss[-1] < hist.eval_loss[0]
+
+
+def test_preemption_returns_leaver_capacity_for_regrowth():
+    """Regression for the stream-hoarding leave: a scripted (preempted)
+    leave used to union the leaver's data shards onto the survivor and
+    only free its nodes, so a later join found ``free_streams``
+    exhausted (``join_skipped``) while nodes sat idle — a preemption
+    storm permanently shrank the pool.  The leave now returns the full
+    capacity slice, so with *zero* provisioned spares the pool can
+    still re-grow from reclaimed capacity alone."""
+    acfg = dataclasses.replace(BASE, enable_merge=False,
+                               num_outer_steps=10)
+    prob, inits, streams = _elastic_setup(spare=0)
+    scen = [ClusterEvent(time=1e-3, kind="leave"),
+            ClusterEvent(time=5e-3, kind="join")]
+    pool, _, rep = run_cluster(quad_loss, inits, streams, acfg,
+                               policy="elastic", profiles=_profiles(6),
+                               scenario=scen)
+    kinds = [e["kind"] for e in rep.applied_events]
+    assert kinds.count("leave") == 1
+    assert "join" in kinds and "join_skipped" not in kinds
+    assert pool.k == 3
+    assert all(len(tr.streams) == 2 for tr in pool.trainers)
+
+
+def test_autoscale_shrink_consolidates_streams_on_survivor():
+    """The flip side of the reclamation fix: a leave *decided by the
+    autoscale policy* is a consolidation, not an eviction — the
+    survivor keeps the unioned shards (this is what the pinned
+    ``autoscale_ramp`` golden trajectory encodes)."""
+    acfg = dataclasses.replace(BASE, enable_merge=False,
+                               num_outer_steps=10)
+    prob, inits, streams = _elastic_setup(spare=0)
+    ev = ClusterEvent(time=1e-3, kind="leave", autoscaled=True)
+    pool, _, rep = run_cluster(quad_loss, inits, streams, acfg,
+                               policy="elastic", profiles=_profiles(6),
+                               scenario=[ev])
+    assert pool.k == 2
+    # survivor absorbed the leaver's shards; nothing went to spares
+    sizes = sorted(len(tr.streams) for tr in pool.trainers)
+    assert sizes == [2, 4]
 
 
 def test_elastic_leave_requires_survivor():
@@ -887,3 +932,103 @@ def test_async_reduces_time_to_target_under_heterogeneity():
                             if v <= target), None)
     assert t2t["sync"] is not None and t2t["async"] is not None
     assert t2t["async"] < t2t["sync"]
+
+
+# ------------------------------------- MIT merge/consolidate invariants
+
+def _mit_pool(xs, breqs):
+    """Tiny pool fixture: trainer i holds params {"x": xs[i]}, requested
+    batch breqs[i], and two named data shards."""
+    trainers = [TrainerState(tid=i,
+                             params={"x": jnp.asarray(x, jnp.float32)},
+                             outer_opt_state=(), inner_opt_states=[()],
+                             requested_batch=b,
+                             streams=[f"s{i}a", f"s{i}b"])
+                for i, (x, b) in enumerate(zip(xs, breqs))]
+    return TrainerPoolState(trainers=trainers)
+
+
+def test_do_merge_invariants():
+    pool = _mit_pool([[1.0], [3.0], [5.0]], [4, 2, 6])
+    ids = check_merge([t.requested_batch for t in pool.trainers], 2)
+    assert ids == [1, 0]                    # the two smallest batches
+    pool = do_merge(pool, ids, step=7)
+    # pool contracts by |S| - 1
+    assert pool.k == 2
+    rep = pool.trainers[0]
+    # representative = largest requested batch in the merge set
+    assert rep.tid == 0
+    # batch-weighted average of the merge set only
+    np.testing.assert_allclose(np.asarray(rep.params["x"]),
+                               (4 * 1.0 + 2 * 3.0) / 6, rtol=1e-6)
+    # representative inherits the union of the merged shards
+    assert rep.streams == ["s0a", "s0b", "s1a", "s1b"]
+    # bystander untouched
+    assert pool.trainers[1].tid == 2
+    assert pool.trainers[1].streams == ["s2a", "s2b"]
+    # comms meter charged one merge among |S| participants
+    rec = pool.comms.log[-1]
+    assert rec["kind"] == "merge" and rec["participants"] == 2
+    assert rec["step"] == 7 and rec["bytes"] > 0
+    assert pool.comms.events == 1
+
+
+def test_do_merge_whole_pool_via_clamped_w():
+    """check_merge(w > k) clamps to the full pool; do_merge then
+    contracts k -> 1 and averages everyone."""
+    pool = _mit_pool([[1.0], [2.0], [9.0]], [1, 1, 1])
+    ids = check_merge([1, 1, 1], 99)
+    assert ids == [0, 1, 2]
+    pool = do_merge(pool, ids, step=0)
+    assert pool.k == 1
+    np.testing.assert_allclose(np.asarray(pool.trainers[0].params["x"]),
+                               4.0, rtol=1e-6)
+
+
+def test_consolidate_invariants():
+    pool = _mit_pool([[2.0], [6.0]], [1, 3])
+    pool = consolidate(pool, step=9)
+    np.testing.assert_allclose(np.asarray(pool.global_params["x"]),
+                               (1 * 2.0 + 3 * 6.0) / 4, rtol=1e-6)
+    rec = pool.comms.log[-1]
+    assert rec["kind"] == "consolidate" and rec["participants"] == 2
+    assert rec["bytes"] > 0
+    assert param_bytes(pool.global_params) > 0
+    # a single-trainer consolidate is free: no collective, no record
+    solo = _mit_pool([[7.0]], [5])
+    solo = consolidate(solo, step=9)
+    np.testing.assert_allclose(np.asarray(solo.global_params["x"]), 7.0)
+    assert solo.comms.log == []
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                 # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def test_property_do_merge_weighted_average(data):
+        k = data.draw(st.integers(2, 6))
+        xs = data.draw(st.lists(st.floats(-5, 5), min_size=k,
+                                max_size=k))
+        breqs = data.draw(st.lists(st.integers(1, 50), min_size=k,
+                                   max_size=k))
+        w = data.draw(st.integers(2, k))
+        pool = _mit_pool([[x] for x in xs], breqs)
+        ids = check_merge(breqs, w)
+        S = list(ids)
+        expected = (sum(breqs[i] * xs[i] for i in S)
+                    / sum(breqs[i] for i in S))
+        rep_tid = max(S, key=lambda i: (breqs[i], -i))
+        pool = do_merge(pool, ids, step=0)
+        assert pool.k == k - (len(ids) - 1)
+        rep = next(t for t in pool.trainers if t.tid == rep_tid)
+        np.testing.assert_allclose(np.asarray(rep.params["x"]),
+                                   expected, rtol=1e-5, atol=1e-5)
+        # stream multiset conserved across the union
+        owned = sorted(s for t in pool.trainers for s in t.streams)
+        assert owned == sorted(f"s{i}{c}" for i in range(k)
+                               for c in "ab")

@@ -31,7 +31,14 @@ def test_check_merge_selects_w_worst():
 def test_check_merge_empty_cases():
     assert check_merge([5], 1) == []          # k <= 1
     assert check_merge([5, 6], 0) == []       # w == 0
-    assert check_merge([5, 6], 3) == []       # w > k
+
+
+def test_check_merge_clamps_w_to_pool():
+    # Algorithm 1 clamps w to k: both edges merge the whole pool
+    # instead of silently skipping the merge
+    assert check_merge([5, 6], 2) == [0, 1]   # w == k
+    assert check_merge([5, 6], 3) == [0, 1]   # w > k
+    assert check_merge([9, 2, 7], 99) == [1, 2, 0]
 
 
 def test_check_merge_ties_stable():
@@ -43,13 +50,11 @@ def test_check_merge_ties_stable():
        st.integers(1, 16))
 def test_property_check_merge_returns_minima(batches, w):
     ids = check_merge(batches, w)
-    if w > len(batches):
-        assert ids == []
-    else:
-        assert len(ids) == w
-        chosen = sorted(batches[i] for i in ids)
-        rest = sorted(batches[i] for i in range(len(batches)) if i not in ids)
-        assert all(c <= r for c, r in zip(chosen[-1:], rest[:1]))
+    eff = min(w, len(batches))                # w > k clamps to k
+    assert len(ids) == eff
+    chosen = sorted(batches[i] for i in ids)
+    rest = sorted(batches[i] for i in range(len(batches)) if i not in ids)
+    assert all(c <= r for c, r in zip(chosen[-1:], rest[:1]))
 
 
 # ------------------------------------------------------------------
